@@ -1,0 +1,162 @@
+//! End-to-end validation driver (DESIGN.md E10): proves all layers
+//! compose on a real workload.
+//!
+//! Pipeline exercised: Pallas/jnp L1 kernels → L2 step graphs → `make
+//! artifacts` HLO text → Rust PJRT runtime → device engines + copy streams
+//! → the three hybrid schedulers — solving real SPD systems to the paper's
+//! tolerance (1e-5), logging the residual curve, and cross-checking every
+//! result against the sequential reference solver.
+//!
+//! Writes: `e2e_residuals.csv`, `e2e_report.json`, `e2e_trace.json`.
+//! The run is recorded in EXPERIMENTS.md §E10.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_validation
+//! ```
+
+use std::fmt::Write as _;
+
+use hypipe::device::native::GpuCompute;
+use hypipe::device::{DeviceParams, GpuEngine};
+use hypipe::hybrid::{self, HybridConfig};
+use hypipe::metrics::RunReport;
+use hypipe::precond::Jacobi;
+use hypipe::runtime;
+use hypipe::solver::pipecg;
+use hypipe::sparse::{gen, Csr, MatrixStats};
+use hypipe::util::json::{arr, obj, s, Json};
+use hypipe::util::{human_time, max_abs_diff};
+
+fn engine(lib: &std::rc::Rc<hypipe::runtime::ArtifactLibrary>) -> GpuEngine {
+    GpuEngine::new(lib.clone(), DeviceParams::gpu_k20m())
+}
+
+fn validate(name: &str, rep: &RunReport, reference: &hypipe::solver::SolveResult) {
+    assert!(rep.result.converged, "{name}: did not converge");
+    assert!(
+        rep.true_residual < 1e-3,
+        "{name}: true residual {}",
+        rep.true_residual
+    );
+    let dx = max_abs_diff(&rep.result.x, &reference.x);
+    assert!(dx < 1e-3, "{name}: solution differs from reference by {dx}");
+    let di = (rep.result.iterations as i64 - reference.iterations as i64).abs();
+    assert!(di <= 3, "{name}: iteration count off by {di}");
+    println!(
+        "  {name:18} [{}] iters={:4}  ‖u‖={:.2e}  true-res={:.2e}  virt={:>10}  wall={:>10}",
+        rep.backend,
+        rep.result.iterations,
+        rep.result.final_norm,
+        rep.true_residual,
+        human_time(rep.virtual_total),
+        human_time(rep.wall_seconds),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    if !runtime::artifacts_available() {
+        anyhow::bail!("e2e_validation requires the AOT artifacts: run `make artifacts` first");
+    }
+    let lib = std::rc::Rc::new(runtime::open_default()?);
+    println!("artifact library: {} compiled graphs available", lib.names().len());
+
+    // Two real workloads: a 125-pt Poisson system lowered through the
+    // *Pallas* kernels (small bucket) and a larger banded SPD system
+    // lowered through the jnp composition (large bucket) — both paths of
+    // DESIGN.md §7.
+    let systems: Vec<(&str, Csr)> = vec![
+        ("poisson125-12^3 (pallas bucket)", gen::poisson3d_125pt(12)),
+        ("banded-20k (jnp bucket)", gen::banded_spd(20_000, 24.0, 4242)),
+    ];
+
+    let cfg = HybridConfig {
+        keep_trace: true,
+        ..Default::default()
+    };
+    let mut runs: Vec<Json> = Vec::new();
+    let mut residual_csv = String::from("system,method,iteration,residual\n");
+
+    for (name, a) in &systems {
+        let stats = MatrixStats::of(a);
+        println!(
+            "\n== {name}: n={} nnz={} ({:.1}/row) ==",
+            stats.n, stats.nnz, stats.nnz_per_row
+        );
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(a);
+        let reference = pipecg::solve(a, &b, &pc, &cfg.opts);
+        assert!(reference.converged, "reference solver failed on {name}");
+
+        // Hybrid-1 and Hybrid-2 on the PJRT backend (full matrix resident).
+        let mut reports: Vec<RunReport> = Vec::new();
+        {
+            let mut eng = engine(&lib);
+            eng.load_matrix(a, &pc.inv_diag)?;
+            reports.push(hybrid::hybrid1::solve(a, &b, &pc, &mut eng, &cfg)?);
+        }
+        {
+            let mut eng = engine(&lib);
+            eng.load_matrix(a, &pc.inv_diag)?;
+            reports.push(hybrid::hybrid2::solve(a, &b, &pc, &mut eng, &cfg)?);
+        }
+        // Hybrid-3 on the PJRT backend (panel resident).
+        {
+            let plan = hybrid::hybrid3::plan(a, &cfg, None, None);
+            let mut eng = engine(&lib);
+            eng.load_panel(a, plan.split.n_cpu, a.n, &pc.inv_diag)?;
+            println!(
+                "  hybrid3 plan: r_cpu={:.3} N_cpu={} N_gpu={}",
+                plan.perf.r_cpu,
+                plan.split.n_cpu,
+                plan.split.n_gpu()
+            );
+            reports.push(hybrid::hybrid3::solve(a, &b, &pc, &mut eng, &plan, &cfg)?);
+        }
+        // Full-GPU baseline through the same artifacts (uses the in-graph
+        // dots — the pipecg_step graph's third role).
+        {
+            let mut eng = engine(&lib);
+            eng.load_matrix(a, &pc.inv_diag)?;
+            reports.push(baseline_gpu(a, &b, &mut eng, &cfg)?);
+        }
+
+        for rep in &reports {
+            validate(&rep.method, rep, &reference);
+            for (i, r) in rep.result.history.iter().enumerate() {
+                let _ = writeln!(residual_csv, "{name},{},{i},{r:e}", rep.method);
+            }
+            runs.push(rep.to_json());
+        }
+
+        // Trace of the first hybrid for inspection.
+        if let Some(rep) = reports.first() {
+            hypipe::metrics::write_chrome_trace(rep, std::path::Path::new("e2e_trace.json"))?;
+        }
+    }
+
+    std::fs::write("e2e_residuals.csv", &residual_csv)?;
+    std::fs::write(
+        "e2e_report.json",
+        obj(vec![("runs", arr(runs)), ("status", s("ok"))]).to_pretty(),
+    )?;
+    println!("\nwrote e2e_residuals.csv, e2e_report.json, e2e_trace.json");
+    println!("e2e_validation OK — all layers compose");
+    Ok(())
+}
+
+/// PETSc-PIPECG-GPU flavour on the PJRT backend.
+fn baseline_gpu(
+    a: &Csr,
+    b: &[f64],
+    eng: &mut dyn GpuCompute,
+    cfg: &HybridConfig,
+) -> anyhow::Result<RunReport> {
+    Ok(hypipe::baselines::run_gpu(
+        a,
+        b,
+        hypipe::baselines::GpuFlavor::PetscPipecg,
+        eng,
+        &cfg.opts,
+        &cfg.cm,
+    )?)
+}

@@ -1,0 +1,99 @@
+//! Quickstart: generate a 3-D Poisson system, auto-select the best hybrid
+//! method, solve, and print the report.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the PJRT artifact backend when `make artifacts` has been run,
+//! falling back to the native backend otherwise.
+
+use hypipe::device::native::{GpuCompute, NativeAccel};
+use hypipe::device::{CostModel, DeviceParams, GpuEngine};
+use hypipe::hybrid::{self, select::Method, HybridConfig};
+use hypipe::precond::Jacobi;
+use hypipe::runtime;
+use hypipe::sparse::{gen, MatrixStats};
+
+fn main() -> anyhow::Result<()> {
+    // A 12³ grid with the paper's 125-point stencil (Table II workload).
+    let a = gen::poisson3d_125pt(12);
+    let b = a.mul_ones(); // exact solution x = 1/√N (paper §VI setup)
+    let pc = Jacobi::from_matrix(&a);
+    let stats = MatrixStats::of(&a);
+    println!(
+        "system: 125-pt Poisson, n={} nnz={} ({:.1} nnz/row)",
+        stats.n, stats.nnz, stats.nnz_per_row
+    );
+
+    let cm = CostModel::default();
+    let cfg = HybridConfig::default();
+    let method = hybrid::select::select(&cm, &stats, true);
+    println!("auto-selected method: {}", method.name());
+
+    let use_pjrt = runtime::artifacts_available();
+    println!(
+        "accelerator backend: {}",
+        if use_pjrt {
+            "pjrt (AOT artifacts)"
+        } else {
+            "native (run `make artifacts` for the PJRT path)"
+        }
+    );
+
+    let rep = match method {
+        Method::Hybrid3 => {
+            let plan = hybrid::hybrid3::plan(&a, &cfg, None, None);
+            let mut acc: Box<dyn GpuCompute> = if use_pjrt {
+                let lib = std::rc::Rc::new(runtime::open_default()?);
+                let mut eng = GpuEngine::new(lib, DeviceParams::gpu_k20m());
+                eng.load_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag)?;
+                Box::new(eng)
+            } else {
+                Box::new(NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag))
+            };
+            hybrid::hybrid3::solve(&a, &b, &pc, acc.as_mut(), &plan, &cfg)?
+        }
+        m => {
+            let mut acc: Box<dyn GpuCompute> = if use_pjrt {
+                let lib = std::rc::Rc::new(runtime::open_default()?);
+                let mut eng = GpuEngine::new(lib, DeviceParams::gpu_k20m());
+                eng.load_matrix(&a, &pc.inv_diag)?;
+                Box::new(eng)
+            } else {
+                Box::new(NativeAccel::with_matrix(&a, &pc.inv_diag))
+            };
+            match m {
+                Method::Hybrid1 => hybrid::hybrid1::solve(&a, &b, &pc, acc.as_mut(), &cfg)?,
+                _ => hybrid::hybrid2::solve(&a, &b, &pc, acc.as_mut(), &cfg)?,
+            }
+        }
+    };
+
+    println!(
+        "converged: {} in {} iterations (‖u‖ = {:.2e}, true residual = {:.2e})",
+        rep.result.converged, rep.result.iterations, rep.result.final_norm, rep.true_residual
+    );
+    println!(
+        "virtual time (simulated K20m+Xeon node): {} total, {} / iteration",
+        hypipe::util::human_time(rep.virtual_total),
+        hypipe::util::human_time(rep.virtual_per_iter)
+    );
+    println!(
+        "wall time on this box: {}",
+        hypipe::util::human_time(rep.wall_seconds)
+    );
+
+    // Check against the known exact solution.
+    let expect = 1.0 / (a.n as f64).sqrt();
+    let max_err = rep
+        .result
+        .x
+        .iter()
+        .map(|x| (x - expect).abs())
+        .fold(0.0, f64::max);
+    println!("max |x - x*| = {max_err:.2e}");
+    assert!(rep.result.converged && max_err < 1e-3);
+    println!("quickstart OK");
+    Ok(())
+}

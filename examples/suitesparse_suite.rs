@@ -1,0 +1,111 @@
+//! SuiteSparse-profile suite: run all nine methods (3 hybrids + 6 library
+//! baselines) on the Table-I matrix profiles at bench scale with real
+//! numerics, and print Fig-6/Fig-7-style speedup tables from the measured
+//! virtual times.
+//!
+//! ```sh
+//! cargo run --release --example suitesparse_suite [-- <scale>]
+//! ```
+//!
+//! `scale` (default 8) divides the bench-scale matrix sizes further; the
+//! paper-scale figure reproduction lives in `cargo bench --bench
+//! fig6_cpu_comparison` / `fig7_gpu_comparison`.
+
+use hypipe::baselines::{self, CpuFlavor, GpuFlavor};
+use hypipe::device::native::NativeAccel;
+use hypipe::hybrid::{self, HybridConfig};
+use hypipe::metrics::ReportSet;
+use hypipe::precond::Jacobi;
+use hypipe::sparse::gen;
+use hypipe::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let scale: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let suite = gen::table1_suite(scale);
+    let cfg = HybridConfig::default();
+
+    let mut fig6 = Table::new(
+        "Fig. 6 style — speedup wrt PIPECG-OpenMP (bench scale, measured virtual time)",
+        &["matrix", "N", "PIPECG-OMP", "Paralution-CPU", "PETSc-MPI", "H1", "H2", "H3"],
+    );
+    let mut fig7 = Table::new(
+        "Fig. 7 style — speedup wrt PETSc-PIPECG-GPU (bench scale, measured virtual time)",
+        &["matrix", "N", "PETSc-PIPECG-GPU", "PETSc-PCG-GPU", "Paralution-GPU", "H1", "H2", "H3"],
+    );
+
+    for profile in &suite {
+        let a = profile.build();
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        eprintln!("running {} (bench n={}, nnz={})...", profile.name, a.n, a.nnz());
+
+        let mut set = ReportSet::new(profile.name);
+        set.push(baselines::run_cpu(&a, &b, CpuFlavor::PipecgOpenMp, &cfg.opts, &cfg.cm));
+        set.push(baselines::run_cpu(&a, &b, CpuFlavor::ParalutionOpenMp, &cfg.opts, &cfg.cm));
+        set.push(baselines::run_cpu(&a, &b, CpuFlavor::PetscMpi, &cfg.opts, &cfg.cm));
+        for flavor in [GpuFlavor::PetscPipecg, GpuFlavor::PetscPcg, GpuFlavor::ParalutionPcg] {
+            let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
+            set.push(baselines::run_gpu(&a, &b, flavor, &mut acc, &cfg.opts, &cfg.cm)?);
+        }
+        {
+            let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
+            set.push(hybrid::hybrid1::solve(&a, &b, &pc, &mut acc, &cfg)?);
+        }
+        {
+            let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
+            set.push(hybrid::hybrid2::solve(&a, &b, &pc, &mut acc, &cfg)?);
+        }
+        {
+            let plan = hybrid::hybrid3::plan(&a, &cfg, None, None);
+            let mut acc = NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag);
+            set.push(hybrid::hybrid3::solve(&a, &b, &pc, &mut acc, &plan, &cfg)?);
+        }
+        for rep in &set.reports {
+            assert!(rep.result.converged, "{} on {}", rep.method, profile.name);
+        }
+
+        let speedup = |reference: &str, method: &str| -> String {
+            let base = set
+                .reports
+                .iter()
+                .find(|r| r.method == reference)
+                .map(|r| r.virtual_total)
+                .unwrap();
+            let v = set
+                .reports
+                .iter()
+                .find(|r| r.method == method)
+                .map(|r| r.virtual_total)
+                .unwrap();
+            format!("{:.2}x", base / v)
+        };
+        fig6.row(vec![
+            profile.name.into(),
+            a.n.to_string(),
+            speedup("PIPECG-OpenMP", "PIPECG-OpenMP"),
+            speedup("PIPECG-OpenMP", "Paralution-PCG-OpenMP"),
+            speedup("PIPECG-OpenMP", "PETSc-PCG-MPI"),
+            speedup("PIPECG-OpenMP", "Hybrid-PIPECG-1"),
+            speedup("PIPECG-OpenMP", "Hybrid-PIPECG-2"),
+            speedup("PIPECG-OpenMP", "Hybrid-PIPECG-3"),
+        ]);
+        fig7.row(vec![
+            profile.name.into(),
+            a.n.to_string(),
+            speedup("PETSc-PIPECG-GPU", "PETSc-PIPECG-GPU"),
+            speedup("PETSc-PIPECG-GPU", "PETSc-PCG-GPU"),
+            speedup("PETSc-PIPECG-GPU", "Paralution-PCG-GPU"),
+            speedup("PETSc-PIPECG-GPU", "Hybrid-PIPECG-1"),
+            speedup("PETSc-PIPECG-GPU", "Hybrid-PIPECG-2"),
+            speedup("PETSc-PIPECG-GPU", "Hybrid-PIPECG-3"),
+        ]);
+    }
+
+    println!("\n{}", fig6.render());
+    println!("{}", fig7.render());
+    println!("(paper-scale reproduction: `cargo bench`)");
+    Ok(())
+}

@@ -1,0 +1,260 @@
+"""AOT lowering: JAX step graphs -> HLO text artifacts + manifest.json.
+
+Runs once at ``make artifacts``; the Rust runtime
+(``rust/src/runtime/artifacts.rs``) reads the manifest, compiles the HLO
+text through the PJRT CPU client, and executes the graphs on the hot path.
+
+Interchange format is **HLO text**, never a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shape buckets: every (graph, n, k) combination below gets its own artifact,
+named ``<graph>_n<N>_k<K>`` (``_nl<NL>`` for hybrid-3 panels). The rust
+side pads matrices/vectors up to the nearest bucket (runtime/buckets.rs).
+
+Implementation selection: Pallas-composed graphs for n <= PALLAS_MAX_N,
+jnp-composed for larger buckets (identical math; DESIGN.md §7 records why).
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+F64 = jnp.float64
+I32 = jnp.int32
+
+# Shape buckets (powers of two; see DESIGN.md §2 "Shape bucketing").
+N_BUCKETS = [1024, 2048, 4096, 16384, 32768, 65536, 131072, 262144]
+K_BUCKETS = [8, 32, 64, 128]
+# Largest bucket lowered through the Pallas kernels; larger buckets use the
+# jnp composition of the same graphs (~100x faster under the CPU plugin).
+PALLAS_MAX_N = 4096
+# Buckets used by the kernel-fusion ablation (E6).
+ABLATION_N = [4096, 65536]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F64):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def impl_for(n: int) -> str:
+    return "pallas" if n <= PALLAS_MAX_N else "jnp"
+
+
+def _io(entries):
+    return [[name, list(shape), dt] for name, shape, dt in entries]
+
+
+def graph_catalog(n, k, nl=None):
+    """Return {name: (fn, arg_specs, inputs_meta, outputs_meta)} for bucket
+    (n, k) and optionally a hybrid-3 panel of nl local rows."""
+    impl = impl_for(n)
+    vec = lambda: spec((n,))
+    ell_v, ell_c = spec((n, k)), spec((n, k), I32)
+    sc = lambda: spec(())
+    cat = {}
+
+    cat[f"spmv_n{n}_k{k}"] = (
+        lambda ev, ec, x: model.spmv(ev, ec, x, impl=impl),
+        [ell_v, ell_c, vec()],
+        _io([("ell_val", (n, k), "f64"), ("ell_col", (n, k), "i32"), ("x", (n,), "f64")]),
+        _io([("y", (n,), "f64")]),
+        impl,
+    )
+
+    if k == K_BUCKETS[0]:  # dots/vec graphs are k-independent; emit once per n
+        cat[f"dots3_n{n}"] = (
+            lambda r, w, u: model.dots3(r, w, u, impl=impl),
+            [vec(), vec(), vec()],
+            _io([("r", (n,), "f64"), ("w", (n,), "f64"), ("u", (n,), "f64")]),
+            _io([("gamma", (), "f64"), ("delta", (), "f64"), ("nn", (), "f64")]),
+            impl,
+        )
+
+    state_names = ["z", "q", "s", "p", "x", "r", "u", "w"]
+    pipecg_in = (
+        [("ell_val", (n, k), "f64"), ("ell_col", (n, k), "i32"), ("inv_diag", (n,), "f64")]
+        + [(s_, (n,), "f64") for s_ in state_names]
+        + [("m", (n,), "f64"), ("n_vec", (n,), "f64"), ("alpha", (), "f64"), ("beta", (), "f64")]
+    )
+    pipecg_out = (
+        [(s_, (n,), "f64") for s_ in state_names]
+        + [("m", (n,), "f64"), ("n_vec", (n,), "f64"),
+           ("gamma", (), "f64"), ("delta", (), "f64"), ("nn", (), "f64")]
+    )
+    cat[f"pipecg_step_n{n}_k{k}"] = (
+        lambda *a: model.pipecg_step(*a, impl=impl),
+        [ell_v, ell_c, vec()] + [vec() for _ in range(10)] + [sc(), sc()],
+        _io(pipecg_in),
+        _io(pipecg_out),
+        impl,
+    )
+
+    pcg_in = (
+        [("ell_val", (n, k), "f64"), ("ell_col", (n, k), "i32"), ("inv_diag", (n,), "f64")]
+        + [(s_, (n,), "f64") for s_ in ["x", "r", "u", "p"]]
+        + [("gamma", (), "f64"), ("gamma_prev", (), "f64"), ("first", (), "f64")]
+    )
+    pcg_out = [(s_, (n,), "f64") for s_ in ["x", "r", "u", "p"]] + [
+        ("gamma", (), "f64"), ("delta", (), "f64"), ("nn", (), "f64")
+    ]
+    cat[f"pcg_step_n{n}_k{k}"] = (
+        lambda *a: model.pcg_step(*a, impl=impl),
+        [ell_v, ell_c, vec()] + [vec() for _ in range(4)] + [sc(), sc(), sc()],
+        _io(pcg_in),
+        _io(pcg_out),
+        impl,
+    )
+
+    if nl is not None:
+        lvec = lambda: spec((nl,))
+        h3_in = (
+            [("ell_val", (nl, k), "f64"), ("ell_col", (nl, k), "i32"),
+             ("inv_diag", (nl,), "f64"), ("m_full", (n,), "f64"), ("m_loc", (nl,), "f64")]
+            + [(s_, (nl,), "f64") for s_ in state_names]
+            + [("alpha", (), "f64"), ("beta", (), "f64")]
+        )
+        h3_out = [(s_, (nl,), "f64") for s_ in state_names] + [
+            ("m_new", (nl,), "f64"),
+            ("gamma_p", (), "f64"), ("delta_p", (), "f64"), ("nn_p", (), "f64"),
+        ]
+        cat[f"hybrid3_local_step_n{n}_k{k}_nl{nl}"] = (
+            lambda *a: model.hybrid3_local_step(*a, impl=impl),
+            [spec((nl, k)), spec((nl, k), I32), lvec(), vec(), lvec()]
+            + [lvec() for _ in range(8)]
+            + [sc(), sc()],
+            _io(h3_in),
+            _io(h3_out),
+            impl,
+        )
+    return cat
+
+
+def ablation_catalog(n):
+    """Fused vs unfused vector-op graphs for the E6 kernel-fusion ablation.
+
+    The *fused* variant is one artifact (one "launch"); the unfused baseline
+    is the separate axpy/xpay/hadamard artifacts below, which the bench
+    executes as nine individual PJRT calls per iteration — the cuBLAS
+    call-per-op pattern of the paper's Fig. 5.
+    """
+    impl = impl_for(n)
+    vec = lambda: spec((n,))
+    sc = lambda: spec(())
+    vnames = ["n_vec", "m_vec", "inv_diag", "z", "q", "s", "p", "x", "r", "u", "w"]
+    out_names = ["z", "q", "s", "p", "x", "r", "u", "w", "m"]
+    cat = {
+        f"vecops_fused_n{n}": (
+            lambda *a: model.vecops_fused(*a, impl=impl),
+            [vec() for _ in range(11)] + [sc(), sc()],
+            _io([(v, (n,), "f64") for v in vnames]
+                + [("alpha", (), "f64"), ("beta", (), "f64")]),
+            _io([(v, (n,), "f64") for v in out_names]),
+            impl,
+        ),
+        f"axpy_n{n}": (
+            lambda a, x_, y: model.axpy(a, x_, y, impl=impl),
+            [sc(), vec(), vec()],
+            _io([("a", (), "f64"), ("x", (n,), "f64"), ("y", (n,), "f64")]),
+            _io([("out", (n,), "f64")]),
+            impl,
+        ),
+        f"xpay_n{n}": (
+            lambda x_, a, y: model.xpay(x_, a, y, impl=impl),
+            [vec(), sc(), vec()],
+            _io([("x", (n,), "f64"), ("a", (), "f64"), ("y", (n,), "f64")]),
+            _io([("out", (n,), "f64")]),
+            impl,
+        ),
+        f"hadamard_n{n}": (
+            lambda d, x_: model.hadamard(d, x_, impl=impl),
+            [vec(), vec()],
+            _io([("d", (n,), "f64"), ("x", (n,), "f64")]),
+            _io([("out", (n,), "f64")]),
+            impl,
+        ),
+    }
+    return cat
+
+
+def build_worklist(n_buckets, k_buckets):
+    work = {}
+    for n in n_buckets:
+        for k in k_buckets:
+            work.update(graph_catalog(n, k))
+            # hybrid-3 panels: device-local rows at full and half bucket.
+            for nl in {n, max(n // 2, 1024)}:
+                if nl <= n:
+                    work.update(graph_catalog(n, k, nl=nl))
+    for n in ABLATION_N:
+        if n in n_buckets:
+            work.update(ablation_catalog(n))
+    return work
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n-buckets", default=",".join(map(str, N_BUCKETS)),
+                    help="comma-separated n bucket list")
+    ap.add_argument("--k-buckets", default=",".join(map(str, K_BUCKETS)))
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names (quick builds)")
+    args = ap.parse_args()
+
+    n_buckets = [int(v) for v in args.n_buckets.split(",") if v]
+    k_buckets = [int(v) for v in args.k_buckets.split(",") if v]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    work = build_worklist(n_buckets, k_buckets)
+    if args.only:
+        work = {k: v for k, v in work.items() if args.only in k}
+
+    manifest = {"version": 1, "artifacts": {}}
+    t0 = time.time()
+    for i, (name, (fn, specs, inputs, outputs, impl)) in enumerate(sorted(work.items())):
+        t1 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "impl": impl,
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        dt = time.time() - t1
+        print(f"[{i + 1}/{len(work)}] {name} ({impl}, {len(text) / 1024:.0f} KiB, {dt:.1f}s)",
+              file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(work)} artifacts + manifest to {args.out_dir} "
+          f"in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: fused 3-way dot products (Alg. 2 lines 18-20).
+
+gamma = (r, u), delta = (w, u), nn = (u, u) in one pass: r, w, u each move
+HBM→VMEM once instead of twice (u four times) with separate cublasDdot
+calls. The grid produces per-tile partials; the tiny (grid, 3) partial array
+is reduced outside the kernel (the same two-phase shape a TPU/GPU tree
+reduction uses).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _dots3_kernel(r_ref, w_ref, u_ref, o_ref):
+    u = u_ref[...]
+    o_ref[0, 0] = jnp.sum(r_ref[...] * u)
+    o_ref[0, 1] = jnp.sum(w_ref[...] * u)
+    o_ref[0, 2] = jnp.sum(u * u)
+
+
+def dots3(r, w, u, *, block: int = DEFAULT_BLOCK):
+    """Returns (gamma, delta, nn) as 0-d arrays."""
+    n = r.shape[0]
+    bn = min(block, n)
+    if n % bn != 0:
+        bn = n
+    grid = n // bn
+    partials = pl.pallas_call(
+        _dots3_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))] * 3,
+        out_specs=pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, 3), r.dtype),
+        interpret=True,
+    )(r, w, u)
+    sums = jnp.sum(partials, axis=0)
+    return sums[0], sums[1], sums[2]

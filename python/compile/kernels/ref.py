@@ -1,0 +1,95 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package is checked against these references by
+``python/tests``; the Rust integration tests check the PJRT-executed
+artifacts against the *Rust* native kernels, closing the loop
+rust ⇔ HLO ⇔ pallas ⇔ jnp.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# ELL SPMV
+
+
+def ell_spmv_ref(ell_val, ell_col, x):
+    """y = A x for an ELLPACK matrix.
+
+    ell_val: f64[n, k]   values (0.0 in padding slots)
+    ell_col: i32[n, k]   column index per slot (own row in padding slots)
+    x:       f64[n]
+    """
+    return jnp.sum(ell_val * x[ell_col], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Fused VMA + Jacobi PC (paper Alg. 2 lines 10-17 + 21, fused per §V-B)
+
+
+def fused_vma_pc_ref(n_vec, m_vec, inv_diag, z, q, s, p, x, r, u, w, alpha, beta):
+    """The eight merged vector updates plus the fused preconditioner apply.
+
+    Returns (z', q', s', p', x', r', u', w', m') — note `s` uses the
+    *pre-update* w and `p` the pre-update u, exactly as Algorithm 2 orders
+    the lines.
+    """
+    z1 = n_vec + beta * z
+    q1 = m_vec + beta * q
+    s1 = w + beta * s
+    p1 = u + beta * p
+    x1 = x + alpha * p1
+    r1 = r - alpha * s1
+    u1 = u - alpha * q1
+    w1 = w - alpha * z1
+    m1 = inv_diag * w1
+    return z1, q1, s1, p1, x1, r1, u1, w1, m1
+
+
+# ---------------------------------------------------------------------------
+# Fused 3-way dot (Alg. 2 lines 18-20)
+
+
+def dots3_ref(r, w, u):
+    """gamma = (r,u), delta = (w,u), nn = (u,u)."""
+    return jnp.dot(r, u), jnp.dot(w, u), jnp.dot(u, u)
+
+
+# ---------------------------------------------------------------------------
+# Whole-iteration references (compose the above; used to check model.py)
+
+
+def pipecg_step_ref(ell_val, ell_col, inv_diag, state, alpha, beta):
+    """One full PIPECG iteration (Alg. 2 lines 10-22).
+
+    state: dict with z q s p x r u w m n.
+    Returns (new_state, gamma, delta, nn).
+    """
+    z, q, s, p, x, r, u, w, m = fused_vma_pc_ref(
+        state["n"], state["m"], inv_diag,
+        state["z"], state["q"], state["s"], state["p"],
+        state["x"], state["r"], state["u"], state["w"],
+        alpha, beta,
+    )
+    gamma, delta, nn = dots3_ref(r, w, u)
+    n_new = ell_spmv_ref(ell_val, ell_col, m)
+    new_state = dict(z=z, q=q, s=s, p=p, x=x, r=r, u=u, w=w, m=m, n=n_new)
+    return new_state, gamma, delta, nn
+
+
+def pcg_step_ref(ell_val, ell_col, inv_diag, x, r, u, p, gamma, gamma_prev, first):
+    """One naive PCG iteration (Alg. 1 lines 4-17).
+
+    `first` is 1.0 on the first iteration (beta = 0).
+    Returns (x', r', u', p', s, gamma', delta, nn).
+    """
+    beta = jnp.where(first > 0.5, 0.0, gamma / gamma_prev)
+    p1 = u + beta * p
+    s = ell_spmv_ref(ell_val, ell_col, p1)
+    delta = jnp.dot(s, p1)
+    alpha = gamma / delta
+    x1 = x + alpha * p1
+    r1 = r - alpha * s
+    u1 = inv_diag * r1
+    gamma1 = jnp.dot(u1, r1)
+    nn = jnp.dot(u1, u1)
+    return x1, r1, u1, p1, s, gamma1, delta, nn

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: ELLPACK sparse matrix-vector product.
+
+Hardware adaptation (DESIGN.md §1): the paper's CUDA SPMV (cuSPARSE CSR,
+row-per-warp) becomes a row-*tile* Pallas kernel — the grid walks row blocks,
+each step holding a ``(bn, k)`` tile of values/columns in VMEM while the
+source vector stays resident and is gathered per tile. This is the
+BlockSpec expression of the HBM↔VMEM schedule the paper expressed with
+threadblocks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is both the correctness path and what the
+AOT artifacts embed (see DESIGN.md §7 for the perf consequences).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-tile height. 256 rows × k slots of f64 values + i32 columns
+# comfortably fits a TPU core's VMEM for k ≤ 160 (256·160·12 B ≈ 0.5 MiB)
+# while giving the gather enough width to amortize issue overhead.
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _spmv_kernel(col_ref, val_ref, x_ref, o_ref):
+    """One grid step: rows [i*bn, (i+1)*bn) of y = A x.
+
+    col_ref: i32[bn, k] — column indices for this row tile
+    val_ref: f64[bn, k] — values for this row tile
+    x_ref:   f64[n]     — the full source vector (gathered)
+    o_ref:   f64[bn]    — output tile
+    """
+    cols = col_ref[...]
+    vals = val_ref[...]
+    x = x_ref[...]
+    o_ref[...] = jnp.sum(vals * x[cols], axis=1)
+
+
+def ell_spmv(ell_val, ell_col, x, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """y = A x via the Pallas row-tile kernel. Shapes as in ref.ell_spmv_ref."""
+    n, k = ell_val.shape
+    # x may be longer than n: a row *panel* (hybrid-3) gathers from the full
+    # vector while producing only its local rows.
+    nx = x.shape[0]
+    bn = min(block_rows, n)
+    if n % bn != 0:
+        # Bucketed shapes are powers of two ≥ 1024 so this only triggers for
+        # ad-hoc test shapes; fall back to a single tile.
+        bn = n
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((nx,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), ell_val.dtype),
+        interpret=True,
+    )(ell_col, ell_val, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def ell_spmv_jit(ell_val, ell_col, x, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    return ell_spmv(ell_val, ell_col, x, block_rows=block_rows)

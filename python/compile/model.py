@@ -1,0 +1,162 @@
+"""L2: whole-iteration JAX step graphs, composed from the L1 kernels.
+
+These are the computations the Rust coordinator executes through PJRT on
+the GPU-role device. Each graph is a pure function over f64 arrays and is
+AOT-lowered per shape bucket by ``aot.py``; Python never runs at request
+time.
+
+Implementation switch (DESIGN.md §7): ``impl="pallas"`` composes the
+Pallas kernels (the TPU-shaped L1, validated under interpret mode) and is
+used for the small shape buckets; ``impl="jnp"`` composes the identical
+pure-jnp math (``kernels/ref.py``) and is used for large buckets, because
+interpret-mode Pallas emulation is ~100x slower at runtime than the XLA-
+fused jnp lowering. Both lower to HLO through the same contract and pytest
+asserts they agree to the last ulp-ish.
+
+Graph I/O contracts (mirrored by rust/src/runtime/artifacts.rs):
+
+* ``spmv(ell_val, ell_col, x) -> y``
+* ``dots3(r, w, u) -> (gamma, delta, nn)``
+* ``pipecg_step(ell_val, ell_col, inv_diag, z,q,s,p,x,r,u,w,m,n_vec,
+  alpha, beta) -> (z,q,s,p,x,r,u,w,m,n, gamma, delta, nn)``   [Alg. 2 body]
+* ``pcg_step(ell_val, ell_col, inv_diag, x, r, u, p, gamma, gamma_prev,
+  first) -> (x,r,u,p, gamma, delta, nn)``                      [Alg. 1 body]
+* ``hybrid3_local_step(ell_val, ell_col, inv_diag, m_full, m_loc,
+  z,q,s,p,x,r,u,w, alpha, beta) -> (z,q,s,p,x,r,u,w,m_new,
+  gamma_p, delta_p, nn_p)``                    [Hybrid-3 device-local body]
+"""
+
+import jax.numpy as jnp
+
+from .kernels import dots as k_dots
+from .kernels import ref
+from .kernels import spmv as k_spmv
+from .kernels import vma as k_vma
+
+
+def _ops(impl):
+    """Returns (spmv, fused_vma_pc, dots3) for the chosen implementation."""
+    if impl == "pallas":
+        return k_spmv.ell_spmv, k_vma.fused_vma_pc, k_dots.dots3
+    if impl == "jnp":
+        return ref.ell_spmv_ref, ref.fused_vma_pc_ref, ref.dots3_ref
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Standalone kernels (perf modelling, tests, unfused ablation pieces)
+
+
+def spmv(ell_val, ell_col, x, *, impl="jnp"):
+    f, _, _ = _ops(impl)
+    return (f(ell_val, ell_col, x),)
+
+
+def dots3(r, w, u, *, impl="jnp"):
+    _, _, f = _ops(impl)
+    g, d, nn = f(r, w, u)
+    return (g, d, nn)
+
+
+def axpy(a, x, y, *, impl="jnp"):
+    if impl == "pallas":
+        return (k_vma.axpy(a, x, y),)
+    return (y + a * x,)
+
+
+def xpay(x, a, y, *, impl="jnp"):
+    if impl == "pallas":
+        return (k_vma.xpay(x, a, y),)
+    return (x + a * y,)
+
+
+def hadamard(d, x, *, impl="jnp"):
+    if impl == "pallas":
+        return (k_vma.hadamard(d, x),)
+    return (d * x,)
+
+
+def vecops_fused(n_vec, m_vec, inv_diag, z, q, s, p, x, r, u, w, alpha, beta,
+                 *, impl="jnp"):
+    """The fused VMA+PC block alone (E6 ablation: one launch)."""
+    _, f, _ = _ops(impl)
+    return f(n_vec, m_vec, inv_diag, z, q, s, p, x, r, u, w, alpha, beta)
+
+
+# ---------------------------------------------------------------------------
+# Whole iterations
+
+
+def pipecg_step(ell_val, ell_col, inv_diag,
+                z, q, s, p, x, r, u, w, m, n_vec,
+                alpha, beta, *, impl="jnp"):
+    """One PIPECG iteration (Alg. 2 lines 10-22).
+
+    The dots (lines 18-20) are computed *inside* the graph; the hybrid-1/2
+    coordinators ignore those outputs and use host-side dots instead (the
+    whole point of the methods), while the full-GPU baseline consumes them.
+    """
+    f_spmv, f_vma, f_dots = _ops(impl)
+    z, q, s, p, x, r, u, w, m_new = f_vma(
+        n_vec, m, inv_diag, z, q, s, p, x, r, u, w, alpha, beta
+    )
+    gamma, delta, nn = f_dots(r, w, u)
+    n_new = f_spmv(ell_val, ell_col, m_new)
+    return z, q, s, p, x, r, u, w, m_new, n_new, gamma, delta, nn
+
+
+def pcg_step(ell_val, ell_col, inv_diag, x, r, u, p,
+             gamma, gamma_prev, first, *, impl="jnp"):
+    """One naive PCG iteration (Alg. 1 lines 4-17); scalars in-graph."""
+    f_spmv, _, _ = _ops(impl)
+    first = jnp.asarray(first)
+    gamma = jnp.asarray(gamma)
+    # Safe denominator: on the first iteration gamma_prev is 0 by contract;
+    # guard the division so the graph (and eager test calls) never see 0/0.
+    safe_prev = jnp.where(first > 0.5, 1.0, jnp.asarray(gamma_prev))
+    beta = jnp.where(first > 0.5, 0.0, gamma / safe_prev)
+    p1 = u + beta * p
+    s = f_spmv(ell_val, ell_col, p1)
+    delta = jnp.dot(s, p1)
+    alpha = gamma / delta
+    x1 = x + alpha * p1
+    r1 = r - alpha * s
+    u1 = inv_diag * r1
+    gamma1 = jnp.dot(u1, r1)
+    nn = jnp.dot(u1, u1)
+    return x1, r1, u1, p1, gamma1, delta, nn
+
+
+def hybrid3_local_step(ell_val, ell_col, inv_diag, m_full, m_loc,
+                       z, q, s, p, x, r, u, w, alpha, beta, *, impl="jnp"):
+    """Hybrid-PIPECG-3 device-local iteration (paper Fig. 4).
+
+    The device owns a row panel: `ell_*` are the panel's `(n_loc, k)` ELL
+    arrays with *global* column indices, the eight state vectors are the
+    local slices, `m_loc` is the local slice of m, and `m_full` is the
+    assembled full m vector (the coordinator completes the exchange before
+    invoking this graph; the DES charges the copy to the streams).
+
+    Operation order follows the paper exactly: the n-independent updates
+    (q, s, p, x, r, u) and the gamma/norm partials happen "before the copy
+    finishes"; SPMV -> n, then z, w, m and the delta partial after.
+    Numerically this equals Alg. 2 restricted to the panel.
+    """
+    f_spmv, _, _ = _ops(impl)
+    # Pre-copy phase: vector ops that do not need n = A m.
+    q1 = m_loc + beta * q
+    s1 = w + beta * s
+    p1 = u + beta * p
+    x1 = x + alpha * p1
+    r1 = r - alpha * s1
+    u1 = u - alpha * q1
+    gamma_p = jnp.dot(r1, u1)
+    nn_p = jnp.dot(u1, u1)
+    # Post-copy phase: SPMV over the full m (parts 1+2 fused numerically;
+    # the 2-D decomposition split is a timing concern handled by the DES).
+    n_new = f_spmv(ell_val, ell_col, m_full)
+    z1 = n_new + beta * z
+    w1 = w - alpha * z1
+    m_new = inv_diag * w1
+    delta_p = jnp.dot(w1, u1)
+    return z1, q1, s1, p1, x1, r1, u1, w1, m_new, gamma_p, delta_p, nn_p

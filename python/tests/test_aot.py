@@ -1,0 +1,80 @@
+"""AOT path tests: worklist coverage, HLO-text emission, manifest schema.
+
+These guard the L2→runtime contract (rust/src/runtime mirrors the
+manifest): names, bucket coverage, parameter ordering and dtypes.
+"""
+
+import json
+import os
+import tempfile
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+from compile import aot
+
+
+def test_worklist_covers_all_graphs_per_bucket():
+    work = aot.build_worklist([1024, 16384], [8, 32])
+    names = set(work)
+    for n in (1024, 16384):
+        for k in (8, 32):
+            assert f"spmv_n{n}_k{k}" in names
+            assert f"pipecg_step_n{n}_k{k}" in names
+            assert f"pcg_step_n{n}_k{k}" in names
+            assert f"hybrid3_local_step_n{n}_k{k}_nl{n}" in names
+        assert f"dots3_n{n}" in names
+    # half-bucket panels exist where the half is >= 1024
+    assert "hybrid3_local_step_n16384_k8_nl8192" in names
+    assert "hybrid3_local_step_n1024_k8_nl512" not in names
+
+
+def test_impl_selection_boundary():
+    assert aot.impl_for(aot.PALLAS_MAX_N) == "pallas"
+    assert aot.impl_for(aot.PALLAS_MAX_N + 1) == "jnp"
+
+
+def test_buckets_match_rust_runtime():
+    """Keep in sync with rust/src/runtime/buckets.rs."""
+    assert aot.N_BUCKETS == [1024, 2048, 4096, 16384, 32768, 65536, 131072, 262144]
+    assert aot.K_BUCKETS == [8, 32, 64, 128]
+
+
+@pytest.mark.parametrize("name", ["spmv_n1024_k8", "pipecg_step_n1024_k8"])
+def test_lowering_emits_parseable_hlo_text(name):
+    work = aot.build_worklist([1024], [8])
+    fn, specs, inputs, outputs, impl = work[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:80]
+    # one parameter per declared input, in order
+    assert len(specs) == len(inputs)
+    # 64-bit f64 everywhere (the solver's precision contract)
+    assert "f64" in text
+
+
+def test_manifest_roundtrip(tmp_path=None):
+    out = tempfile.mkdtemp()
+    import subprocess
+    import sys
+
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", out,
+         "--n-buckets", "1024", "--k-buckets", "8", "--only", "dots3"],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stderr
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    art = manifest["artifacts"]["dots3_n1024"]
+    assert art["file"] == "dots3_n1024.hlo.txt"
+    assert art["impl"] == "pallas"
+    assert [i[0] for i in art["inputs"]] == ["r", "w", "u"]
+    assert [o[0] for o in art["outputs"]] == ["gamma", "delta", "nn"]
+    assert all(i[2] == "f64" for i in art["inputs"])
+    assert os.path.exists(os.path.join(out, art["file"]))

@@ -1,0 +1,173 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes as required for the kernel contract;
+fixed seeds keep CI deterministic.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dots, ref, spmv, vma
+
+RNG = np.random.default_rng(12345)
+
+
+def make_ell(n, k, dtype=np.float64):
+    """Random ELL arrays with self-pointing zero padding (like rust's Ell)."""
+    val = RNG.standard_normal((n, k)).astype(dtype)
+    col = RNG.integers(0, n, (n, k)).astype(np.int32)
+    # sprinkle padding slots
+    pad = RNG.random((n, k)) < 0.2
+    val[pad] = 0.0
+    col[pad] = np.arange(n)[:, None].repeat(k, 1)[pad]
+    return jnp.array(val), jnp.array(col)
+
+
+def vecs(n, count, dtype=np.float64):
+    return [jnp.array(RNG.standard_normal(n).astype(dtype)) for _ in range(count)]
+
+
+# ---------------------------------------------------------------------------
+# SPMV
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 3, 16, 64, 257, 1024]),
+    k=st.sampled_from([1, 2, 5, 8, 33]),
+)
+def test_spmv_matches_ref(n, k):
+    val, col = make_ell(n, k)
+    x = vecs(n, 1)[0]
+    got = spmv.ell_spmv(val, col, x)
+    want = ref.ell_spmv_ref(val, col, x)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 1e-5), (np.float64, 1e-12)])
+def test_spmv_dtypes(dtype, tol):
+    val, col = make_ell(128, 7, dtype)
+    x = jnp.array(RNG.standard_normal(128).astype(dtype))
+    got = spmv.ell_spmv(val, col, x)
+    want = ref.ell_spmv_ref(val, col, x)
+    assert got.dtype == x.dtype
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_spmv_gridded_path():
+    """n > block_rows exercises the multi-tile grid."""
+    n, k = 2048, 4
+    val, col = make_ell(n, k)
+    x = vecs(n, 1)[0]
+    got = spmv.ell_spmv(val, col, x, block_rows=256)
+    want = ref.ell_spmv_ref(val, col, x)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_spmv_panel_rectangular():
+    """Row panel: fewer rows than gather width (hybrid-3 shape)."""
+    n_loc, n_full, k = 96, 256, 5
+    val = jnp.array(RNG.standard_normal((n_loc, k)))
+    col = jnp.array(RNG.integers(0, n_full, (n_loc, k)).astype(np.int32))
+    x = vecs(n_full, 1)[0]
+    got = spmv.ell_spmv(val, col, x)
+    want = jnp.sum(val * x[col], axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_spmv_identity_padding_rows():
+    """A fully padded (identity-free, zero) row must produce exactly 0."""
+    n, k = 64, 3
+    val, col = make_ell(n, k)
+    val = val.at[10].set(0.0)
+    col = col.at[10].set(10)
+    y = spmv.ell_spmv(val, col, jnp.ones(n))
+    assert float(y[10]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Fused VMA + PC
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([1, 7, 64, 1000, 4096]),
+    alpha=st.floats(-2, 2, allow_nan=False),
+    beta=st.floats(0, 1.5, allow_nan=False),
+)
+def test_fused_vma_pc_matches_ref(n, alpha, beta):
+    args = vecs(n, 11)
+    got = vma.fused_vma_pc(*args, alpha, beta)
+    want = ref.fused_vma_pc_ref(*args, alpha, beta)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-12, atol=1e-12)
+
+
+def test_unfused_equals_fused():
+    n = 512
+    args = vecs(n, 11)
+    a, b = 0.37, 0.81
+    got_f = vma.fused_vma_pc(*args, a, b)
+    got_u = vma.unfused_vma_pc(*args, a, b)
+    for f, u in zip(got_f, got_u):
+        np.testing.assert_allclose(f, u, rtol=1e-12, atol=1e-12)
+
+
+def test_vma_uses_pre_update_w_and_u():
+    """Ordering trap: s must use w_i (not w_{i+1}), p must use u_i."""
+    n = 8
+    zero = jnp.zeros(n)
+    one = jnp.ones(n)
+    # n_vec=0, m_vec=0, d=1, z=q=0, s=p=0, x=0, r=0, u=2, w=3, alpha=1, beta=1
+    out = vma.fused_vma_pc(zero, zero, one, zero, zero, zero, zero, zero,
+                           zero, 2 * one, 3 * one, 1.0, 1.0)
+    z, q, s, p, x, r, u, w, m = out
+    np.testing.assert_allclose(s, 3 * one)  # w pre-update
+    np.testing.assert_allclose(p, 2 * one)  # u pre-update
+    np.testing.assert_allclose(x, 2 * one)  # alpha * p(new)
+    np.testing.assert_allclose(u, 2 * one)  # u - alpha*q = 2
+    np.testing.assert_allclose(w, 3 * one)  # w - alpha*z = 3
+    np.testing.assert_allclose(m, 3 * one)  # d * w(new)
+
+
+def test_individual_kernels():
+    n = 300
+    x, y, d = vecs(n, 3)
+    np.testing.assert_allclose(vma.axpy(0.5, x, y), y + 0.5 * x, rtol=1e-12)
+    np.testing.assert_allclose(vma.xpay(x, 0.5, y), x + 0.5 * y, rtol=1e-12)
+    np.testing.assert_allclose(vma.hadamard(d, x), d * x, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Fused dots
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([1, 5, 63, 64, 4096, 10000]))
+def test_dots3_matches_ref(n):
+    r, w, u = vecs(n, 3)
+    got = dots.dots3(r, w, u)
+    want = ref.dots3_ref(r, w, u)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_), rtol=1e-10, atol=1e-12)
+
+
+def test_dots3_gridded_partials():
+    n = 8192
+    r, w, u = vecs(n, 3)
+    got = dots.dots3(r, w, u, block=1024)
+    want = ref.dots3_ref(r, w, u)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_), rtol=1e-10, atol=1e-12)
+
+
+def test_dots3_norm_nonnegative():
+    r, w, u = vecs(777, 3)
+    _, _, nn = dots.dots3(r, w, u)
+    assert float(nn) >= 0.0

@@ -1,0 +1,81 @@
+//! E6 — §V-B.1 ablation: GPU kernel fusion (paper Fig. 5).
+//!
+//! The paper fuses PIPECG's eight VMAs + the Jacobi PC into one kernel so
+//! each vector crosses HBM once per iteration instead of once per op.
+//! Measured two ways:
+//!
+//! 1. **Virtual** (cost model): `FusedVmaPc` vs `UnfusedVmaPc` +
+//!    `Dots3Fused` vs `Dots3Separate` on the K20m-role device.
+//! 2. **Real PJRT wall time** (requires `make artifacts`): the
+//!    `vecops_fused_nN` artifact (one executable call) vs nine separate
+//!    xpay/axpy/hadamard artifact calls — the cuBLAS call-per-op pattern.
+
+use hypipe::bench;
+use hypipe::device::costmodel::{CostModel, OpKind};
+use hypipe::runtime::{self, artifacts::Arg};
+
+fn main() {
+    bench::header(
+        "Ablation E6 — kernel fusion (paper §V-B.1, Fig. 5)",
+        "fused single-pass VMA+PC kernel vs one launch per BLAS op",
+    );
+
+    // Virtual (paper-scale) comparison.
+    let cm = CostModel::default();
+    println!("virtual time on the K20m role (per iteration):");
+    for n in [16_384usize, 131_072, 1_048_576, 4_147_110] {
+        let fused = cm.on_gpu(OpKind::FusedVmaPc { n }) + cm.on_gpu(OpKind::Dots3Fused { n });
+        let unfused =
+            cm.on_gpu(OpKind::UnfusedVmaPc { n }) + cm.on_gpu(OpKind::Dots3Separate { n });
+        println!(
+            "  n={n:9}  fused {:>12}  unfused {:>12}  speedup {:.2}x",
+            hypipe::util::human_time(fused),
+            hypipe::util::human_time(unfused),
+            unfused / fused
+        );
+    }
+
+    // Real PJRT execution.
+    if !runtime::artifacts_available() {
+        println!("\n(artifacts absent: run `make artifacts` for the real PJRT comparison)");
+        return;
+    }
+    let lib = runtime::open_default().expect("artifact library");
+    println!("\nreal PJRT wall time (CPU plugin, per iteration equivalent):");
+    for n in [4096usize, 65_536] {
+        let v: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+        let vecs: Vec<Vec<f64>> = (0..11).map(|k| v.iter().map(|x| x * (k + 1) as f64).collect()).collect();
+        let fused_name = format!("vecops_fused_n{n}");
+        let samples = bench::samples(10);
+
+        let fused = bench::time(&fused_name, 2, samples, || {
+            let args: Vec<Arg> = vecs
+                .iter()
+                .map(|w| Arg::F64(w))
+                .chain([Arg::Scalar(0.5), Arg::Scalar(0.25)])
+                .collect();
+            lib.call(&fused_name, &args).unwrap();
+        });
+        // Unfused: 8 xpay/axpy + 1 hadamard, separate executables.
+        let xpay = format!("xpay_n{n}");
+        let axpy = format!("axpy_n{n}");
+        let had = format!("hadamard_n{n}");
+        let unfused = bench::time(&format!("unfused 9 calls n={n}"), 2, samples, || {
+            for _ in 0..4 {
+                lib.call(&xpay, &[Arg::F64(&vecs[0]), Arg::Scalar(0.25), Arg::F64(&vecs[1])])
+                    .unwrap();
+            }
+            for _ in 0..4 {
+                lib.call(&axpy, &[Arg::Scalar(-0.5), Arg::F64(&vecs[2]), Arg::F64(&vecs[3])])
+                    .unwrap();
+            }
+            lib.call(&had, &[Arg::F64(&vecs[4]), Arg::F64(&vecs[5])]).unwrap();
+        });
+        println!("  {}", fused.report());
+        println!("  {}", unfused.report());
+        println!(
+            "  n={n}: fusion speedup {:.2}x (dispatch + memory-pass savings)",
+            unfused.mean / fused.mean
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! E7 — §V-B.2 ablation: merged CPU vector operations.
+//!
+//! PIPECG's eight host-side VMAs merged into one loop (each vector loaded
+//! once from DRAM) vs one loop per operation. Real wall time on this box's
+//! native kernels plus the cost-model pricing on the Xeon role.
+
+use hypipe::bench;
+use hypipe::blas::{self, PipecgVectors};
+use hypipe::device::costmodel::{CostModel, DeviceParams, OpKind};
+use hypipe::util::prng::Rng;
+
+fn main() {
+    bench::header(
+        "Ablation E7 — merged CPU VMAs (paper §V-B.2)",
+        "single fused loop (10 vector loads) vs 8 separate loops (27 loads)",
+    );
+    let cm = CostModel::default();
+    println!("virtual time on the 16-core Xeon role:");
+    for n in [16_384usize, 262_144, 4_147_110] {
+        let fused = CostModel::exec_time(&DeviceParams::cpu_xeon16(), OpKind::FusedVmaPc { n });
+        let unfused = CostModel::exec_time(&DeviceParams::cpu_xeon16(), OpKind::UnfusedVmaPc { n });
+        println!(
+            "  n={n:9}  merged {:>12}  separate {:>12}  speedup {:.2}x",
+            hypipe::util::human_time(fused),
+            hypipe::util::human_time(unfused),
+            unfused / fused
+        );
+    }
+    let _ = cm;
+
+    println!("\nreal wall time (native kernels on this box):");
+    let mut rng = Rng::new(7);
+    for n in [65_536usize, 1_048_576] {
+        let mk = |rng: &mut Rng| -> Vec<f64> { (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect() };
+        let nv = mk(&mut rng);
+        let mv = mk(&mut rng);
+        let mut state: Vec<Vec<f64>> = (0..8).map(|_| mk(&mut rng)).collect();
+        let samples = bench::samples(20);
+        let fused = bench::time(&format!("merged n={n}"), 3, samples, || {
+            let [z, q, s, p, x, r, u, w] = &mut state[..] else { unreachable!() };
+            blas::fused_pipecg_update(
+                &nv,
+                &mv,
+                0.5,
+                0.25,
+                &mut PipecgVectors { z, q, s, p, x, r, u, w },
+            );
+        });
+        let unfused = bench::time(&format!("separate n={n}"), 3, samples, || {
+            let [z, q, s, p, x, r, u, w] = &mut state[..] else { unreachable!() };
+            blas::unfused_pipecg_update(
+                &nv,
+                &mv,
+                0.5,
+                0.25,
+                &mut PipecgVectors { z, q, s, p, x, r, u, w },
+            );
+        });
+        println!("  {}", fused.report());
+        println!("  {}", unfused.report());
+        println!("  n={n}: merging speedup {:.2}x", unfused.mean / fused.mean);
+    }
+}

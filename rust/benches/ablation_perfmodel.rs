@@ -1,0 +1,84 @@
+//! E8 — §IV-C1 ablation: decomposition quality.
+//!
+//! Sweeps the CPU nnz share around the performance model's choice and
+//! measures per-iteration makespan + device idle imbalance for Hybrid-3.
+//! The model-chosen split should sit at (or next to) the sweep minimum —
+//! the paper's argument that speed-proportional decomposition removes
+//! device idling.
+
+use hypipe::bench;
+use hypipe::decomp;
+use hypipe::device::native::NativeAccel;
+use hypipe::device::Resource;
+use hypipe::hybrid::{self, HybridConfig};
+use hypipe::precond::Jacobi;
+use hypipe::sparse::gen;
+use hypipe::util::table::Table;
+
+fn main() {
+    bench::header(
+        "Ablation E8 — performance-model split quality (paper §IV-C1)",
+        "per-iteration virtual time vs CPU nnz share; * marks the model's choice",
+    );
+    let a = gen::banded_spd(40_000, 40.0, 11);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let mut cfg = HybridConfig::default();
+    cfg.opts.tol = 1e-30; // fixed-iteration measurement
+    cfg.opts.max_iters = bench::bench_iters(30);
+    cfg.opts.record_history = false;
+
+    let model_plan = hybrid::hybrid3::plan(&a, &cfg, None, None);
+    let model_frac = model_plan.perf.r_cpu;
+
+    let mut table = Table::new(
+        &format!("Hybrid-3 on banded n={} nnz={} (model r_cpu = {:.3})", a.n, a.nnz(), model_frac),
+        &["cpu share", "per-iter", "cpu busy %", "gpu busy %", "imbalance"],
+    );
+    let mut best = (f64::INFINITY, 0.0);
+    let mut model_time = f64::NAN;
+    let mut fracs: Vec<f64> = vec![0.02, 0.05, 0.1, 0.15, 0.25, 0.35, 0.5];
+    fracs.push(model_frac);
+    fracs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    for frac in fracs {
+        let split = decomp::split_rows_by_nnz(&a, frac);
+        if split.n_cpu == 0 {
+            continue;
+        }
+        let plan = hybrid::hybrid3::Hybrid3Plan {
+            perf: model_plan.perf.clone(),
+            twod: decomp::decompose_2d(&a, &split),
+            split,
+            setup_time: 0.0,
+        };
+        let mut acc = NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag);
+        let rep = hybrid::hybrid3::solve(&a, &b, &pc, &mut acc, &plan, &cfg).unwrap();
+        let cpu_busy = rep.busy.iter().find(|(r, _)| *r == Resource::CpuExec).unwrap().1;
+        let gpu_busy = rep.busy.iter().find(|(r, _)| *r == Resource::GpuExec).unwrap().1;
+        let imbalance = (cpu_busy - gpu_busy).abs() / cpu_busy.max(gpu_busy);
+        if rep.virtual_per_iter < best.0 {
+            best = (rep.virtual_per_iter, frac);
+        }
+        if (frac - model_frac).abs() < 1e-9 {
+            model_time = rep.virtual_per_iter;
+        }
+        let marker = if (frac - model_frac).abs() < 1e-9 { " *" } else { "" };
+        table.row(vec![
+            format!("{:.3}{marker}", frac),
+            hypipe::util::human_time(rep.virtual_per_iter),
+            format!("{:.1}%", 100.0 * cpu_busy / rep.virtual_total),
+            format!("{:.1}%", 100.0 * gpu_busy / rep.virtual_total),
+            format!("{:.2}", imbalance),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "sweep minimum at cpu share {:.3}; model chose {:.3}, {:.1}% above the sweep optimum.\n\
+         (The SPMV-proportional split of §IV-C1 balances SPMV only; the host-concurrency\n\
+         penalty shifts the true optimum slightly toward the GPU — a refinement the paper\n\
+         lists as future work via better performance modelling.)",
+        best.1,
+        model_frac,
+        100.0 * (model_time / best.0 - 1.0)
+    );
+}

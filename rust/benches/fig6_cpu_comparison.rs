@@ -1,0 +1,98 @@
+//! E2 — Figure 6: hybrid methods vs CPU library implementations.
+//!
+//! For every Table-I matrix: speedup of {Paralution-PCG-OpenMP,
+//! PETSc-PCG-MPI, Hybrid-1/2/3} relative to PIPECG-OpenMP.
+//!
+//! Protocol (DESIGN.md §1 "figures"): real numerics run at bench scale
+//! (all nine methods, convergence cross-checked); per-iteration time is
+//! priced by the calibrated cost model at the **paper's** N/nnz and
+//! multiplied by the iteration count transferred from the bench-scale
+//! measurement; Hybrid-3 totals include its modelling + decomposition
+//! setup, as in the paper.
+//!
+//! Paper's reported shape: PIPECG-OpenMP slowest everywhere; PETSc-MPI <
+//! Paralution-OpenMP; hybrids best everywhere, with Hybrid-1 winning the
+//! small band, Hybrid-2 the mid band, Hybrid-3 the large band; up to 8x /
+//! avg 3x over the CPU libraries.
+
+use hypipe::baselines::{self, CpuFlavor};
+use hypipe::bench::{self, figures};
+use hypipe::device::native::NativeAccel;
+use hypipe::hybrid::{self, HybridConfig};
+use hypipe::precond::Jacobi;
+use hypipe::sparse::gen;
+use hypipe::util::table::Table;
+
+fn main() {
+    bench::header(
+        "Fig. 6 — comparison of hybrid methods with CPU versions",
+        "speedup wrt PIPECG-OpenMP at paper scale; iteration counts measured at bench scale",
+    );
+    let suite = gen::table1_suite(bench::samples(8));
+    let cfg = HybridConfig::default();
+    let mut table = Table::new(
+        "speedup wrt PIPECG-OpenMP (higher is better)",
+        &["matrix", "paper N", "iters", "Paralution-CPU", "PETSc-MPI", "Hybrid-1", "Hybrid-2", "Hybrid-3", "best"],
+    );
+    let mut hybrid_speedups: Vec<f64> = Vec::new();
+
+    for p in &suite {
+        // --- bench-scale real run: convergence + iteration count.
+        let a = p.build();
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let base = baselines::run_cpu(&a, &b, CpuFlavor::PipecgOpenMp, &cfg.opts, &cfg.cm);
+        assert!(base.result.converged, "{}: baseline diverged", p.name);
+        // Hybrids must also solve the real system (cross-check).
+        let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
+        let h1 = hybrid::hybrid1::solve(&a, &b, &pc, &mut acc, &cfg).unwrap();
+        assert!(h1.result.converged);
+        // Convergence is verified at bench scale; the paper-scale totals use
+        // the profile's documented iteration estimate (Profile::paper_iters).
+        let iters = p.paper_iters.max(figures::scale_iterations(
+            base.result.iterations,
+            a.n,
+            p.paper_n,
+        ));
+
+        // --- paper-scale simulation of all methods.
+        let sims = figures::simulate_all(&cfg.cm, p.paper_n, p.paper_nnz);
+        let total = |name: &str| {
+            sims.iter()
+                .find(|s| s.name == name)
+                .map(|s| s.total(iters))
+                .unwrap()
+        };
+        let reference = total("PIPECG-OpenMP");
+        let sp = |name: &str| reference / total(name);
+        let hybrids = [
+            ("Hybrid-PIPECG-1", sp("Hybrid-PIPECG-1")),
+            ("Hybrid-PIPECG-2", sp("Hybrid-PIPECG-2")),
+            ("Hybrid-PIPECG-3", sp("Hybrid-PIPECG-3")),
+        ];
+        let best = hybrids
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        hybrid_speedups.push(best.1);
+        table.row(vec![
+            p.name.into(),
+            p.paper_n.to_string(),
+            iters.to_string(),
+            format!("{:.2}x", sp("Paralution-PCG-OpenMP")),
+            format!("{:.2}x", sp("PETSc-PCG-MPI")),
+            format!("{:.2}x", hybrids[0].1),
+            format!("{:.2}x", hybrids[1].1),
+            format!("{:.2}x", hybrids[2].1),
+            best.0.trim_start_matches("Hybrid-PIPECG-").into(),
+        ]);
+    }
+    println!("{}", table.render());
+    let avg = hybrid_speedups.iter().sum::<f64>() / hybrid_speedups.len() as f64;
+    let max = hybrid_speedups.iter().copied().fold(0.0, f64::max);
+    println!(
+        "best-hybrid speedup over PIPECG-OpenMP: avg {avg:.2}x, max {max:.2}x \
+         (paper: ~3x avg, up to 8x over CPU libraries)"
+    );
+    println!("paper winners: bcsstk15,gyro -> H1 | boneS01,hood,offshore -> H2 | Serena,Queen -> H3");
+}

@@ -1,0 +1,98 @@
+//! E3 — Figure 7: hybrid methods vs GPU library implementations.
+//!
+//! For every Table-I matrix: speedup of {PETSc-PCG-GPU, Paralution-PCG-GPU,
+//! Hybrid-1/2/3} relative to PETSc-PIPECG-GPU. Same protocol as fig6
+//! (bench-scale real runs, paper-scale pricing).
+//!
+//! Paper's reported shape: PETSc-PIPECG-GPU slowest; PETSc-PCG-GPU <
+//! Paralution-PCG-GPU; hybrids best for most matrices, but for offshore /
+//! Serena / Queen_4147 the GPU libraries beat Hybrid-1/2 (3N / N copies
+//! hurt at large N) and only Hybrid-3 wins; up to 5x / avg 1.45x.
+
+use hypipe::baselines::{self, GpuFlavor};
+use hypipe::bench::{self, figures};
+use hypipe::device::native::NativeAccel;
+use hypipe::hybrid::HybridConfig;
+use hypipe::precond::Jacobi;
+use hypipe::sparse::gen;
+use hypipe::util::table::Table;
+
+fn main() {
+    bench::header(
+        "Fig. 7 — comparison of hybrid methods with GPU versions",
+        "speedup wrt PETSc-PIPECG-GPU at paper scale; iteration counts measured at bench scale",
+    );
+    let suite = gen::table1_suite(bench::samples(8));
+    let cfg = HybridConfig::default();
+    let mut table = Table::new(
+        "speedup wrt PETSc-PIPECG-GPU (higher is better)",
+        &["matrix", "paper N", "iters", "PETSc-PCG-GPU", "Paralution-GPU", "Hybrid-1", "Hybrid-2", "Hybrid-3", "best hybrid"],
+    );
+    let mut best_speedups = Vec::new();
+
+    for p in &suite {
+        let a = p.build();
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        // bench-scale real GPU-baseline run (numerics through the backend).
+        let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
+        let base =
+            baselines::run_gpu(&a, &b, GpuFlavor::PetscPipecg, &mut acc, &cfg.opts, &cfg.cm)
+                .unwrap();
+        assert!(base.result.converged, "{}: baseline diverged", p.name);
+        // Convergence is verified at bench scale; the paper-scale totals use
+        // the profile's documented iteration estimate (Profile::paper_iters).
+        let iters = p.paper_iters.max(figures::scale_iterations(
+            base.result.iterations,
+            a.n,
+            p.paper_n,
+        ));
+
+        let sims = figures::simulate_all(&cfg.cm, p.paper_n, p.paper_nnz);
+        let total = |name: &str| {
+            sims.iter()
+                .find(|s| s.name == name)
+                .map(|s| s.total(iters))
+                .unwrap()
+        };
+        let reference = total("PETSc-PIPECG-GPU");
+        let sp = |name: &str| reference / total(name);
+        let hybrids = [sp("Hybrid-PIPECG-1"), sp("Hybrid-PIPECG-2"), sp("Hybrid-PIPECG-3")];
+        let best = hybrids.iter().copied().fold(0.0f64, f64::max);
+        best_speedups.push(best);
+        table.row(vec![
+            p.name.into(),
+            p.paper_n.to_string(),
+            iters.to_string(),
+            format!("{:.2}x", sp("PETSc-PCG-GPU")),
+            format!("{:.2}x", sp("Paralution-PCG-GPU")),
+            format!("{:.2}x", hybrids[0]),
+            format!("{:.2}x", hybrids[1]),
+            format!("{:.2}x", hybrids[2]),
+            format!("{:.2}x", best),
+        ]);
+    }
+    println!("{}", table.render());
+    let avg = best_speedups.iter().sum::<f64>() / best_speedups.len() as f64;
+    // The paper's avg-1.45x is vs the *better* GPU library, i.e. hybrid vs
+    // Paralution-PCG-GPU; report that too.
+    let cfg2 = HybridConfig::default();
+    let mut vs_paralution = Vec::new();
+    for p in &gen::table1_suite(bench::samples(8)) {
+        let sims = figures::simulate_all(&cfg2.cm, p.paper_n, p.paper_nnz);
+        let iters = 1000; // ratio is iteration-count independent (no setup in either side at large iters)
+        let para = sims.iter().find(|s| s.name == "Paralution-PCG-GPU").unwrap().total(iters);
+        let best = sims
+            .iter()
+            .filter(|s| s.name.starts_with("Hybrid"))
+            .map(|s| s.total(iters))
+            .fold(f64::INFINITY, f64::min);
+        vs_paralution.push(para / best);
+    }
+    let avg_vs_para = vs_paralution.iter().sum::<f64>() / vs_paralution.len() as f64;
+    let max_vs_para = vs_paralution.iter().copied().fold(0.0, f64::max);
+    println!(
+        "best-hybrid vs PETSc-PIPECG-GPU: avg {avg:.2}x | vs Paralution-PCG-GPU: avg {avg_vs_para:.2}x, max {max_vs_para:.2}x \
+         (paper: avg 1.45x, up to 5x over GPU libraries)"
+    );
+}

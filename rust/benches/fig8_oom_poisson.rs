@@ -1,0 +1,82 @@
+//! E5 — Figure 8: Poisson systems that do not fit in GPU memory.
+//!
+//! Paper setup: Table-II matrices exceed the K20m's 5 GB, so every method
+//! needing the full matrix device-resident is infeasible; Hybrid-PIPECG-3
+//! runs (perf model restricted to the N_pf rows that fit) and is compared
+//! against the CPU-only methods, with ~2–2.5x speedup over them.
+//!
+//! Here: bench-scale Poisson grids + a proportionally scaled simulated
+//! device capacity preserve the "does not fit" predicate exactly; real
+//! numerics run at bench scale; the speedup table is priced at paper scale
+//! like fig6/fig7.
+
+use hypipe::baselines::{self, CpuFlavor};
+use hypipe::bench::{self, figures};
+use hypipe::device::native::NativeAccel;
+use hypipe::device::GpuEngine;
+use hypipe::hybrid::{self, HybridConfig};
+use hypipe::perfmodel;
+use hypipe::precond::Jacobi;
+use hypipe::sparse::gen;
+use hypipe::util::table::Table;
+
+fn main() {
+    bench::header(
+        "Fig. 8 — Hybrid-PIPECG-3 vs CPU versions for out-of-memory Poisson problems",
+        "speedup wrt PIPECG-OpenMP; GPU-resident methods are infeasible by capacity",
+    );
+    let suite = gen::table2_suite(12);
+    let cfg = HybridConfig::default();
+    // Simulated capacity scaled so the bench matrices do not fit, exactly
+    // as the paper's 4.5M+ systems exceed 5 GB.
+    let capacity: u64 = 2 * 1024 * 1024;
+    let mut table = Table::new(
+        "speedup wrt PIPECG-OpenMP (paper expects ~2-2.5x for Hybrid-3)",
+        &["matrix", "paper N", "fits?", "N_pf", "iters", "Paralution-CPU", "PETSc-MPI", "Hybrid-3"],
+    );
+
+    for p in &suite {
+        let a = p.build();
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let need = GpuEngine::required_bytes_full(&a).unwrap_or(u64::MAX);
+        let fits = need <= capacity;
+        assert!(!fits, "{}: bench matrix must exceed the scaled capacity", p.name);
+
+        // Real bench-scale Hybrid-3 run with the N_pf-restricted perf model.
+        let n_pf = perfmodel::rows_fitting(&a, capacity);
+        let plan = hybrid::hybrid3::plan_capped(&a, &cfg, Some(n_pf), Some(capacity), None);
+        let mut acc = NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag);
+        let h3 = hybrid::hybrid3::solve(&a, &b, &pc, &mut acc, &plan, &cfg).unwrap();
+        assert!(h3.result.converged, "{}: hybrid3 diverged", p.name);
+        let base = baselines::run_cpu(&a, &b, CpuFlavor::PipecgOpenMp, &cfg.opts, &cfg.cm);
+        assert!(base.result.converged);
+        // Convergence is verified at bench scale; the paper-scale totals use
+        // the profile's documented iteration estimate (Profile::paper_iters).
+        let iters = p.paper_iters.max(figures::scale_iterations(
+            base.result.iterations,
+            a.n,
+            p.paper_n,
+        ));
+
+        // Paper-scale pricing with the paper's real 5 GB device: Hybrid-3's
+        // GPU share is capped so its panel fits — the reason its Fig-8
+        // speedup is ~2-2.5x rather than the in-memory ~4x.
+        let paper_capacity = 5u64 * 1024 * 1024 * 1024;
+        let sims = figures::simulate_all_capped(&cfg.cm, p.paper_n, p.paper_nnz, Some(paper_capacity));
+        let total = |name: &str| sims.iter().find(|s| s.name == name).unwrap().total(iters);
+        let reference = total("PIPECG-OpenMP");
+        table.row(vec![
+            p.name.into(),
+            p.paper_n.to_string(),
+            "no".into(),
+            n_pf.to_string(),
+            iters.to_string(),
+            format!("{:.2}x", reference / total("Paralution-PCG-OpenMP")),
+            format!("{:.2}x", reference / total("PETSc-PCG-MPI")),
+            format!("{:.2}x", reference / total("Hybrid-PIPECG-3")),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("paper Fig. 8: Hybrid-3 gives 2.25x (4.5M), 2.45x (5M), 2.5x (6M) over the CPU methods");
+}

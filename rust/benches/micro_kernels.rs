@@ -1,0 +1,85 @@
+//! Micro-benchmarks of the L3 hot-path kernels on this box: BLAS-1 ops,
+//! SPMV across formats, and PJRT dispatch overhead. These are the inputs
+//! to the §Perf iteration log in EXPERIMENTS.md.
+
+use hypipe::bench;
+use hypipe::blas;
+use hypipe::runtime::{self, artifacts::Arg};
+use hypipe::sparse::{gen, Ell};
+use hypipe::util::prng::Rng;
+
+fn main() {
+    bench::header(
+        "Micro — host kernels + PJRT dispatch",
+        "wall time on this box (single core)",
+    );
+    let samples = bench::samples(20);
+    let n = 1 << 20;
+    let mut rng = Rng::new(3);
+    let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let mut z = y.clone();
+
+    let s = bench::time("dot 1M", 3, samples, || {
+        std::hint::black_box(blas::dot(&x, &y));
+    });
+    println!("  {}  ({:.2} GB/s)", s.report(), 16.0 * n as f64 / s.mean / 1e9);
+    let s = bench::time("axpy 1M", 3, samples, || {
+        blas::axpy(0.5, &x, &mut z);
+    });
+    println!("  {}  ({:.2} GB/s)", s.report(), 24.0 * n as f64 / s.mean / 1e9);
+    let s = bench::time("fused_dots3 1M", 3, samples, || {
+        std::hint::black_box(blas::fused_dots3(&x, &y, &z));
+    });
+    println!("  {}  ({:.2} GB/s)", s.report(), 24.0 * n as f64 / s.mean / 1e9);
+
+    // SPMV formats.
+    let a = gen::poisson3d_125pt(20); // 8000 rows, ~1M nnz
+    let ell = Ell::from_csr(&a);
+    let xs: Vec<f64> = (0..a.n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let mut ys = vec![0.0; a.n];
+    let traffic = (a.nnz() * 20 + a.n * 16) as f64;
+    let s = bench::time("spmv CSR poisson125-20^3", 3, samples, || {
+        a.spmv_into(&xs, &mut ys);
+    });
+    println!("  {}  ({:.2} GB/s effective)", s.report(), traffic / s.mean / 1e9);
+    let s = bench::time("spmv ELL poisson125-20^3", 3, samples, || {
+        ell.spmv_into(&xs, &mut ys);
+    });
+    println!("  {}  ({:.2} GB/s effective)", s.report(), traffic / s.mean / 1e9);
+
+    // PJRT dispatch.
+    if runtime::artifacts_available() {
+        let lib = runtime::open_default().unwrap();
+        let v1024 = vec![1.0f64; 1024];
+        // warm compile
+        lib.call(
+            "dots3_n1024",
+            &[Arg::F64(&v1024), Arg::F64(&v1024), Arg::F64(&v1024)],
+        )
+        .unwrap();
+        let s = bench::time("pjrt dots3_n1024 (dispatch-bound)", 3, samples, || {
+            lib.call(
+                "dots3_n1024",
+                &[Arg::F64(&v1024), Arg::F64(&v1024), Arg::F64(&v1024)],
+            )
+            .unwrap();
+        });
+        println!("  {}", s.report());
+        let big = vec![0.5f64; 65_536];
+        let col = vec![0i32; 65_536 * 32];
+        let val = vec![0.1f64; 65_536 * 32];
+        let exe_inputs = [
+            Arg::F64(&val),
+            Arg::I32(&col),
+            Arg::F64(&big),
+        ];
+        lib.call("spmv_n65536_k32", &exe_inputs).unwrap();
+        let s = bench::time("pjrt spmv_n65536_k32 (incl. uploads)", 2, samples.min(10), || {
+            lib.call("spmv_n65536_k32", &exe_inputs).unwrap();
+        });
+        println!("  {}", s.report());
+    } else {
+        println!("  (artifacts absent: skipping PJRT dispatch benches)");
+    }
+}

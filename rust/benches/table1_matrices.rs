@@ -1,0 +1,45 @@
+//! E1 — Table I: the SuiteSparse matrix suite.
+//!
+//! Regenerates the paper's Table I (matrix name, N, nnz, nnz/N) from the
+//! synthetic profile generators, printing both the paper-scale statistics
+//! the simulations use and the bench-scale matrices real numerics run on,
+//! plus generator wall times.
+
+use hypipe::bench;
+use hypipe::sparse::{gen, MatrixStats};
+use hypipe::util::table::Table;
+
+fn main() {
+    bench::header(
+        "Table I — matrices from the SuiteSparse collection (synthetic profiles)",
+        "paper columns: N, nnz, nnz/N | bench columns: generated size actually solved",
+    );
+    let suite = gen::table1_suite(1);
+    let mut t = Table::new(
+        "",
+        &["matrix", "paper N", "paper nnz", "paper nnz/N", "bench N", "bench nnz", "bench nnz/N", "gen time"],
+    );
+    for p in &suite {
+        let stats_holder: std::cell::RefCell<Option<MatrixStats>> = std::cell::RefCell::new(None);
+        let s = bench::time(p.name, 0, 1, || {
+            let a = p.build();
+            a.validate().unwrap();
+            assert!(a.is_symmetric(1e-12));
+            assert!(a.is_diagonally_dominant());
+            *stats_holder.borrow_mut() = Some(MatrixStats::of(&a));
+        });
+        let stats = stats_holder.borrow().clone().unwrap();
+        t.row(vec![
+            p.name.into(),
+            p.paper_n.to_string(),
+            p.paper_nnz.to_string(),
+            format!("{:.2}", p.paper_nnz_per_row()),
+            stats.n.to_string(),
+            stats.nnz.to_string(),
+            format!("{:.2}", stats.nnz_per_row),
+            hypipe::util::human_time(s.mean),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("paper Table I nnz/N: 29.84 58.81 52.78 48.82 16.33 46.38 79.45");
+}

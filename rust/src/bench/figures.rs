@@ -1,0 +1,211 @@
+//! Shared machinery for the figure-reproduction benches.
+//!
+//! The paper's figures are measured on a K20m + 16-core Xeon at matrix
+//! sizes up to N = 6.3M. This box executes *real numerics* at bench scale
+//! (scaled-down synthetic matrices, see `gen::table1_suite`) and prices
+//! *time* with the calibrated cost model at **paper scale** — the same
+//! per-operation formulas the DES charges during real runs, evaluated at
+//! the paper's N and nnz. Who wins, by what factor, and where the
+//! crossovers fall are then properties of the model constants, not of this
+//! box's wall clock. Each bench prints both the paper-scale simulation and
+//! the bench-scale real measurement.
+
+use crate::device::costmodel::{CostModel, DeviceParams, OpKind};
+use crate::hybrid::select;
+
+/// Per-iteration virtual time + one-time setup for one method at a given
+/// (n, nnz) scale.
+#[derive(Debug, Clone)]
+pub struct MethodSim {
+    pub name: &'static str,
+    pub per_iter: f64,
+    pub setup: f64,
+    /// Whether the method requires the full matrix device-resident.
+    pub needs_full_gpu: bool,
+    /// Whether the method runs on the host only.
+    pub cpu_only: bool,
+}
+
+impl MethodSim {
+    pub fn total(&self, iters: usize) -> f64 {
+        self.setup + self.per_iter * iters as f64
+    }
+}
+
+fn t(dev: &DeviceParams, op: OpKind) -> f64 {
+    CostModel::exec_time(dev, op)
+}
+
+/// Library PCG iteration (Alg. 1): xpay + SPMV + dot + 2 axpy + PC +
+/// 2 dots, one launch each; on GPU every dot syncs back to the host.
+fn pcg_iter(dev: &DeviceParams, n: usize, nnz: usize, sync: f64) -> f64 {
+    t(dev, OpKind::Axpy { n }) * 3.0
+        + t(dev, OpKind::Spmv { n, nnz })
+        + t(dev, OpKind::Dot { n }) * 3.0
+        + t(dev, OpKind::PcApply { n })
+        + 3.0 * sync
+}
+
+/// Library PIPECG iteration (Alg. 2, unfused ops).
+fn pipecg_iter_unfused(dev: &DeviceParams, n: usize, nnz: usize, sync: f64) -> f64 {
+    t(dev, OpKind::UnfusedVmaPc { n })
+        + t(dev, OpKind::Dots3Separate { n })
+        + t(dev, OpKind::PcApply { n })
+        + t(dev, OpKind::Spmv { n, nnz })
+        + sync * 3.0
+}
+
+/// Hybrid-3 setup: five calibration SPMVs per device (concurrent) + the
+/// decomposition sweep (paper §IV-C1/C2; included in its totals, §VI).
+pub fn hybrid3_setup(cm: &CostModel, n: usize, nnz: usize) -> f64 {
+    let per_run = cm
+        .on_cpu(OpKind::Spmv { n, nnz })
+        .max(cm.on_gpu(OpKind::Spmv { n, nnz }));
+    5.0 * per_run + cm.on_cpu(OpKind::Stream { n: nnz, vecs: 2 })
+}
+
+/// All nine methods of Figs. 6/7 at scale (n, nnz).
+pub fn simulate_all(cm: &CostModel, n: usize, nnz: usize) -> Vec<MethodSim> {
+    simulate_all_capped(cm, n, nnz, None)
+}
+
+/// [`simulate_all`] with a device-memory capacity: Hybrid-3's GPU share is
+/// capped so its panel fits (§VI-B), which is what holds its speedup to
+/// the paper's 2–2.5x on the Table-II systems.
+pub fn simulate_all_capped(
+    cm: &CostModel,
+    n: usize,
+    nnz: usize,
+    gpu_capacity: Option<u64>,
+) -> Vec<MethodSim> {
+    let mut hybrid = select::predict_iteration_times(cm, n, nnz);
+    let r_floor = select::min_r_cpu_for_capacity(n, nnz, gpu_capacity);
+    if r_floor > 0.0 {
+        let r_cpu = select::model_r_cpu(cm, n, nnz).max(r_floor);
+        hybrid[2].1 = select::predict_h3(cm, n, nnz, r_cpu);
+    }
+    let mpi = DeviceParams::cpu_mpi16();
+    let mut petsc_gpu = cm.gpu.clone();
+    petsc_gpu.launch_overhead *= 2.5;
+    let sync = cm.link.latency;
+    vec![
+        MethodSim {
+            name: "PIPECG-OpenMP",
+            per_iter: pipecg_iter_unfused(&cm.cpu, n, nnz, 0.0),
+            setup: 0.0,
+            needs_full_gpu: false,
+            cpu_only: true,
+        },
+        MethodSim {
+            name: "Paralution-PCG-OpenMP",
+            per_iter: pcg_iter(&cm.cpu, n, nnz, 0.0),
+            setup: 0.0,
+            needs_full_gpu: false,
+            cpu_only: true,
+        },
+        MethodSim {
+            name: "PETSc-PCG-MPI",
+            per_iter: pcg_iter(&mpi, n, nnz, 0.0),
+            setup: 0.0,
+            needs_full_gpu: false,
+            cpu_only: true,
+        },
+        MethodSim {
+            name: "PETSc-PIPECG-GPU",
+            per_iter: pipecg_iter_unfused(&petsc_gpu, n, nnz, sync),
+            setup: 0.0,
+            needs_full_gpu: true,
+            cpu_only: false,
+        },
+        MethodSim {
+            name: "PETSc-PCG-GPU",
+            per_iter: pcg_iter(&petsc_gpu, n, nnz, sync),
+            setup: 0.0,
+            needs_full_gpu: true,
+            cpu_only: false,
+        },
+        MethodSim {
+            name: "Paralution-PCG-GPU",
+            per_iter: pcg_iter(&cm.gpu, n, nnz, sync),
+            setup: 0.0,
+            needs_full_gpu: true,
+            cpu_only: false,
+        },
+        MethodSim {
+            name: "Hybrid-PIPECG-1",
+            per_iter: hybrid[0].1,
+            setup: 0.0,
+            needs_full_gpu: true,
+            cpu_only: false,
+        },
+        MethodSim {
+            name: "Hybrid-PIPECG-2",
+            per_iter: hybrid[1].1,
+            setup: 0.0,
+            needs_full_gpu: true,
+            cpu_only: false,
+        },
+        MethodSim {
+            name: "Hybrid-PIPECG-3",
+            per_iter: hybrid[2].1,
+            setup: hybrid3_setup(cm, n, nnz),
+            needs_full_gpu: false,
+            cpu_only: false,
+        },
+    ]
+}
+
+/// Iteration-count transfer from bench scale to paper scale: PDE-type
+/// conditioning grows with resolution; κ ~ h⁻² gives CG iterations ~ √κ ~
+/// N^(1/3..1/2). We use √(N ratio) as the documented heuristic — it only
+/// affects the amortization of Hybrid-3's setup, not the per-iteration
+/// rankings.
+pub fn scale_iterations(bench_iters: usize, bench_n: usize, paper_n: usize) -> usize {
+    let f = (paper_n as f64 / bench_n.max(1) as f64).sqrt();
+    ((bench_iters as f64 * f).round() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_methods_simulated() {
+        let cm = CostModel::default();
+        let sims = simulate_all(&cm, 100_000, 5_000_000);
+        assert_eq!(sims.len(), 9);
+        for s in &sims {
+            assert!(s.per_iter > 0.0, "{}", s.name);
+        }
+        // Fig 6/7 reference-line orderings.
+        let by_name = |n: &str| sims.iter().find(|s| s.name == n).unwrap().per_iter;
+        assert!(by_name("PIPECG-OpenMP") > by_name("Paralution-PCG-OpenMP"));
+        assert!(by_name("PETSc-PCG-MPI") > by_name("Paralution-PCG-OpenMP"));
+        assert!(by_name("PETSc-PIPECG-GPU") > by_name("PETSc-PCG-GPU"));
+        assert!(by_name("PETSc-PCG-GPU") > by_name("Paralution-PCG-GPU"));
+    }
+
+    #[test]
+    fn hybrids_beat_everything_at_mid_scale() {
+        let cm = CostModel::default();
+        let sims = simulate_all(&cm, 220_542, 10_768_436); // hood
+        let best_hybrid = sims
+            .iter()
+            .filter(|s| s.name.starts_with("Hybrid"))
+            .map(|s| s.per_iter)
+            .fold(f64::INFINITY, f64::min);
+        let best_lib = sims
+            .iter()
+            .filter(|s| !s.name.starts_with("Hybrid"))
+            .map(|s| s.per_iter)
+            .fold(f64::INFINITY, f64::min);
+        assert!(best_hybrid < best_lib);
+    }
+
+    #[test]
+    fn iteration_scaling_monotone() {
+        assert!(scale_iterations(100, 1000, 4000) >= 190);
+        assert_eq!(scale_iterations(100, 1000, 1000), 100);
+        assert!(scale_iterations(1, 1_000_000, 1000) >= 1);
+    }
+}

@@ -1,0 +1,97 @@
+//! Mini benchmark harness (offline stand-in for criterion; `cargo bench`
+//! targets are `harness = false` binaries built on this).
+//!
+//! Measures wall time over warmup + sample runs and reports mean/σ/min;
+//! benches that reproduce paper figures additionally print virtual-time
+//! tables via `util::table`.
+
+pub mod figures;
+
+use std::time::Instant;
+
+/// Summary statistics of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>12} ±{:>10}  (min {}, {} samples)",
+            self.name,
+            crate::util::human_time(self.mean),
+            crate::util::human_time(self.stddev),
+            crate::util::human_time(self.min),
+            self.samples
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `samples` measured runs.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Stats {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / samples as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / samples as f64;
+    Stats {
+        name: name.to_string(),
+        samples,
+        mean,
+        stddev: var.sqrt(),
+        min: times.iter().copied().fold(f64::INFINITY, f64::min),
+        max: times.iter().copied().fold(0.0, f64::max),
+    }
+}
+
+/// Standard bench header so all `cargo bench` targets look uniform.
+pub fn header(title: &str, description: &str) {
+    println!("\n=== {title} ===");
+    println!("{description}\n");
+}
+
+/// Bench-wide sample-count control: `HYPIPE_BENCH_SAMPLES` (default given).
+pub fn samples(default: usize) -> usize {
+    std::env::var("HYPIPE_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Iteration-count control for fixed-iteration figure benches
+/// (`HYPIPE_BENCH_ITERS`).
+pub fn bench_iters(default: usize) -> usize {
+    std::env::var("HYPIPE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let mut x = 0u64;
+        let s = time("noop-ish", 1, 5, || {
+            x = x.wrapping_add(1);
+        });
+        assert_eq!(s.samples, 5);
+        assert!(s.min <= s.mean && s.mean <= s.max + 1e-12);
+        assert!(s.report().contains("noop-ish"));
+    }
+}

@@ -1,0 +1,373 @@
+//! Dense BLAS-1 kernels and the paper's *merged VMA* fused operations
+//! (§V-B.2): PIPECG's eight vector updates touch the same vectors, so
+//! merging the loops loads each vector once per iteration instead of once
+//! per operation — the CPU-side analogue of the GPU kernel fusion in
+//! §V-B.1.
+//!
+//! Separate (`dot`, `axpy`, …) and fused (`fused_pipecg_update`,
+//! `fused_dots3`, …) forms are both provided; the ablation bench
+//! `ablation_merged_vma` measures the difference.
+
+/// `(x, y)` dot product.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    // 4-way unrolled accumulation: better ILP and more stable than naive
+    // single-accumulator summation.
+    let mut acc = [0.0f64; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += x[i] * y[i];
+        acc[1] += x[i + 1] * y[i + 1];
+        acc[2] += x[i + 2] * y[i + 2];
+        acc[3] += x[i + 3] * y[i + 3];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..x.len() {
+        tail += x[i] * y[i];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Squared Euclidean norm.
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f64]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// `y += a * x`.
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// `y = x + a * y` (the CG "xpay" update `p = u + β p`).
+pub fn xpay(x: &[f64], a: f64, y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] = x[i] + a * y[i];
+    }
+}
+
+/// `x *= a`.
+pub fn scale(a: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Copy `src` into `dst`.
+pub fn copy(src: &[f64], dst: &mut [f64]) {
+    dst.copy_from_slice(src);
+}
+
+/// Elementwise `out = d .* x` (Jacobi preconditioner application).
+pub fn hadamard(d: &[f64], x: &[f64], out: &mut [f64]) {
+    assert_eq!(d.len(), x.len());
+    assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = d[i] * x[i];
+    }
+}
+
+/// The PIPECG vector-update state mutated by the fused kernels
+/// (Algorithm 2 working set).
+pub struct PipecgVectors<'a> {
+    pub z: &'a mut [f64],
+    pub q: &'a mut [f64],
+    pub s: &'a mut [f64],
+    pub p: &'a mut [f64],
+    pub x: &'a mut [f64],
+    pub r: &'a mut [f64],
+    pub u: &'a mut [f64],
+    pub w: &'a mut [f64],
+}
+
+/// **Merged VMA** (paper §V-B.2): all eight PIPECG updates (Alg. 2 lines
+/// 10–17) in a single pass over the vectors:
+///
+/// ```text
+/// z = n + β z;  q = m + β q;  s = w + β s;  p = u + β p;
+/// x += α p;     r -= α s;     u -= α q;     w -= α z;
+/// ```
+///
+/// Loads each of the 10 vectors exactly once. Ordering within one index is
+/// exactly the algorithmic order (s uses pre-update w; x uses post-update p,
+/// as in Algorithm 2).
+pub fn fused_pipecg_update(
+    n_vec: &[f64],
+    m_vec: &[f64],
+    alpha: f64,
+    beta: f64,
+    v: &mut PipecgVectors<'_>,
+) {
+    let len = n_vec.len();
+    assert!(
+        [
+            m_vec.len(),
+            v.z.len(),
+            v.q.len(),
+            v.s.len(),
+            v.p.len(),
+            v.x.len(),
+            v.r.len(),
+            v.u.len(),
+            v.w.len(),
+        ]
+        .iter()
+        .all(|&l| l == len),
+        "fused_pipecg_update: length mismatch"
+    );
+    for i in 0..len {
+        let zi = n_vec[i] + beta * v.z[i];
+        let qi = m_vec[i] + beta * v.q[i];
+        let si = v.w[i] + beta * v.s[i]; // uses w_i (pre-update)
+        let pi = v.u[i] + beta * v.p[i]; // uses u_i (pre-update)
+        v.z[i] = zi;
+        v.q[i] = qi;
+        v.s[i] = si;
+        v.p[i] = pi;
+        v.x[i] += alpha * pi;
+        v.r[i] -= alpha * si;
+        v.u[i] -= alpha * qi;
+        v.w[i] -= alpha * zi;
+    }
+}
+
+/// Unfused form of [`fused_pipecg_update`] — separate loop per operation,
+/// i.e. what a library composed of individual BLAS calls does. Used as the
+/// baseline in the merged-VMA ablation and to cross-check the fused kernel.
+pub fn unfused_pipecg_update(
+    n_vec: &[f64],
+    m_vec: &[f64],
+    alpha: f64,
+    beta: f64,
+    v: &mut PipecgVectors<'_>,
+) {
+    xpay(n_vec, beta, v.z);
+    xpay(m_vec, beta, v.q);
+    xpay(v.w, beta, v.s);
+    xpay(v.u, beta, v.p);
+    axpy(alpha, v.p, v.x);
+    axpy(-alpha, v.s, v.r);
+    axpy(-alpha, v.q, v.u);
+    axpy(-alpha, v.z, v.w);
+}
+
+/// Fused 3-way dot (Alg. 2 lines 18–20): `γ = (r,u)`, `δ = (w,u)`,
+/// `‖u‖² = (u,u)` in one pass over `r`, `w`, `u`.
+pub fn fused_dots3(r: &[f64], w: &[f64], u: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(r.len(), u.len());
+    assert_eq!(w.len(), u.len());
+    let (mut g, mut d, mut nn) = (0.0, 0.0, 0.0);
+    for i in 0..u.len() {
+        let ui = u[i];
+        g += r[i] * ui;
+        d += w[i] * ui;
+        nn += ui * ui;
+    }
+    (g, d, nn)
+}
+
+/// Partial fused update used by Hybrid-PIPECG-2's host side *before* the
+/// `n` vector arrives (Alg. 2 ops that do not involve `n`):
+/// `q = m + βq; s = w + βs; r -= αs; u -= αq` (and `p`, `x` when tracked).
+/// Returns nothing; see `hybrid::hybrid2` for the full protocol.
+pub fn fused_update_without_n(
+    m_vec: &[f64],
+    alpha: f64,
+    beta: f64,
+    q: &mut [f64],
+    s: &mut [f64],
+    r: &mut [f64],
+    u: &mut [f64],
+    w: &[f64],
+) {
+    let len = m_vec.len();
+    assert!(q.len() == len && s.len() == len && r.len() == len && u.len() == len && w.len() == len);
+    for i in 0..len {
+        let qi = m_vec[i] + beta * q[i];
+        let si = w[i] + beta * s[i];
+        q[i] = qi;
+        s[i] = si;
+        r[i] -= alpha * si;
+        u[i] -= alpha * qi;
+    }
+}
+
+/// Completion of Hybrid-PIPECG-2's host update once `n` has been copied:
+/// `z = n + βz; w -= αz` and the preconditioned `m = d .* w`.
+pub fn fused_update_with_n(
+    n_vec: &[f64],
+    inv_diag: &[f64],
+    alpha: f64,
+    beta: f64,
+    z: &mut [f64],
+    w: &mut [f64],
+    m: &mut [f64],
+) {
+    let len = n_vec.len();
+    assert!(z.len() == len && w.len() == len && m.len() == len && inv_diag.len() == len);
+    for i in 0..len {
+        let zi = n_vec[i] + beta * z[i];
+        z[i] = zi;
+        let wi = w[i] - alpha * zi;
+        w[i] = wi;
+        m[i] = inv_diag[i] * wi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(1);
+        for n in [0, 1, 3, 4, 7, 64, 1001] {
+            let x = randvec(&mut rng, n);
+            let y = randvec(&mut rng, n);
+            let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((dot(&x, &y) - naive).abs() < 1e-12 * (n as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn axpy_xpay_scale() {
+        let mut y = vec![1.0, 2.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 10.0]);
+        let mut y2 = vec![1.0, 2.0];
+        xpay(&[3.0, 4.0], 2.0, &mut y2);
+        assert_eq!(y2, vec![5.0, 8.0]);
+        let mut z = vec![2.0, -4.0];
+        scale(0.5, &mut z);
+        assert_eq!(z, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn fused_equals_unfused() {
+        let mut rng = Rng::new(42);
+        for n in [1, 5, 33, 256] {
+            let nv = randvec(&mut rng, n);
+            let mv = randvec(&mut rng, n);
+            let (alpha, beta) = (rng.range_f64(0.1, 2.0), rng.range_f64(0.0, 1.5));
+            let init: Vec<Vec<f64>> = (0..8).map(|_| randvec(&mut rng, n)).collect();
+            let mut a: Vec<Vec<f64>> = init.clone();
+            let mut b: Vec<Vec<f64>> = init.clone();
+            {
+                let [z, q, s, p, x, r, u, w] = &mut a[..] else {
+                    unreachable!()
+                };
+                fused_pipecg_update(
+                    &nv,
+                    &mv,
+                    alpha,
+                    beta,
+                    &mut PipecgVectors { z, q, s, p, x, r, u, w },
+                );
+            }
+            {
+                let [z, q, s, p, x, r, u, w] = &mut b[..] else {
+                    unreachable!()
+                };
+                unfused_pipecg_update(
+                    &nv,
+                    &mv,
+                    alpha,
+                    beta,
+                    &mut PipecgVectors { z, q, s, p, x, r, u, w },
+                );
+            }
+            for (va, vb) in a.iter().zip(&b) {
+                assert!(crate::util::max_abs_diff(va, vb) < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_dots3_matches_separate() {
+        let mut rng = Rng::new(3);
+        let r = randvec(&mut rng, 101);
+        let w = randvec(&mut rng, 101);
+        let u = randvec(&mut rng, 101);
+        let (g, d, nn) = fused_dots3(&r, &w, &u);
+        assert!((g - dot(&r, &u)).abs() < 1e-12);
+        assert!((d - dot(&w, &u)).abs() < 1e-12);
+        assert!((nn - dot(&u, &u)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hybrid2_split_updates_match_full_fused() {
+        // fused_update_without_n + fused_update_with_n must together
+        // reproduce the z,q,s,r,u,w part of the full fused update.
+        let mut rng = Rng::new(9);
+        let n = 128;
+        let nv = randvec(&mut rng, n);
+        let mv = randvec(&mut rng, n);
+        let inv_diag = vec![1.0; n];
+        let (alpha, beta) = (0.7, 0.3);
+        let z0 = randvec(&mut rng, n);
+        let q0 = randvec(&mut rng, n);
+        let s0 = randvec(&mut rng, n);
+        let r0 = randvec(&mut rng, n);
+        let u0 = randvec(&mut rng, n);
+        let w0 = randvec(&mut rng, n);
+
+        // Reference: full fused update.
+        let (mut z1, mut q1, mut s1, mut r1, mut u1, mut w1) =
+            (z0.clone(), q0.clone(), s0.clone(), r0.clone(), u0.clone(), w0.clone());
+        let mut p = vec![0.0; n];
+        let mut x = vec![0.0; n];
+        fused_pipecg_update(
+            &nv,
+            &mv,
+            alpha,
+            beta,
+            &mut PipecgVectors {
+                z: &mut z1,
+                q: &mut q1,
+                s: &mut s1,
+                p: &mut p,
+                x: &mut x,
+                r: &mut r1,
+                u: &mut u1,
+                w: &mut w1,
+            },
+        );
+
+        // Split protocol (hybrid-2 host path).
+        let (mut z2, mut q2, mut s2, mut r2, mut u2, mut w2) =
+            (z0, q0, s0, r0, u0, w0);
+        let mut m2 = vec![0.0; n];
+        fused_update_without_n(&mv, alpha, beta, &mut q2, &mut s2, &mut r2, &mut u2, &w2);
+        fused_update_with_n(&nv, &inv_diag, alpha, beta, &mut z2, &mut w2, &mut m2);
+
+        assert!(crate::util::max_abs_diff(&z1, &z2) < 1e-12);
+        assert!(crate::util::max_abs_diff(&q1, &q2) < 1e-12);
+        assert!(crate::util::max_abs_diff(&s1, &s2) < 1e-12);
+        assert!(crate::util::max_abs_diff(&r1, &r2) < 1e-12);
+        assert!(crate::util::max_abs_diff(&u1, &u2) < 1e-12);
+        assert!(crate::util::max_abs_diff(&w1, &w2) < 1e-12);
+        // m = M⁻¹ w with unit diag = w
+        assert!(crate::util::max_abs_diff(&m2, &w2) < 1e-12);
+    }
+
+    #[test]
+    fn hadamard_basics() {
+        let mut out = vec![0.0; 3];
+        hadamard(&[2.0, 3.0, 4.0], &[1.0, -1.0, 0.5], &mut out);
+        assert_eq!(out, vec![2.0, -3.0, 2.0]);
+    }
+}

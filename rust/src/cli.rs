@@ -1,0 +1,163 @@
+//! Hand-rolled CLI argument parsing (offline environment: no clap).
+//!
+//! Grammar: `hypipe <command> [--flag value]... [--switch]...`.
+//! Also provides the matrix-spec parser shared by the binary, examples
+//! and benches: `poisson2d:NXxNY`, `poisson7:M`, `poisson27:M`,
+//! `poisson125:M`, `banded:N,NNZ_PER_ROW[,SEED]`, `mtx:PATH`,
+//! `table1:NAME[/SCALE]`.
+
+use std::collections::BTreeMap;
+
+use crate::sparse::{gen, mm, Csr};
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (program name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(input: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = input.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            out.command = cmd;
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: cannot parse '{v}'"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Build a matrix from a spec string (see module docs for the grammar).
+pub fn build_matrix(spec: &str) -> Result<Csr> {
+    let (kind, rest) = spec
+        .split_once(':')
+        .ok_or_else(|| Error::Config(format!("matrix spec '{spec}' missing ':'")))?;
+    let bad = |what: &str| Error::Config(format!("bad {kind} spec '{rest}': {what}"));
+    match kind {
+        "poisson2d" => {
+            let (nx, ny) = rest
+                .split_once('x')
+                .ok_or_else(|| bad("expected NXxNY"))?;
+            let nx: usize = nx.parse().map_err(|_| bad("NX not a number"))?;
+            let ny: usize = ny.parse().map_err(|_| bad("NY not a number"))?;
+            Ok(gen::poisson2d_5pt(nx, ny))
+        }
+        "poisson7" => Ok(gen::poisson3d_7pt(rest.parse().map_err(|_| bad("M"))?)),
+        "poisson27" => Ok(gen::poisson3d_box(rest.parse().map_err(|_| bad("M"))?, 1)),
+        "poisson125" => Ok(gen::poisson3d_125pt(rest.parse().map_err(|_| bad("M"))?)),
+        "banded" => {
+            let parts: Vec<&str> = rest.split(',').collect();
+            if parts.len() < 2 {
+                return Err(bad("expected N,NNZ_PER_ROW[,SEED]"));
+            }
+            let n: usize = parts[0].parse().map_err(|_| bad("N"))?;
+            let row: f64 = parts[1].parse().map_err(|_| bad("NNZ_PER_ROW"))?;
+            let seed: u64 = if parts.len() > 2 {
+                parts[2].parse().map_err(|_| bad("SEED"))?
+            } else {
+                0xBEEF
+            };
+            Ok(gen::banded_spd(n, row, seed))
+        }
+        "mtx" => mm::read_mm(std::path::Path::new(rest)),
+        "table1" => {
+            let (name, scale) = match rest.split_once('/') {
+                Some((n, s)) => (n, s.parse().map_err(|_| bad("SCALE"))?),
+                None => (rest, 1usize),
+            };
+            let suite = gen::table1_suite(scale);
+            let profile = suite
+                .iter()
+                .find(|p| p.name.eq_ignore_ascii_case(name))
+                .ok_or_else(|| bad("unknown Table-I matrix name"))?;
+            Ok(profile.build())
+        }
+        other => Err(Error::Config(format!("unknown matrix kind '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = Args::parse(argv("solve --tol 1e-6 --trace --matrix poisson2d:4x4 out")).unwrap();
+        assert_eq!(a.command, "solve");
+        assert_eq!(a.flag("tol"), Some("1e-6"));
+        assert!(a.has("trace"));
+        assert_eq!(a.positional, vec!["out"]);
+        assert_eq!(a.flag_parse("tol", 0.0).unwrap(), 1e-6);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(argv("x --k=v --s")).unwrap();
+        assert_eq!(a.flag("k"), Some("v"));
+        assert!(a.has("s"));
+    }
+
+    #[test]
+    fn flag_parse_error_is_friendly() {
+        let a = Args::parse(argv("x --tol zzz")).unwrap();
+        let e = a.flag_parse("tol", 1.0f64).unwrap_err();
+        assert!(format!("{e}").contains("tol"));
+    }
+
+    #[test]
+    fn matrix_specs() {
+        assert_eq!(build_matrix("poisson2d:4x5").unwrap().n, 20);
+        assert_eq!(build_matrix("poisson125:4").unwrap().n, 64);
+        assert_eq!(build_matrix("poisson27:3").unwrap().n, 27);
+        assert_eq!(build_matrix("banded:100,8").unwrap().n, 100);
+        assert!(build_matrix("table1:bcsstk15/4").unwrap().n > 0);
+        assert!(build_matrix("nope:1").is_err());
+        assert!(build_matrix("poisson2d:4").is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Data decomposition (paper §IV-C1/C2).
+//!
+//! **1-D**: rows split at `N_cpu` so the CPU's rows hold ≈ `nnz · r_cpu`
+//! stored entries (equal-or-slightly-less, exactly as the paper rounds).
+//!
+//! **2-D**: within each device's row block, entries are classified by
+//! whether their column lies in the device's own row range (`nnz1`, SPMV
+//! part 1 — needs only local `m`) or in the other device's range (`nnz2`,
+//! SPMV part 2 — waits for the `m` exchange). The counts drive the
+//! overlap model; numerically part 1 + part 2 together are the plain
+//! panel SPMV.
+
+use crate::sparse::Csr;
+
+/// 1-D row split. CPU owns rows `[0, n_cpu)`, GPU owns `[n_cpu, n)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowSplit {
+    pub n_cpu: usize,
+    pub n: usize,
+    pub nnz_cpu: usize,
+    pub nnz_gpu: usize,
+}
+
+impl RowSplit {
+    pub fn n_gpu(&self) -> usize {
+        self.n - self.n_cpu
+    }
+}
+
+/// Split rows so the CPU block contains at most `r_cpu · nnz` stored
+/// entries (paper: "equal to or slightly less"). Degenerate fractions
+/// clamp to leaving at least one row per device when possible.
+pub fn split_rows_by_nnz(a: &Csr, r_cpu: f64) -> RowSplit {
+    let nnz = a.nnz();
+    let target = (nnz as f64 * r_cpu.clamp(0.0, 1.0)) as usize;
+    let mut n_cpu = 0;
+    while n_cpu < a.n && a.row_ptr[n_cpu + 1] <= target {
+        n_cpu += 1;
+    }
+    // Keep both devices non-empty for a meaningful hybrid run (the caller
+    // may still choose n_cpu == 0 by passing r_cpu = 0).
+    if r_cpu > 0.0 && n_cpu == 0 {
+        n_cpu = 0; // genuinely tiny CPU share: give it nothing
+    }
+    if n_cpu >= a.n {
+        n_cpu = a.n - 1;
+    }
+    RowSplit {
+        n_cpu,
+        n: a.n,
+        nnz_cpu: a.row_ptr[n_cpu],
+        nnz_gpu: nnz - a.row_ptr[n_cpu],
+    }
+}
+
+/// 2-D classification counts for one row split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TwoDSplit {
+    /// CPU rows, columns `< n_cpu` (local to CPU).
+    pub nnz1_cpu: usize,
+    /// CPU rows, columns `>= n_cpu` (need GPU's m).
+    pub nnz2_cpu: usize,
+    /// GPU rows, columns `>= n_cpu` (local to GPU).
+    pub nnz1_gpu: usize,
+    /// GPU rows, columns `< n_cpu` (need CPU's m).
+    pub nnz2_gpu: usize,
+}
+
+impl TwoDSplit {
+    pub fn total(&self) -> usize {
+        self.nnz1_cpu + self.nnz2_cpu + self.nnz1_gpu + self.nnz2_gpu
+    }
+}
+
+/// Classify every stored entry per the 2-D decomposition (Fig. 3).
+pub fn decompose_2d(a: &Csr, split: &RowSplit) -> TwoDSplit {
+    let nc = split.n_cpu;
+    let mut out = TwoDSplit {
+        nnz1_cpu: 0,
+        nnz2_cpu: 0,
+        nnz1_gpu: 0,
+        nnz2_gpu: 0,
+    };
+    for row in 0..a.n {
+        for j in a.row_ptr[row]..a.row_ptr[row + 1] {
+            let col = a.cols[j] as usize;
+            if row < nc {
+                if col < nc {
+                    out.nnz1_cpu += 1;
+                } else {
+                    out.nnz2_cpu += 1;
+                }
+            } else if col >= nc {
+                out.nnz1_gpu += 1;
+            } else {
+                out.nnz2_gpu += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn paper_figure3_example() {
+        // The 5x5, nnz=15 example of Fig. 3 with N_cpu = 2.
+        // Row 0: (0,0),(0,1),(0,2),(0,4); Row 1: (1,0),(1,1),(1,2);
+        // Row 2: (2,0),(2,2); Row 3: (3,1),(3,3),(3,4); Row 4: (4,0),(4,3),(4,4)
+        let mut coo = crate::sparse::Coo::new(5);
+        for (r, c) in [
+            (0, 0), (0, 1), (0, 2), (0, 4),
+            (1, 0), (1, 1), (1, 2),
+            (2, 0), (2, 2),
+            (3, 1), (3, 3), (3, 4),
+            (4, 0), (4, 3), (4, 4),
+        ] {
+            coo.push(r, c, 1.0);
+        }
+        let a = coo.to_csr().unwrap();
+        assert_eq!(a.nnz(), 15);
+        let split = RowSplit {
+            n_cpu: 2,
+            n: 5,
+            nnz_cpu: a.row_ptr[2],
+            nnz_gpu: 15 - a.row_ptr[2],
+        };
+        let d = decompose_2d(&a, &split);
+        // nnz1_cpu: entries in rows 0-1 with col<2 = (0,0),(0,1),(1,0),(1,1)
+        assert_eq!(d.nnz1_cpu, 4); // (0,0),(0,1),(1,0),(1,1)
+        assert_eq!(d.nnz2_cpu, 3); // (0,2),(0,4),(1,2)
+        assert_eq!(d.nnz1_gpu, 5); // (2,2),(3,3),(3,4),(4,3),(4,4)
+        assert_eq!(d.nnz2_gpu, 3); // (2,0),(3,1),(4,0)
+        assert_eq!(d.total(), 15);
+    }
+
+    #[test]
+    fn split_respects_target() {
+        let a = gen::banded_spd(500, 12.0, 9);
+        for frac in [0.0, 0.1, 0.33, 0.5, 0.9, 1.0] {
+            let s = split_rows_by_nnz(&a, frac);
+            assert!(s.nnz_cpu <= (a.nnz() as f64 * frac) as usize + a.max_row_nnz());
+            assert_eq!(s.nnz_cpu + s.nnz_gpu, a.nnz());
+            assert!(s.n_cpu < a.n, "GPU must keep at least one row");
+        }
+    }
+
+    #[test]
+    fn twod_partition_is_exact() {
+        check("2d split covers all nnz exactly", 30, |rng| {
+            let n = rng.range(10, 200);
+            let a = gen::banded_spd(n, rng.range_f64(2.0, 16.0), rng.next_u64());
+            let s = split_rows_by_nnz(&a, rng.next_f64());
+            let d = decompose_2d(&a, &s);
+            assert_eq!(d.total(), a.nnz());
+            assert_eq!(d.nnz1_cpu + d.nnz2_cpu, s.nnz_cpu);
+            assert_eq!(d.nnz1_gpu + d.nnz2_gpu, s.nnz_gpu);
+        });
+    }
+
+    #[test]
+    fn part1_needs_only_local_columns() {
+        // Structural property the overlap relies on: SPMV part 1 of the CPU
+        // can run with GPU's m zeroed out and still be exact on nnz1 terms.
+        let a = gen::banded_spd(300, 10.0, 4);
+        let s = split_rows_by_nnz(&a, 0.4);
+        let nc = s.n_cpu;
+        let x: Vec<f64> = (0..a.n).map(|i| (i % 13) as f64 - 6.0).collect();
+        // mask: local part only
+        let mut x_local = x.clone();
+        for v in x_local.iter_mut().skip(nc) {
+            *v = 0.0;
+        }
+        let mut y1 = vec![0.0; nc];
+        a.spmv_rows_into(0, nc, &x_local, &mut y1);
+        // part1+part2 == full
+        let mut x_remote = x.clone();
+        for v in x_remote.iter_mut().take(nc) {
+            *v = 0.0;
+        }
+        let mut y2 = vec![0.0; nc];
+        a.spmv_rows_into(0, nc, &x_remote, &mut y2);
+        let mut y = vec![0.0; nc];
+        a.spmv_rows_into(0, nc, &x, &mut y);
+        for i in 0..nc {
+            assert!((y1[i] + y2[i] - y[i]).abs() < 1e-12);
+        }
+    }
+}

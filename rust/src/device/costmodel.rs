@@ -1,0 +1,287 @@
+//! Calibrated virtual-time cost model for the simulated heterogeneous node.
+//!
+//! All solver kernels in this framework are **bandwidth-bound** BLAS-1/SPMV
+//! operations, so task duration is modelled as
+//! `launch_overhead + bytes_touched / sustained_bandwidth` per device, and
+//! copies as `link_latency + bytes / link_bandwidth`. Default constants are
+//! calibrated to the paper's testbed (Tesla K20m + 16-core Xeon, PCIe
+//! gen2): K20m sustained STREAM-like bandwidth ≈ 150 GB/s, 16-core Xeon
+//! ≈ 40 GB/s, PCIe ≈ 6 GB/s, kernel launch ≈ 5 µs. The *ratios* between
+//! these constants — not their absolute values — determine every
+//! reproduced figure (who wins at which N), which is why a calibrated
+//! model reproduces the paper's curves; see DESIGN.md §1.
+//!
+//! [`OpKind::bytes`] is the single source of truth for memory traffic;
+//! engines and baselines all price work through it.
+
+/// Timing parameters of one processing entity.
+#[derive(Debug, Clone)]
+pub struct DeviceParams {
+    pub name: &'static str,
+    /// Sustained memory bandwidth, bytes/second.
+    pub mem_bw: f64,
+    /// Last-level-cache capacity: operations whose whole working set fits
+    /// run at `llc_bw` instead of `mem_bw`. This nonlinearity is what
+    /// makes Hybrid-2's host mirror cheap below ~300k rows and expensive
+    /// above — the physical origin of the paper's §VI-A band boundary.
+    pub llc_bytes: Option<u64>,
+    /// Bandwidth when the working set is LLC-resident.
+    pub llc_bw: f64,
+    /// Fixed cost per kernel launch / per parallel-for region, seconds.
+    pub launch_overhead: f64,
+    /// Extra fixed cost of a device-wide reduction (dot product final sum
+    /// or OpenMP reduction tree), seconds.
+    pub reduce_overhead: f64,
+    /// Device memory capacity in bytes (None = host, unlimited for our
+    /// purposes).
+    pub mem_capacity: Option<u64>,
+}
+
+impl DeviceParams {
+    /// Tesla K20m role (the paper's accelerator).
+    pub fn gpu_k20m() -> DeviceParams {
+        DeviceParams {
+            name: "gpu-k20m",
+            mem_bw: 150e9,
+            llc_bytes: None, // 1.5 MB L2: never holds a solver working set
+            llc_bw: 150e9,
+            launch_overhead: 5e-6,
+            reduce_overhead: 15e-6,
+            mem_capacity: Some(5 * 1024 * 1024 * 1024),
+        }
+    }
+
+    /// 16-core Xeon role (the paper's host). The launch overhead is an
+    /// OpenMP parallel-region fork/join + barrier across 16 threads
+    /// (~25 µs on K20m-era Xeons); the reduce overhead is the OpenMP
+    /// reduction tree.
+    pub fn cpu_xeon16() -> DeviceParams {
+        DeviceParams {
+            name: "cpu-xeon16",
+            mem_bw: 40e9,
+            llc_bytes: Some(25 * 1024 * 1024),
+            llc_bw: 160e9,
+            launch_overhead: 35e-6,
+            reduce_overhead: 12e-6,
+            mem_capacity: None,
+        }
+    }
+
+    /// MPI-rank flavour of the CPU (the PETSc-PCG-MPI baseline): processes
+    /// instead of threads — no shared LLC reuse (lower effective
+    /// bandwidth) and an MPI allreduce per dot product.
+    pub fn cpu_mpi16() -> DeviceParams {
+        DeviceParams {
+            name: "cpu-mpi16",
+            mem_bw: 30e9,
+            llc_bytes: None, // rank-private caches: no shared-LLC reuse
+            llc_bw: 30e9,
+            launch_overhead: 35e-6,
+            reduce_overhead: 25e-6,
+            mem_capacity: None,
+        }
+    }
+}
+
+/// Interconnect between host and device.
+#[derive(Debug, Clone)]
+pub struct LinkParams {
+    /// Bytes/second (PCIe gen2 x16 effective ≈ 6 GB/s).
+    pub bw: f64,
+    /// Per-transfer latency, seconds.
+    pub latency: f64,
+}
+
+impl Default for LinkParams {
+    fn default() -> Self {
+        LinkParams {
+            bw: 6e9,
+            latency: 10e-6,
+        }
+    }
+}
+
+/// Operation catalogue. `n` = vector length, `nnz` = stored entries
+/// touched. Byte counts charge every operand stream once (read) and every
+/// result once (write) — the fused kernels' whole point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    /// ELL/CSR SPMV over `nnz` entries producing `n` outputs: read vals
+    /// (8B) + cols (4B) + gathered x (8B) per entry, write y.
+    Spmv { n: usize, nnz: usize },
+    /// Fused PIPECG VMA+PC block (Alg. 2 lines 10-17+21): reads 11 vectors
+    /// (n, m, d + 8 state), writes 9.
+    FusedVmaPc { n: usize },
+    /// Unfused VMA sequence: 8 xpay/axpy (2 reads + 1 write each) plus the
+    /// PC hadamard (2r + 1w) = 27 vector passes, 9 launches.
+    UnfusedVmaPc { n: usize },
+    /// Fused 3-dot: reads r, w, u once.
+    Dots3Fused { n: usize },
+    /// Separate dots: reads 2 vectors each × 3.
+    Dots3Separate { n: usize },
+    /// Jacobi apply alone: read d, x, write out.
+    PcApply { n: usize },
+    /// Generic k-vector streaming op (k reads+writes total).
+    Stream { n: usize, vecs: usize },
+    /// One xpay/axpy: 2 reads, 1 write.
+    Axpy { n: usize },
+    /// One dot: 2 reads.
+    Dot { n: usize },
+    /// Scalar-only host work (α/β, convergence check).
+    HostScalar,
+}
+
+impl OpKind {
+    /// Bytes of memory traffic this operation moves.
+    pub fn bytes(self) -> u64 {
+        const W: u64 = 8; // f64
+        match self {
+            OpKind::Spmv { n, nnz } => (nnz as u64) * (W + 4 + W) + (n as u64) * W,
+            OpKind::FusedVmaPc { n } => (n as u64) * W * (11 + 9),
+            OpKind::UnfusedVmaPc { n } => (n as u64) * W * 27,
+            OpKind::Dots3Fused { n } => (n as u64) * W * 3,
+            OpKind::Dots3Separate { n } => (n as u64) * W * 6,
+            OpKind::PcApply { n } => (n as u64) * W * 3,
+            OpKind::Stream { n, vecs } => (n as u64) * W * vecs as u64,
+            OpKind::Axpy { n } => (n as u64) * W * 3,
+            OpKind::Dot { n } => (n as u64) * W * 2,
+            OpKind::HostScalar => 0,
+        }
+    }
+
+    /// Number of kernel launches this op costs on a launch-priced device.
+    pub fn launches(self) -> u32 {
+        match self {
+            OpKind::UnfusedVmaPc { .. } => 9,
+            OpKind::Dots3Separate { .. } => 3,
+            OpKind::HostScalar => 0,
+            _ => 1,
+        }
+    }
+
+    /// Whether the op ends in a reduction (pays `reduce_overhead`).
+    pub fn reduces(self) -> u32 {
+        match self {
+            OpKind::Dots3Fused { .. } => 1,
+            OpKind::Dots3Separate { .. } => 3,
+            OpKind::Dot { .. } => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// The complete node model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub cpu: DeviceParams,
+    pub gpu: DeviceParams,
+    pub link: LinkParams,
+    /// Hybrid-3 host-concurrency penalty: when the CPU simultaneously
+    /// executes its data share *and* drives the device (kernel launches,
+    /// stream management, DMA staging), its compute threads lose effective
+    /// throughput. Calibrated at 0.17 so the paper's method-selection
+    /// bands (§VI-A) emerge; see DESIGN.md §1.
+    pub h3_cpu_penalty: f64,
+    /// Hybrid-3 per-iteration coordination overhead: stream synchronizes,
+    /// the partial-dot device→host readback and two-phase launch queuing
+    /// (4-6 driver events × 20-50 µs each on a K20m-era stack).
+    pub h3_sync_overhead: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            cpu: DeviceParams::cpu_xeon16(),
+            gpu: DeviceParams::gpu_k20m(),
+            link: LinkParams::default(),
+            h3_cpu_penalty: 0.17,
+            h3_sync_overhead: 200e-6,
+        }
+    }
+}
+
+impl CostModel {
+    /// Virtual duration of `op` on `dev`. Working sets that fit the LLC
+    /// stream at `llc_bw`.
+    pub fn exec_time(dev: &DeviceParams, op: OpKind) -> f64 {
+        let bytes = op.bytes();
+        let bw = match dev.llc_bytes {
+            Some(cap) if bytes <= cap => dev.llc_bw,
+            _ => dev.mem_bw,
+        };
+        dev.launch_overhead * op.launches() as f64
+            + dev.reduce_overhead * op.reduces() as f64
+            + bytes as f64 / bw
+    }
+
+    pub fn on_cpu(&self, op: OpKind) -> f64 {
+        Self::exec_time(&self.cpu, op)
+    }
+
+    pub fn on_gpu(&self, op: OpKind) -> f64 {
+        Self::exec_time(&self.gpu, op)
+    }
+
+    /// Virtual duration of a host↔device copy of `bytes`.
+    pub fn copy_time(&self, bytes: u64) -> f64 {
+        self.link.latency + bytes as f64 / self.link.bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_faster_than_cpu_on_spmv() {
+        let m = CostModel::default();
+        let op = OpKind::Spmv {
+            n: 100_000,
+            nnz: 5_000_000,
+        };
+        assert!(m.on_gpu(op) < m.on_cpu(op));
+    }
+
+    #[test]
+    fn fused_cheaper_than_unfused() {
+        let m = CostModel::default();
+        let n = 1 << 20;
+        assert!(m.on_gpu(OpKind::FusedVmaPc { n }) < m.on_gpu(OpKind::UnfusedVmaPc { n }));
+        assert!(m.on_gpu(OpKind::Dots3Fused { n }) < m.on_gpu(OpKind::Dots3Separate { n }));
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_ops() {
+        let m = CostModel::default();
+        // For a tiny vector, 9 launches cost more than the byte traffic.
+        let t_unfused = m.on_gpu(OpKind::UnfusedVmaPc { n: 64 });
+        assert!(t_unfused > 9.0 * m.gpu.launch_overhead * 0.99);
+    }
+
+    #[test]
+    fn copy_scales_linearly_with_floor() {
+        let m = CostModel::default();
+        let t1 = m.copy_time(0);
+        let t2 = m.copy_time(6_000_000_000);
+        assert!((t1 - m.link.latency).abs() < 1e-12);
+        assert!((t2 - (m.link.latency + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k20m_memory_capacity_is_5gb() {
+        let g = DeviceParams::gpu_k20m();
+        assert_eq!(g.mem_capacity, Some(5 * 1024 * 1024 * 1024));
+    }
+
+    #[test]
+    fn bytes_accounting_consistency() {
+        // Fused VMA touches fewer bytes than its unfused expansion, and
+        // 3 separate dots touch exactly twice the fused traffic.
+        let n = 12345;
+        assert!(OpKind::FusedVmaPc { n }.bytes() < OpKind::UnfusedVmaPc { n }.bytes());
+        assert_eq!(
+            OpKind::Dots3Separate { n }.bytes(),
+            2 * OpKind::Dots3Fused { n }.bytes()
+        );
+    }
+}

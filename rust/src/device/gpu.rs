@@ -1,0 +1,418 @@
+//! Accelerator engine: the GPU-role device.
+//!
+//! Executes the AOT-compiled L2 step graphs through PJRT. The matrix (ELL
+//! values/columns + Jacobi diagonal) is uploaded **once** and stays
+//! device-resident as `PjRtBuffer`s across iterations (the L3 hot-path
+//! optimization); per-iteration vector state is uploaded per call.
+//!
+//! A configurable *simulated memory capacity* (default 5 GB, the paper's
+//! K20m) gates what can be loaded: Hybrid-1/2 and the GPU-library
+//! baselines need the full matrix device-resident, which is exactly why
+//! only Hybrid-3 (row-panel resident) survives the paper's §VI-B
+//! out-of-memory workloads.
+
+use crate::runtime::artifacts::{to_f64_scalar, to_f64_vec, ArtifactLibrary};
+use crate::runtime::buckets;
+use crate::sparse::{Csr, Ell};
+use crate::{Error, Result};
+
+use super::costmodel::DeviceParams;
+
+/// Vector working set of a device-resident PIPECG solve, padded to the
+/// shape bucket. `n_orig` entries are live; the tail is zero.
+#[derive(Debug, Clone)]
+pub struct GpuSolveVectors {
+    pub n_orig: usize,
+    pub nb: usize,
+    pub z: Vec<f64>,
+    pub q: Vec<f64>,
+    pub s: Vec<f64>,
+    pub p: Vec<f64>,
+    pub x: Vec<f64>,
+    pub r: Vec<f64>,
+    pub u: Vec<f64>,
+    pub w: Vec<f64>,
+    pub m: Vec<f64>,
+    pub n: Vec<f64>,
+}
+
+impl GpuSolveVectors {
+    pub fn zeros(n_orig: usize, nb: usize) -> GpuSolveVectors {
+        let mk = || vec![0.0; nb];
+        GpuSolveVectors {
+            n_orig,
+            nb,
+            z: mk(),
+            q: mk(),
+            s: mk(),
+            p: mk(),
+            x: mk(),
+            r: mk(),
+            u: mk(),
+            w: mk(),
+            m: mk(),
+            n: mk(),
+        }
+    }
+}
+
+struct LoadedMatrix {
+    /// Live rows (before padding).
+    n_orig: usize,
+    /// Row bucket of the *matrix rows* (panel bucket for panels).
+    nb_rows: usize,
+    /// Bucket of the gather width (full-system bucket; == nb_rows for full
+    /// matrices, may differ for panels).
+    nb_full: usize,
+    kb: usize,
+    nnz: usize,
+    val: xla::PjRtBuffer,
+    col: xla::PjRtBuffer,
+    diag: xla::PjRtBuffer,
+    bytes: u64,
+    /// Panel row offset in the global system (0 for full matrices).
+    row0: usize,
+    is_panel: bool,
+}
+
+/// The PJRT-backed accelerator engine.
+pub struct GpuEngine {
+    lib: std::rc::Rc<ArtifactLibrary>,
+    pub params: DeviceParams,
+    matrix: Option<LoadedMatrix>,
+    mem_used: u64,
+}
+
+impl GpuEngine {
+    pub fn new(lib: std::rc::Rc<ArtifactLibrary>, params: DeviceParams) -> GpuEngine {
+        GpuEngine {
+            lib,
+            params,
+            matrix: None,
+            mem_used: 0,
+        }
+    }
+
+    pub fn artifact_library(&self) -> &ArtifactLibrary {
+        &self.lib
+    }
+
+    /// Simulated device bytes currently allocated.
+    pub fn mem_used(&self) -> u64 {
+        self.mem_used
+    }
+
+    /// Bytes the full matrix + solver working set would occupy
+    /// device-side (the "does it fit" predicate of §VI-B).
+    pub fn required_bytes_full(a: &Csr) -> Result<u64> {
+        let nb = buckets::bucket_n(a.n)?;
+        let kb = buckets::bucket_k(a.max_row_nnz())?;
+        Ok(Self::footprint(nb, kb))
+    }
+
+    fn footprint(nb_rows: usize, kb: usize) -> u64 {
+        // ELL vals f64 + cols i32, Jacobi diagonal, ~12 solver vectors.
+        (nb_rows * kb) as u64 * 12 + (nb_rows as u64) * 8 * 13
+    }
+
+    fn check_capacity(&self, want: u64) -> Result<()> {
+        if let Some(cap) = self.params.mem_capacity {
+            if self.mem_used + want > cap {
+                return Err(Error::Device(format!(
+                    "simulated GPU memory exhausted: need {} + {} used > capacity {} \
+                     (the paper's Hybrid-3 / §VI-B path handles this by loading a row panel)",
+                    crate::util::human_bytes(want),
+                    crate::util::human_bytes(self.mem_used),
+                    crate::util::human_bytes(cap),
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Upload the full matrix (Hybrid-1/2 and GPU-library baselines).
+    pub fn load_matrix(&mut self, a: &Csr, inv_diag: &[f64]) -> Result<()> {
+        let nb = buckets::bucket_n(a.n)?;
+        let kb = buckets::bucket_k(a.max_row_nnz())?;
+        let want = Self::footprint(nb, kb);
+        self.unload();
+        self.check_capacity(want)?;
+        let ell = Ell::from_csr_padded(a, kb, nb)?;
+        let cols_i32: Vec<i32> = ell.cols.iter().map(|&c| c as i32).collect();
+        let val = self.lib.upload_f64(&ell.vals, &[nb, kb])?;
+        let col = self.lib.upload_i32(&cols_i32, &[nb, kb])?;
+        let diag = self.lib.upload_f64(&buckets::pad_diag(inv_diag, nb), &[nb])?;
+        self.matrix = Some(LoadedMatrix {
+            n_orig: a.n,
+            nb_rows: nb,
+            nb_full: nb,
+            kb,
+            nnz: a.nnz(),
+            val,
+            col,
+            diag,
+            bytes: want,
+            row0: 0,
+            is_panel: false,
+        });
+        self.mem_used += want;
+        Ok(())
+    }
+
+    /// Upload a row panel `[r0, r1)` of the global matrix (Hybrid-3). The
+    /// panel's columns stay global; padded rows are all-zero (they produce
+    /// zero outputs and contribute nothing to the partial dots).
+    pub fn load_panel(&mut self, a: &Csr, r0: usize, r1: usize, inv_diag: &[f64]) -> Result<()> {
+        assert!(r0 < r1 && r1 <= a.n);
+        let nb_full = buckets::bucket_n(a.n)?;
+        let kb = buckets::bucket_k(a.max_row_nnz())?;
+        let nl = r1 - r0;
+        let nlb = buckets::bucket_panel(nl, nb_full)?;
+        let want = Self::footprint(nlb, kb) + (nb_full as u64) * 8; // + m_full
+        self.unload();
+        self.check_capacity(want)?;
+
+        let mut vals = vec![0.0f64; nlb * kb];
+        let mut cols = vec![0i32; nlb * kb];
+        for (li, gi) in (r0..r1).enumerate() {
+            let (s0, e0) = (a.row_ptr[gi], a.row_ptr[gi + 1]);
+            for (slot, j) in (s0..e0).enumerate() {
+                vals[li * kb + slot] = a.vals[j];
+                cols[li * kb + slot] = a.cols[j] as i32;
+            }
+        }
+        let nnz = a.row_ptr[r1] - a.row_ptr[r0];
+        let val = self.lib.upload_f64(&vals, &[nlb, kb])?;
+        let col = self.lib.upload_i32(&cols, &[nlb, kb])?;
+        let diag = self
+            .lib
+            .upload_f64(&buckets::pad_diag(&inv_diag[r0..r1], nlb), &[nlb])?;
+        self.matrix = Some(LoadedMatrix {
+            n_orig: nl,
+            nb_rows: nlb,
+            nb_full,
+            kb,
+            nnz,
+            val,
+            col,
+            diag,
+            bytes: want,
+            row0: r0,
+            is_panel: true,
+        });
+        self.mem_used += want;
+        Ok(())
+    }
+
+    pub fn unload(&mut self) {
+        if let Some(m) = self.matrix.take() {
+            self.mem_used = self.mem_used.saturating_sub(m.bytes);
+        }
+    }
+
+    fn mat(&self) -> Result<&LoadedMatrix> {
+        self.matrix
+            .as_ref()
+            .ok_or_else(|| Error::Device("no matrix loaded on GPU engine".into()))
+    }
+
+    /// Stored entries of the loaded matrix/panel (cost-model input).
+    pub fn loaded_nnz(&self) -> usize {
+        self.matrix.as_ref().map_or(0, |m| m.nnz)
+    }
+
+    /// Rows of the loaded matrix/panel.
+    pub fn loaded_rows(&self) -> usize {
+        self.matrix.as_ref().map_or(0, |m| m.n_orig)
+    }
+
+    /// Padded row-bucket the state vectors must be sized to.
+    pub fn state_bucket(&self) -> usize {
+        self.matrix.as_ref().map_or(0, |m| m.nb_rows)
+    }
+
+    /// `y = A x` through the `spmv` artifact (perf-model calibration and
+    /// tests). `x.len()` must equal the live column space (full system n).
+    pub fn spmv(&self, x: &[f64]) -> Result<Vec<f64>> {
+        let m = self.mat()?;
+        if m.is_panel {
+            return Err(Error::Device("spmv() requires a full matrix".into()));
+        }
+        let name = format!("spmv_n{}_k{}", m.nb_rows, m.kb);
+        let xp = self.lib.upload_f64(&buckets::pad_vec(x, m.nb_full), &[m.nb_full])?;
+        let out = self
+            .lib
+            .call_buffers(&name, &[&m.val, &m.col, &xp])?;
+        let mut y = to_f64_vec(&out[0])?;
+        y.truncate(m.n_orig);
+        Ok(y)
+    }
+
+    /// One full PIPECG iteration (Alg. 2 lines 10–22) device-side.
+    /// Updates `st` in place; returns the in-graph (γ, δ, ‖u‖²).
+    pub fn pipecg_step(
+        &self,
+        st: &mut GpuSolveVectors,
+        alpha: f64,
+        beta: f64,
+    ) -> Result<(f64, f64, f64)> {
+        let m = self.mat()?;
+        if m.is_panel {
+            return Err(Error::Device("pipecg_step requires a full matrix".into()));
+        }
+        let name = format!("pipecg_step_n{}_k{}", m.nb_rows, m.kb);
+        let nb = m.nb_rows;
+        debug_assert_eq!(st.nb, nb);
+        let up = |v: &[f64]| self.lib.upload_f64(v, &[nb]);
+        let bufs = [
+            up(&st.z)?,
+            up(&st.q)?,
+            up(&st.s)?,
+            up(&st.p)?,
+            up(&st.x)?,
+            up(&st.r)?,
+            up(&st.u)?,
+            up(&st.w)?,
+            up(&st.m)?,
+            up(&st.n)?,
+        ];
+        let a = self.lib.upload_scalar(alpha)?;
+        let b = self.lib.upload_scalar(beta)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&m.val, &m.col, &m.diag];
+        args.extend(bufs.iter());
+        args.push(&a);
+        args.push(&b);
+        let out = self.lib.call_buffers(&name, &args)?;
+        // Copy outputs into the pre-allocated state (no per-iteration
+        // allocations on the hot path — EXPERIMENTS.md §Perf).
+        for (dst, lit) in [
+            (&mut st.z, &out[0]),
+            (&mut st.q, &out[1]),
+            (&mut st.s, &out[2]),
+            (&mut st.p, &out[3]),
+            (&mut st.x, &out[4]),
+            (&mut st.r, &out[5]),
+            (&mut st.u, &out[6]),
+            (&mut st.w, &out[7]),
+            (&mut st.m, &out[8]),
+            (&mut st.n, &out[9]),
+        ] {
+            lit.copy_raw_to::<f64>(dst).map_err(crate::Error::from)?;
+        }
+        Ok((
+            to_f64_scalar(&out[10])?,
+            to_f64_scalar(&out[11])?,
+            to_f64_scalar(&out[12])?,
+        ))
+    }
+
+    /// One naive PCG iteration (Alg. 1); scalars computed in-graph.
+    /// Returns (γ', δ, ‖u‖²).
+    #[allow(clippy::too_many_arguments)]
+    pub fn pcg_step(
+        &self,
+        x: &mut Vec<f64>,
+        r: &mut Vec<f64>,
+        u: &mut Vec<f64>,
+        p: &mut Vec<f64>,
+        gamma: f64,
+        gamma_prev: f64,
+        first: bool,
+    ) -> Result<(f64, f64, f64)> {
+        let m = self.mat()?;
+        let name = format!("pcg_step_n{}_k{}", m.nb_rows, m.kb);
+        let nb = m.nb_rows;
+        let bufs = [
+            self.lib.upload_f64(x, &[nb])?,
+            self.lib.upload_f64(r, &[nb])?,
+            self.lib.upload_f64(u, &[nb])?,
+            self.lib.upload_f64(p, &[nb])?,
+        ];
+        let g = self.lib.upload_scalar(gamma)?;
+        let gp = self.lib.upload_scalar(gamma_prev)?;
+        let f = self.lib.upload_scalar(if first { 1.0 } else { 0.0 })?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&m.val, &m.col, &m.diag];
+        args.extend(bufs.iter());
+        args.push(&g);
+        args.push(&gp);
+        args.push(&f);
+        let out = self.lib.call_buffers(&name, &args)?;
+        for (dst, lit) in [(x, &out[0]), (r, &out[1]), (u, &out[2]), (p, &out[3])] {
+            lit.copy_raw_to::<f64>(dst).map_err(crate::Error::from)?;
+        }
+        Ok((
+            to_f64_scalar(&out[4])?,
+            to_f64_scalar(&out[5])?,
+            to_f64_scalar(&out[6])?,
+        ))
+    }
+
+    /// Hybrid-3 device-local iteration over the loaded panel. The eight
+    /// state slices (length = panel bucket) update in place; `m_full` is
+    /// the assembled global m (length = full bucket); `m_loc` the local
+    /// slice. Returns the partial (γ, δ, ‖u‖²) and the new local m.
+    #[allow(clippy::too_many_arguments)]
+    pub fn hybrid3_step(
+        &self,
+        st: &mut GpuSolveVectors,
+        m_full: &[f64],
+        m_loc: &[f64],
+        alpha: f64,
+        beta: f64,
+    ) -> Result<((f64, f64, f64), Vec<f64>)> {
+        let m = self.mat()?;
+        if !m.is_panel {
+            return Err(Error::Device("hybrid3_step requires a panel".into()));
+        }
+        let name = format!(
+            "hybrid3_local_step_n{}_k{}_nl{}",
+            m.nb_full, m.kb, m.nb_rows
+        );
+        let nlb = m.nb_rows;
+        debug_assert_eq!(st.nb, nlb);
+        let mf = self
+            .lib
+            .upload_f64(&buckets::pad_vec(m_full, m.nb_full), &[m.nb_full])?;
+        let ml = self.lib.upload_f64(&buckets::pad_vec(m_loc, nlb), &[nlb])?;
+        let up = |v: &[f64]| self.lib.upload_f64(v, &[nlb]);
+        let bufs = [
+            up(&st.z)?,
+            up(&st.q)?,
+            up(&st.s)?,
+            up(&st.p)?,
+            up(&st.x)?,
+            up(&st.r)?,
+            up(&st.u)?,
+            up(&st.w)?,
+        ];
+        let a = self.lib.upload_scalar(alpha)?;
+        let b = self.lib.upload_scalar(beta)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&m.val, &m.col, &m.diag, &mf, &ml];
+        args.extend(bufs.iter());
+        args.push(&a);
+        args.push(&b);
+        let out = self.lib.call_buffers(&name, &args)?;
+        for (dst, lit) in [
+            (&mut st.z, &out[0]),
+            (&mut st.q, &out[1]),
+            (&mut st.s, &out[2]),
+            (&mut st.p, &out[3]),
+            (&mut st.x, &out[4]),
+            (&mut st.r, &out[5]),
+            (&mut st.u, &out[6]),
+            (&mut st.w, &out[7]),
+        ] {
+            lit.copy_raw_to::<f64>(dst).map_err(crate::Error::from)?;
+        }
+        let mut m_new = to_f64_vec(&out[8])?;
+        m_new.truncate(m.n_orig); // live panel rows only (padding tail is 0)
+        Ok((
+            (
+                to_f64_scalar(&out[9])?,
+                to_f64_scalar(&out[10])?,
+                to_f64_scalar(&out[11])?,
+            ),
+            m_new,
+        ))
+    }
+}

@@ -1,0 +1,23 @@
+//! Simulated heterogeneous node: device engines, copy streams, the
+//! virtual-time cost model and the discrete-event timeline.
+//!
+//! * [`costmodel`] — calibrated per-device timing (K20m / Xeon / PCIe).
+//! * [`timeline`] — DES over {CpuExec, GpuExec, Stream1, Stream2, Host}.
+//! * [`cpu`] — host engine: native Rust kernels + op accounting.
+//! * [`gpu`] — accelerator engine: executes the AOT HLO artifacts through
+//!   PJRT, enforces the simulated device-memory capacity.
+//! * [`stream`] — async copy-stream abstraction (cudaMemcpyAsync role).
+
+pub mod costmodel;
+pub mod cpu;
+pub mod gpu;
+pub mod native;
+pub mod stream;
+pub mod timeline;
+
+pub use costmodel::{CostModel, DeviceParams, LinkParams, OpKind};
+pub use cpu::CpuEngine;
+pub use gpu::{GpuEngine, GpuSolveVectors};
+pub use native::{GpuCompute, NativeAccel};
+pub use stream::CopyStream;
+pub use timeline::{Resource, Timeline};

@@ -1,0 +1,396 @@
+//! Native accelerator backend: executes the *same* GPU-role step graphs
+//! with in-process Rust kernels instead of PJRT.
+//!
+//! Two uses: (1) unit/property tests that must run without `make
+//! artifacts`; (2) large-bucket benchmark sweeps where interpret-free
+//! native execution keeps wall time reasonable. Virtual timing is
+//! identical by construction — the schedulers price work through the cost
+//! model, not through wall clock — and the math is identical to the L2
+//! graphs (asserted by integration tests when artifacts are present).
+
+use crate::blas::{self, PipecgVectors};
+use crate::sparse::{Csr, Ell};
+use crate::{Error, Result};
+
+use super::gpu::{GpuEngine, GpuSolveVectors};
+
+/// Backend-independent accelerator interface used by the hybrid
+/// schedulers and GPU-library baselines.
+pub trait GpuCompute {
+    /// Live rows of the loaded matrix/panel.
+    fn rows(&self) -> usize;
+    /// Stored entries of the loaded matrix/panel.
+    fn nnz(&self) -> usize;
+    /// Padded row-bucket size the state vectors must use.
+    fn state_len(&self) -> usize;
+    /// Backend label for reports.
+    fn backend_name(&self) -> &'static str;
+
+    /// y = A x (full matrix).
+    fn spmv(&mut self, x: &[f64]) -> Result<Vec<f64>>;
+    /// Full PIPECG iteration; returns device-computed (γ, δ, ‖u‖²).
+    fn pipecg_step(&mut self, st: &mut GpuSolveVectors, alpha: f64, beta: f64)
+        -> Result<(f64, f64, f64)>;
+    /// Naive PCG iteration; returns (γ', δ, ‖u‖²).
+    #[allow(clippy::too_many_arguments)]
+    fn pcg_step(
+        &mut self,
+        x: &mut Vec<f64>,
+        r: &mut Vec<f64>,
+        u: &mut Vec<f64>,
+        p: &mut Vec<f64>,
+        gamma: f64,
+        gamma_prev: f64,
+        first: bool,
+    ) -> Result<(f64, f64, f64)>;
+    /// Hybrid-3 panel iteration; returns partial dots and the new local m.
+    fn hybrid3_step(
+        &mut self,
+        st: &mut GpuSolveVectors,
+        m_full: &[f64],
+        m_loc: &[f64],
+        alpha: f64,
+        beta: f64,
+    ) -> Result<((f64, f64, f64), Vec<f64>)>;
+}
+
+impl GpuCompute for GpuEngine {
+    fn rows(&self) -> usize {
+        self.loaded_rows()
+    }
+    fn nnz(&self) -> usize {
+        self.loaded_nnz()
+    }
+    fn state_len(&self) -> usize {
+        self.state_bucket()
+    }
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+    fn spmv(&mut self, x: &[f64]) -> Result<Vec<f64>> {
+        GpuEngine::spmv(self, x)
+    }
+    fn pipecg_step(
+        &mut self,
+        st: &mut GpuSolveVectors,
+        alpha: f64,
+        beta: f64,
+    ) -> Result<(f64, f64, f64)> {
+        GpuEngine::pipecg_step(self, st, alpha, beta)
+    }
+    fn pcg_step(
+        &mut self,
+        x: &mut Vec<f64>,
+        r: &mut Vec<f64>,
+        u: &mut Vec<f64>,
+        p: &mut Vec<f64>,
+        gamma: f64,
+        gamma_prev: f64,
+        first: bool,
+    ) -> Result<(f64, f64, f64)> {
+        GpuEngine::pcg_step(self, x, r, u, p, gamma, gamma_prev, first)
+    }
+    fn hybrid3_step(
+        &mut self,
+        st: &mut GpuSolveVectors,
+        m_full: &[f64],
+        m_loc: &[f64],
+        alpha: f64,
+        beta: f64,
+    ) -> Result<((f64, f64, f64), Vec<f64>)> {
+        GpuEngine::hybrid3_step(self, st, m_full, m_loc, alpha, beta)
+    }
+}
+
+/// In-process backend. For full matrices it holds an ELL copy (mirroring
+/// the device layout); panels keep CSR + the global row range.
+pub struct NativeAccel {
+    full: Option<(Ell, Vec<f64>)>,
+    panel: Option<Panel>,
+    n_state: usize,
+}
+
+struct Panel {
+    a: Csr, // full matrix (borrowing is avoided for simplicity; Csr is cheap to clone rows from)
+    r0: usize,
+    r1: usize,
+    inv_diag: Vec<f64>, // local
+    nnz: usize,
+}
+
+impl NativeAccel {
+    /// Load a full matrix (Hybrid-1/2 / GPU-library baseline role).
+    pub fn with_matrix(a: &Csr, inv_diag: &[f64]) -> NativeAccel {
+        NativeAccel {
+            n_state: a.n,
+            full: Some((Ell::from_csr(a), inv_diag.to_vec())),
+            panel: None,
+        }
+    }
+
+    /// Load a row panel (Hybrid-3 role).
+    pub fn with_panel(a: &Csr, r0: usize, r1: usize, inv_diag: &[f64]) -> NativeAccel {
+        let nnz = a.row_ptr[r1] - a.row_ptr[r0];
+        NativeAccel {
+            n_state: r1 - r0,
+            full: None,
+            panel: Some(Panel {
+                a: a.clone(),
+                r0,
+                r1,
+                inv_diag: inv_diag[r0..r1].to_vec(),
+                nnz,
+            }),
+        }
+    }
+}
+
+impl GpuCompute for NativeAccel {
+    fn rows(&self) -> usize {
+        self.full
+            .as_ref()
+            .map(|(e, _)| e.n_orig)
+            .or_else(|| self.panel.as_ref().map(|p| p.r1 - p.r0))
+            .unwrap_or(0)
+    }
+    fn nnz(&self) -> usize {
+        self.full
+            .as_ref()
+            .map(|(e, _)| e.to_csr().nnz())
+            .or_else(|| self.panel.as_ref().map(|p| p.nnz))
+            .unwrap_or(0)
+    }
+    fn state_len(&self) -> usize {
+        self.n_state
+    }
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn spmv(&mut self, x: &[f64]) -> Result<Vec<f64>> {
+        let (ell, _) = self
+            .full
+            .as_ref()
+            .ok_or_else(|| Error::Device("native spmv needs a full matrix".into()))?;
+        Ok(ell.spmv(x))
+    }
+
+    fn pipecg_step(
+        &mut self,
+        st: &mut GpuSolveVectors,
+        alpha: f64,
+        beta: f64,
+    ) -> Result<(f64, f64, f64)> {
+        let (ell, inv_diag) = self
+            .full
+            .as_ref()
+            .ok_or_else(|| Error::Device("pipecg_step needs a full matrix".into()))?;
+        blas::fused_pipecg_update(
+            &st.n,
+            &st.m,
+            alpha,
+            beta,
+            &mut PipecgVectors {
+                z: &mut st.z,
+                q: &mut st.q,
+                s: &mut st.s,
+                p: &mut st.p,
+                x: &mut st.x,
+                r: &mut st.r,
+                u: &mut st.u,
+                w: &mut st.w,
+            },
+        );
+        let dots = blas::fused_dots3(&st.r, &st.w, &st.u);
+        blas::hadamard(inv_diag, &st.w, &mut st.m);
+        ell.spmv_into(&st.m, &mut st.n);
+        Ok(dots)
+    }
+
+    fn pcg_step(
+        &mut self,
+        x: &mut Vec<f64>,
+        r: &mut Vec<f64>,
+        u: &mut Vec<f64>,
+        p: &mut Vec<f64>,
+        gamma: f64,
+        gamma_prev: f64,
+        first: bool,
+    ) -> Result<(f64, f64, f64)> {
+        let (ell, inv_diag) = self
+            .full
+            .as_ref()
+            .ok_or_else(|| Error::Device("pcg_step needs a full matrix".into()))?;
+        let beta = if first { 0.0 } else { gamma / gamma_prev };
+        blas::xpay(u, beta, p);
+        let s = ell.spmv(p);
+        let delta = blas::dot(&s, p);
+        let alpha = gamma / delta;
+        blas::axpy(alpha, p, x);
+        blas::axpy(-alpha, &s, r);
+        blas::hadamard(inv_diag, r, u);
+        let gamma1 = blas::dot(u, r);
+        let nn = blas::dot(u, u);
+        Ok((gamma1, delta, nn))
+    }
+
+    fn hybrid3_step(
+        &mut self,
+        st: &mut GpuSolveVectors,
+        m_full: &[f64],
+        m_loc: &[f64],
+        alpha: f64,
+        beta: f64,
+    ) -> Result<((f64, f64, f64), Vec<f64>)> {
+        let p = self
+            .panel
+            .as_mut()
+            .ok_or_else(|| Error::Device("hybrid3_step needs a panel".into()))?;
+        let nl = p.r1 - p.r0;
+        // Pre-copy phase (matches model.hybrid3_local_step op order).
+        for i in 0..nl {
+            let qi = m_loc[i] + beta * st.q[i];
+            let si = st.w[i] + beta * st.s[i];
+            let pi = st.u[i] + beta * st.p[i];
+            st.q[i] = qi;
+            st.s[i] = si;
+            st.p[i] = pi;
+            st.x[i] += alpha * pi;
+            st.r[i] -= alpha * si;
+            st.u[i] -= alpha * qi;
+        }
+        let gamma_p = blas::dot(&st.r[..nl], &st.u[..nl]);
+        let nn_p = blas::dot(&st.u[..nl], &st.u[..nl]);
+        // Post-copy phase: panel SPMV over the full m, then z/w/m + δ.
+        let mut n_new = vec![0.0; nl];
+        p.a.spmv_rows_into(p.r0, p.r1, m_full, &mut n_new);
+        let mut m_new = vec![0.0; nl];
+        for i in 0..nl {
+            let zi = n_new[i] + beta * st.z[i];
+            st.z[i] = zi;
+            st.w[i] -= alpha * zi;
+            m_new[i] = p.inv_diag[i] * st.w[i];
+        }
+        let delta_p = blas::dot(&st.w[..nl], &st.u[..nl]);
+        Ok(((gamma_p, delta_p, nn_p), m_new))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::{Jacobi, Preconditioner};
+    use crate::sparse::gen;
+
+    /// Driving the native backend's pipecg_step must match the sequential
+    /// reference solver step-for-step.
+    #[test]
+    fn native_pipecg_step_matches_reference() {
+        let a = gen::poisson2d_5pt(9, 9);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let mut refst = crate::solver::pipecg::PipecgState::init(&a, &b, &pc);
+        let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
+        let mut st = GpuSolveVectors::zeros(a.n, a.n);
+        st.r = refst.r.clone();
+        st.u = refst.u.clone();
+        st.w = refst.w.clone();
+        st.m = refst.m.clone();
+        st.n = refst.n.clone();
+        let (mut gamma, mut delta) = (refst.gamma, refst.delta);
+        let (mut gamma_prev, mut alpha_prev) = (0.0, 0.0);
+        for it in 0..15 {
+            let (alpha, beta) = if it == 0 {
+                (gamma / delta, 0.0)
+            } else {
+                let beta = gamma / gamma_prev;
+                (gamma / (delta - beta * gamma / alpha_prev), beta)
+            };
+            let (g, d, _nn) = acc.pipecg_step(&mut st, alpha, beta).unwrap();
+            assert!(crate::solver::pipecg::step(&a, &pc, &mut refst));
+            assert!(crate::util::max_abs_diff(&st.x, &refst.x) < 1e-10, "x diverged at {it}");
+            assert!(crate::util::max_abs_diff(&st.w, &refst.w) < 1e-10);
+            assert!((g - refst.gamma).abs() < 1e-8);
+            assert!((d - refst.delta).abs() < 1e-8);
+            gamma_prev = gamma;
+            alpha_prev = alpha;
+            gamma = g;
+            delta = d;
+        }
+    }
+
+    /// Two native panels must together reproduce the full step.
+    #[test]
+    fn native_panels_partition_exactly() {
+        let a = gen::banded_spd(120, 8.0, 3);
+        let pc = Jacobi::from_matrix(&a);
+        let b = a.mul_ones();
+        let split = 50;
+
+        // Full reference step from a consistent init.
+        let refst = crate::solver::pipecg::PipecgState::init(&a, &b, &pc);
+        let mut full = NativeAccel::with_matrix(&a, &pc.inv_diag);
+        let mut st_full = GpuSolveVectors::zeros(a.n, a.n);
+        st_full.r = refst.r.clone();
+        st_full.u = refst.u.clone();
+        st_full.w = refst.w.clone();
+        st_full.m = refst.m.clone();
+        st_full.n = refst.n.clone();
+        let (alpha, beta) = (refst.gamma / refst.delta, 0.0);
+        let (g, d, nn) = full.pipecg_step(&mut st_full, alpha, beta).unwrap();
+
+        // Panel execution.
+        let m_full = refst.m.clone();
+        let mut sums = (0.0, 0.0, 0.0);
+        let mut xs = vec![];
+        for (lo, hi) in [(0, split), (split, a.n)] {
+            let mut acc = NativeAccel::with_panel(&a, lo, hi, &pc.inv_diag);
+            let mut st = GpuSolveVectors::zeros(hi - lo, hi - lo);
+            st.r = refst.r[lo..hi].to_vec();
+            st.u = refst.u[lo..hi].to_vec();
+            st.w = refst.w[lo..hi].to_vec();
+            let ((gp, dp, np), m_new) = acc
+                .hybrid3_step(&mut st, &m_full, &refst.m[lo..hi], alpha, beta)
+                .unwrap();
+            sums.0 += gp;
+            sums.1 += dp;
+            sums.2 += np;
+            xs.extend_from_slice(&st.x);
+            // new local m must equal the full step's m slice
+            assert!(crate::util::max_abs_diff(&m_new, &st_full.m[lo..hi]) < 1e-12);
+        }
+        assert!((sums.0 - g).abs() < 1e-9);
+        assert!((sums.1 - d).abs() < 1e-9);
+        assert!((sums.2 - nn).abs() < 1e-9);
+        assert!(crate::util::max_abs_diff(&xs, &st_full.x) < 1e-12);
+    }
+
+    #[test]
+    fn native_pcg_step_converges() {
+        let a = gen::poisson2d_5pt(8, 8);
+        let pc = Jacobi::from_matrix(&a);
+        let b = a.mul_ones();
+        let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
+        let mut x = vec![0.0; a.n];
+        let mut r = b.clone();
+        let mut u = pc.apply_alloc(&r);
+        let mut p = vec![0.0; a.n];
+        let mut gamma = blas::dot(&u, &r);
+        let mut gamma_prev = 0.0;
+        let mut nn = blas::dot(&u, &u);
+        for it in 0..500 {
+            if nn.sqrt() < 1e-8 {
+                break;
+            }
+            let (g, _d, n2) = acc
+                .pcg_step(&mut x, &mut r, &mut u, &mut p, gamma, gamma_prev, it == 0)
+                .unwrap();
+            gamma_prev = gamma;
+            gamma = g;
+            nn = n2;
+        }
+        assert!(nn.sqrt() < 1e-8);
+        let expect = 1.0 / (a.n as f64).sqrt();
+        assert!(x.iter().all(|&v| (v - expect).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,239 @@
+//! Discrete-event virtual timeline — the overlap-accounting substrate.
+//!
+//! The paper's central claims are about *overlap*: copies hidden behind
+//! kernels (Hybrid-1/2), bidirectional exchanges hidden behind SPMV part 1
+//! (Hybrid-3). This session's box has one CPU core and no GPU, so wall
+//! clock cannot exhibit that structure; instead every scheduler charges its
+//! operations to virtual **resources** (CPU-exec, GPU-exec, two copy
+//! streams, host) with explicit dependencies, and the timeline computes the
+//! per-iteration makespan exactly as a DMA-engine + dual-queue device
+//! would. Numerics always run for real; only *time* is simulated
+//! (DESIGN.md §1).
+//!
+//! The model: each resource executes at most one task at a time, in
+//! submission order (a CUDA stream / core). A task starts at
+//! `max(resource_free, deps...)` and finishes `start + duration` later.
+
+/// Execution resources of the simulated heterogeneous node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Resource {
+    /// Host cores executing solver kernels (the 16-core CPU role).
+    CpuExec,
+    /// Accelerator execution queue (the K20m role).
+    GpuExec,
+    /// Copy engine, device→host direction (user-defined stream 1).
+    Stream1,
+    /// Copy engine, host→device direction (user-defined stream 2).
+    Stream2,
+    /// Scalar/bookkeeping work on the host (α/β computation, launches).
+    Host,
+}
+
+pub const ALL_RESOURCES: [Resource; 5] = [
+    Resource::CpuExec,
+    Resource::GpuExec,
+    Resource::Stream1,
+    Resource::Stream2,
+    Resource::Host,
+];
+
+impl Resource {
+    fn idx(self) -> usize {
+        match self {
+            Resource::CpuExec => 0,
+            Resource::GpuExec => 1,
+            Resource::Stream1 => 2,
+            Resource::Stream2 => 3,
+            Resource::Host => 4,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Resource::CpuExec => "cpu",
+            Resource::GpuExec => "gpu",
+            Resource::Stream1 => "stream1",
+            Resource::Stream2 => "stream2",
+            Resource::Host => "host",
+        }
+    }
+}
+
+/// A completed task (also the chrome-trace record).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub resource: Resource,
+    pub label: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Handle to a scheduled task's completion time (virtual seconds).
+pub type Finish = f64;
+
+/// The discrete-event timeline.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    free_at: [f64; 5],
+    busy: [f64; 5],
+    events: Vec<TraceEvent>,
+    record: bool,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new(true)
+    }
+}
+
+impl Timeline {
+    pub fn new(record_events: bool) -> Timeline {
+        Timeline {
+            free_at: [0.0; 5],
+            busy: [0.0; 5],
+            events: Vec::new(),
+            record: record_events,
+        }
+    }
+
+    /// Schedule `label` on `res` for `duration` seconds, not starting before
+    /// any of `deps`. Returns the finish time.
+    pub fn run(&mut self, res: Resource, label: &str, duration: f64, deps: &[Finish]) -> Finish {
+        assert!(duration >= 0.0, "negative duration for {label}");
+        let dep = deps.iter().copied().fold(0.0f64, f64::max);
+        let start = self.free_at[res.idx()].max(dep);
+        let end = start + duration;
+        self.free_at[res.idx()] = end;
+        self.busy[res.idx()] += duration;
+        if self.record {
+            self.events.push(TraceEvent {
+                resource: res,
+                label: label.to_string(),
+                start,
+                end,
+            });
+        }
+        end
+    }
+
+    /// Block `res` until `t` (a wait/synchronize: occupies no busy time).
+    pub fn wait_until(&mut self, res: Resource, t: Finish) {
+        let i = res.idx();
+        if t > self.free_at[i] {
+            self.free_at[i] = t;
+        }
+    }
+
+    /// Earliest time `res` can accept new work.
+    pub fn now(&self, res: Resource) -> f64 {
+        self.free_at[res.idx()]
+    }
+
+    /// Total busy time charged to `res`.
+    pub fn busy(&self, res: Resource) -> f64 {
+        self.busy[res.idx()]
+    }
+
+    /// End of the last task over all resources.
+    pub fn makespan(&self) -> f64 {
+        self.free_at.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Chrome-trace (about://tracing, Perfetto) JSON export.
+    pub fn to_chrome_trace(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, n, obj, s, Json};
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("name", s(&e.label)),
+                    ("ph", s("X")),
+                    ("ts", n(e.start * 1e6)),
+                    ("dur", n((e.end - e.start) * 1e6)),
+                    ("pid", n(1.0)),
+                    ("tid", n(e.resource.idx() as f64 + 1.0)),
+                    ("cat", s(e.resource.name())),
+                ])
+            })
+            .collect();
+        arr(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_on_one_resource() {
+        let mut tl = Timeline::default();
+        let a = tl.run(Resource::GpuExec, "a", 2.0, &[]);
+        let b = tl.run(Resource::GpuExec, "b", 3.0, &[]);
+        assert_eq!(a, 2.0);
+        assert_eq!(b, 5.0);
+        assert_eq!(tl.makespan(), 5.0);
+        assert_eq!(tl.busy(Resource::GpuExec), 5.0);
+    }
+
+    #[test]
+    fn parallel_resources_overlap() {
+        let mut tl = Timeline::default();
+        let g = tl.run(Resource::GpuExec, "kernel", 4.0, &[]);
+        let c = tl.run(Resource::Stream1, "copy", 3.0, &[]);
+        // copy fully hidden behind the kernel
+        assert_eq!(tl.makespan(), 4.0);
+        assert!(c < g);
+    }
+
+    #[test]
+    fn dependencies_delay_start() {
+        let mut tl = Timeline::default();
+        let copy = tl.run(Resource::Stream1, "copy", 3.0, &[]);
+        let dots = tl.run(Resource::CpuExec, "dots", 1.0, &[copy]);
+        assert_eq!(dots, 4.0); // waits for the copy
+    }
+
+    #[test]
+    fn wait_until_blocks_resource() {
+        let mut tl = Timeline::default();
+        let copy = tl.run(Resource::Stream1, "copy", 2.0, &[]);
+        tl.wait_until(Resource::CpuExec, copy);
+        let t = tl.run(Resource::CpuExec, "post", 1.0, &[]);
+        assert_eq!(t, 3.0);
+        // waiting is idle, not busy
+        assert_eq!(tl.busy(Resource::CpuExec), 1.0);
+    }
+
+    #[test]
+    fn makespan_bounds_busy() {
+        // Property: makespan >= busy time of each resource.
+        crate::util::propcheck::check("makespan >= busy", 100, |rng| {
+            let mut tl = Timeline::new(false);
+            let mut finishes = vec![];
+            for _ in 0..rng.range(1, 30) {
+                let res = ALL_RESOURCES[rng.below(5)];
+                let dur = rng.range_f64(0.0, 2.0);
+                let ndeps = rng.below(3.min(finishes.len() + 1));
+                let deps: Vec<f64> = (0..ndeps)
+                    .map(|_| finishes[rng.below(finishes.len().max(1))])
+                    .collect();
+                finishes.push(tl.run(res, "t", dur, &deps));
+            }
+            for r in ALL_RESOURCES {
+                assert!(tl.makespan() + 1e-12 >= tl.busy(r));
+            }
+        });
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let mut tl = Timeline::default();
+        tl.run(Resource::GpuExec, "spmv", 1.0, &[]);
+        let txt = tl.to_chrome_trace().to_string();
+        assert!(crate::util::json::parse(&txt).is_ok());
+    }
+}

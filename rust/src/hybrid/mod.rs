@@ -1,0 +1,85 @@
+//! The paper's contribution: three hybrid CPU+GPU execution methods for
+//! PIPECG (§IV), plus automatic method selection.
+//!
+//! | method | parallelism | per-iteration traffic | best for |
+//! |---|---|---|---|
+//! | [`hybrid1`] | task (dots on CPU ∥ PC+SPMV on GPU) | 3N dev→host | small N |
+//! | [`hybrid2`] | task + redundant host updates | N dev→host | medium N |
+//! | [`hybrid3`] | data (perf-modelled 1-D split + 2-D overlap) | N exchanged both ways | large N / out-of-memory |
+//!
+//! All three run real numerics (accelerator side through the PJRT
+//! artifacts or the native backend) and charge their schedule to the
+//! virtual timeline; `RunReport.virtual_total` is the paper's metric.
+
+pub mod hybrid1;
+pub mod hybrid2;
+pub mod hybrid3;
+pub mod select;
+
+use crate::device::costmodel::CostModel;
+use crate::solver::SolveOpts;
+
+/// Shared configuration for hybrid executions.
+#[derive(Debug, Clone)]
+pub struct HybridConfig {
+    pub opts: SolveOpts,
+    pub cm: CostModel,
+    /// Keep the full event trace in the report (memory-heavy for long runs).
+    pub keep_trace: bool,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        HybridConfig {
+            opts: SolveOpts::default(),
+            cm: CostModel::default(),
+            keep_trace: false,
+        }
+    }
+}
+
+/// Compute α/β from the Chronopoulos–Gear scalars (Alg. 2 lines 5–9).
+pub(crate) fn pipecg_scalars(
+    iteration: usize,
+    gamma: f64,
+    delta: f64,
+    gamma_prev: f64,
+    alpha_prev: f64,
+) -> Option<(f64, f64)> {
+    if iteration == 0 {
+        if delta == 0.0 || !delta.is_finite() {
+            return None;
+        }
+        Some((gamma / delta, 0.0))
+    } else {
+        let beta = gamma / gamma_prev;
+        let denom = delta - beta * gamma / alpha_prev;
+        if !beta.is_finite() || denom == 0.0 || !denom.is_finite() {
+            return None;
+        }
+        Some((gamma / denom, beta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_first_iteration() {
+        assert_eq!(pipecg_scalars(0, 2.0, 4.0, 0.0, 0.0), Some((0.5, 0.0)));
+        assert_eq!(pipecg_scalars(0, 2.0, 0.0, 0.0, 0.0), None);
+    }
+
+    #[test]
+    fn scalars_later_iterations() {
+        let (a, b) = pipecg_scalars(3, 1.0, 2.0, 2.0, 0.5).unwrap();
+        assert!((b - 0.5).abs() < 1e-15);
+        assert!((a - 1.0).abs() < 1e-15); // 1 / (2 - 0.5*1/0.5) = 1
+    }
+
+    #[test]
+    fn scalars_breakdown_detected() {
+        assert_eq!(pipecg_scalars(1, 1.0, 1.0, 0.0, 1.0), None); // beta = inf
+    }
+}

@@ -1,0 +1,171 @@
+//! Automatic method selection.
+//!
+//! The paper's §VI finding: Hybrid-1 wins for small N (< ~36k), Hybrid-2
+//! for medium N (36k–260k), Hybrid-3 for large N and for matrices that do
+//! not fit device memory. Rather than hard-coding those thresholds, we
+//! *price one iteration of each method with the cost model* and pick the
+//! cheapest — the thresholds then emerge from the same constants that
+//! produce the figures (and adapt if the user re-calibrates the model).
+
+use crate::device::costmodel::{CostModel, OpKind};
+use crate::sparse::MatrixStats;
+
+/// The three hybrid methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Hybrid1,
+    Hybrid2,
+    Hybrid3,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Hybrid1 => "Hybrid-PIPECG-1",
+            Method::Hybrid2 => "Hybrid-PIPECG-2",
+            Method::Hybrid3 => "Hybrid-PIPECG-3",
+        }
+    }
+}
+
+/// Predicted virtual seconds per iteration for each method on a system
+/// with `n` rows and `nnz` stored entries.
+pub fn predict_iteration_times(cm: &CostModel, n: usize, nnz: usize) -> [(Method, f64); 3] {
+    // DMA transfers read device memory concurrently with kernels, stealing
+    // exactly their byte count of device bandwidth (interference charge).
+    let interf = |bytes: usize| bytes as f64 / cm.gpu.mem_bw;
+
+    // Hybrid-1: GPU does vecops + PC + SPMV; 3N copy + CPU dots must hide
+    // behind PC+SPMV; iteration = max(gpu chain, vecops + copy + dots).
+    let gpu_vecops = cm.on_gpu(OpKind::Stream { n, vecs: 18 });
+    let gpu_pcspmv = cm.on_gpu(OpKind::PcApply { n }) + cm.on_gpu(OpKind::Spmv { n, nnz });
+    let copy3 = cm.copy_time((n * 3 * 8) as u64);
+    let cpu_dots = cm.on_cpu(OpKind::Dots3Fused { n });
+    let h1 = (gpu_vecops + gpu_pcspmv + interf(n * 24))
+        .max(gpu_vecops + copy3 + cpu_dots);
+
+    // Hybrid-2: copy N overlaps host redundant updates; host chain is
+    // pre(10 passes) + dots + post(7 passes) + delta.
+    let copy1 = cm.copy_time((n * 8) as u64);
+    let cpu_chain = cm.on_cpu(OpKind::Stream { n, vecs: 10 })
+        + cm.on_cpu(OpKind::Dots3Fused { n })
+        + cm.on_cpu(OpKind::Stream { n, vecs: 7 })
+        + cm.on_cpu(OpKind::Dot { n });
+    let h2 = (gpu_vecops + gpu_pcspmv + interf(n * 8)).max(copy1.max(cpu_chain));
+
+    // Hybrid-3: split by relative SPMV speed; each side runs its share.
+    let h3 = predict_h3(cm, n, nnz, model_r_cpu(cm, n, nnz));
+
+    [
+        (Method::Hybrid1, h1),
+        (Method::Hybrid2, h2),
+        (Method::Hybrid3, h3),
+    ]
+}
+
+/// The performance model's CPU share (paper §IV-C1) at scale (n, nnz).
+pub fn model_r_cpu(cm: &CostModel, n: usize, nnz: usize) -> f64 {
+    let s_cpu = 1.0 / cm.on_cpu(OpKind::Spmv { n, nnz });
+    let s_gpu = 1.0 / cm.on_gpu(OpKind::Spmv { n, nnz });
+    s_cpu / (s_cpu + s_gpu)
+}
+
+/// Predicted Hybrid-3 iteration time for an explicit CPU share — exposed
+/// so capacity-capped splits (out-of-memory systems, §VI-B: the GPU gets
+/// only the rows whose ELL panel fits) can be priced too.
+///
+/// Exchange hidden behind part-1 + local vecops; the CPU side pays the
+/// host-concurrency penalty; each iteration ends with the coordination
+/// sync (see hybrid3.rs).
+pub fn predict_h3(cm: &CostModel, n: usize, nnz: usize, r_cpu: f64) -> f64 {
+    let interf = |bytes: usize| bytes as f64 / cm.gpu.mem_bw;
+    let nc = ((n as f64) * r_cpu) as usize;
+    let ng = n - nc;
+    let nnz_c = (nnz as f64 * r_cpu) as usize;
+    let nnz_g = nnz - nnz_c;
+    let cpu_side = (cm.on_cpu(OpKind::Stream { n: nc, vecs: 16 })
+        + cm.on_cpu(OpKind::Dots3Fused { n: nc })
+        + cm.on_cpu(OpKind::Spmv { n: nc, nnz: nnz_c })
+        + cm.on_cpu(OpKind::Stream { n: nc, vecs: 7 })
+        + cm.on_cpu(OpKind::Dot { n: nc }))
+        * (1.0 + cm.h3_cpu_penalty);
+    let gpu_side = cm.on_gpu(OpKind::Stream { n: ng, vecs: 16 })
+        + cm.on_gpu(OpKind::Dots3Fused { n: ng })
+        + cm.on_gpu(OpKind::Spmv { n: ng, nnz: nnz_g })
+        + cm.on_gpu(OpKind::Stream { n: ng, vecs: 7 })
+        + cm.on_gpu(OpKind::Dot { n: ng })
+        + interf(ng * 8);
+    let exchange = cm.copy_time((ng * 8) as u64).max(cm.copy_time((nc * 8) as u64));
+    cpu_side.max(gpu_side).max(exchange) + cm.h3_sync_overhead
+}
+
+/// Minimum CPU share forced by the device capacity: the GPU panel (ELL
+/// values + indices + its vector slices) must fit.
+pub fn min_r_cpu_for_capacity(n: usize, nnz: usize, capacity: Option<u64>) -> f64 {
+    let Some(cap) = capacity else { return 0.0 };
+    let full_bytes = (nnz as u64) * 12 + (n as u64) * 8 * 13;
+    if full_bytes <= cap {
+        return 0.0;
+    }
+    1.0 - cap as f64 / full_bytes as f64
+}
+
+/// Pick the cheapest method. When the matrix does not fit the device
+/// (`fits_gpu == false`) only Hybrid-3 is feasible (paper §VI-B).
+pub fn select(cm: &CostModel, stats: &MatrixStats, fits_gpu: bool) -> Method {
+    if !fits_gpu {
+        return Method::Hybrid3;
+    }
+    let preds = predict_iteration_times(cm, stats.n, stats.nnz);
+    preds
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(n: usize, nnz_per_row: f64) -> MatrixStats {
+        let nnz = (n as f64 * nnz_per_row) as usize;
+        MatrixStats {
+            n,
+            nnz,
+            nnz_per_row,
+            max_row_nnz: nnz_per_row as usize + 1,
+            csr_bytes: 0,
+            ell_bytes: 0,
+        }
+    }
+
+    /// The paper's size bands must emerge from the cost model: small N →
+    /// Hybrid-1, medium → Hybrid-2, very large → Hybrid-3.
+    #[test]
+    fn paper_bands_emerge_from_cost_model() {
+        let cm = CostModel::default();
+        assert_eq!(select(&cm, &stats(4_000, 30.0), true), Method::Hybrid1);
+        assert_eq!(select(&cm, &stats(130_000, 50.0), true), Method::Hybrid2);
+        assert_eq!(select(&cm, &stats(4_000_000, 79.0), true), Method::Hybrid3);
+    }
+
+    #[test]
+    fn out_of_memory_forces_hybrid3() {
+        let cm = CostModel::default();
+        assert_eq!(select(&cm, &stats(1_000, 5.0), false), Method::Hybrid3);
+    }
+
+    #[test]
+    fn predictions_are_positive_and_ordered_in_n() {
+        let cm = CostModel::default();
+        for (_, t) in predict_iteration_times(&cm, 10_000, 300_000) {
+            assert!(t > 0.0);
+        }
+        let small = predict_iteration_times(&cm, 1_000, 30_000);
+        let large = predict_iteration_times(&cm, 1_000_000, 30_000_000);
+        for i in 0..3 {
+            assert!(large[i].1 > small[i].1);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! # HyPipe — Heterogeneous Pipelined Conjugate Gradient framework
+//!
+//! Reproduction of *"Efficient executions of Pipelined Conjugate Gradient
+//! Method on Heterogeneous Architectures"* (Tiwari & Vadhiyar, 2021).
+//!
+//! HyPipe is the **Layer-3 Rust coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): ELL SPMV, fused
+//!   VMA block, fused 3-way dot, Jacobi preconditioner.
+//! * **L2** — JAX step graphs (`python/compile/model.py`): whole PIPECG /
+//!   PCG iterations composed from the L1 kernels, AOT-lowered to HLO text.
+//! * **L3** — this crate: device engines, copy streams, the performance
+//!   model, 1-D/2-D data decomposition, and the paper's three hybrid
+//!   execution methods, plus library-style baselines and a discrete-event
+//!   virtual timeline that accounts for computation/communication overlap.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the L2
+//! graphs once; the [`runtime`] module loads and executes them via PJRT.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use hypipe::sparse::gen;
+//! use hypipe::solver::{pipecg, SolveOpts};
+//! use hypipe::precond::Jacobi;
+//!
+//! let a = gen::poisson2d_5pt(64, 64);
+//! let b = a.mul_ones();
+//! let opts = SolveOpts::default();
+//! let res = pipecg::solve(&a, &b, &Jacobi::from_matrix(&a), &opts);
+//! assert!(res.converged);
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod blas;
+pub mod cli;
+pub mod decomp;
+pub mod device;
+pub mod hybrid;
+pub mod metrics;
+pub mod perfmodel;
+pub mod precond;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("sparse matrix error: {0}")]
+    Sparse(String),
+    #[error("solver error: {0}")]
+    Solver(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("device error: {0}")]
+    Device(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

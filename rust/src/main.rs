@@ -1,0 +1,461 @@
+//! `hypipe` — leader binary for the HyPipe framework.
+//!
+//! Subcommands:
+//!
+//! * `solve`      — solve one system with a chosen (or auto-selected) method
+//! * `perfmodel`  — run the §IV-C1 calibration and print the decomposition
+//! * `info`       — artifact inventory + cost-model constants
+//! * `gen`        — generate a matrix and write it as MatrixMarket
+//!
+//! Run `hypipe help` for flags.
+
+use hypipe::baselines::{self, CpuFlavor, GpuFlavor};
+use hypipe::cli::{build_matrix, Args};
+use hypipe::device::costmodel::CostModel;
+use hypipe::device::native::{GpuCompute, NativeAccel};
+use hypipe::device::{DeviceParams, GpuEngine};
+use hypipe::hybrid::{self, select::Method, HybridConfig};
+use hypipe::metrics::RunReport;
+use hypipe::precond::Jacobi;
+use hypipe::solver::SolveOpts;
+use hypipe::sparse::MatrixStats;
+use hypipe::util::human_bytes;
+use hypipe::{runtime, Result};
+
+const HELP: &str = "\
+hypipe — heterogeneous Pipelined CG (Tiwari & Vadhiyar 2021 reproduction)
+
+USAGE: hypipe <command> [flags]
+
+COMMANDS
+  solve       solve A x = b
+  suite       run all nine methods on one matrix, print the comparison
+  perfmodel   run performance modelling + 2-D decomposition for a matrix
+  info        show artifact inventory and cost-model constants
+  gen         generate a matrix, write MatrixMarket
+  help        this text
+
+COMMON FLAGS
+  --matrix SPEC     poisson2d:64x64 | poisson7:M | poisson27:M | poisson125:M
+                    | banded:N,ROWNNZ[,SEED] | mtx:PATH | table1:NAME[/SCALE]
+  --method M        auto | h1 | h2 | h3 | pipecg-cpu | pcg-cpu-paralution
+                    | pcg-cpu-petsc | pcg-gpu-paralution | pcg-gpu-petsc
+                    | pipecg-rr | pipecg-gpu-petsc  (default: auto)
+  --backend B       native | pjrt               (default: pjrt if artifacts exist)
+  --tol T           absolute tolerance on the preconditioned residual (1e-5)
+  --max-iters N     iteration cap (10000)
+  --gpu-mem BYTES   simulated device memory capacity (default 5 GiB)
+  --trace PATH      write a chrome-trace of the run
+  --json            print the report as JSON
+
+EXAMPLES
+  hypipe solve --matrix poisson125:12 --method auto
+  hypipe solve --matrix table1:gyro --method h1 --backend native
+  hypipe perfmodel --matrix banded:100000,50
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match Args::parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(parsed) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.command.as_str() {
+        "solve" => cmd_solve(&args),
+        "suite" => cmd_suite(&args),
+        "perfmodel" => cmd_perfmodel(&args),
+        "info" => cmd_info(&args),
+        "gen" => cmd_gen(&args),
+        "help" | "" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn solve_opts(args: &Args) -> Result<SolveOpts> {
+    Ok(SolveOpts {
+        tol: args.flag_parse("tol", 1e-5)?,
+        max_iters: args.flag_parse("max-iters", 10_000)?,
+        record_history: true,
+    })
+}
+
+fn gpu_params(args: &Args) -> Result<DeviceParams> {
+    let mut p = DeviceParams::gpu_k20m();
+    if let Some(v) = args.flag("gpu-mem") {
+        p.mem_capacity = Some(
+            v.parse()
+                .map_err(|_| hypipe::Error::Config(format!("--gpu-mem: bad bytes '{v}'")))?,
+        );
+    }
+    Ok(p)
+}
+
+fn backend_name(args: &Args) -> String {
+    args.flag_or(
+        "backend",
+        if runtime::artifacts_available() { "pjrt" } else { "native" },
+    )
+}
+
+/// Build the accelerator backend (full matrix resident).
+fn make_accel(
+    args: &Args,
+    a: &hypipe::sparse::Csr,
+    pc: &Jacobi,
+) -> Result<Box<dyn GpuCompute>> {
+    match backend_name(args).as_str() {
+        "native" => Ok(Box::new(NativeAccel::with_matrix(a, &pc.inv_diag))),
+        "pjrt" => {
+            let lib = std::rc::Rc::new(runtime::open_default()?);
+            let mut eng = GpuEngine::new(lib, gpu_params(args)?);
+            eng.load_matrix(a, &pc.inv_diag)?;
+            Ok(Box::new(eng))
+        }
+        other => Err(hypipe::Error::Config(format!("unknown backend '{other}'"))),
+    }
+}
+
+fn print_report(args: &Args, rep: &RunReport) -> Result<()> {
+    if args.has("json") {
+        println!("{}", rep.to_json().to_pretty());
+    } else {
+        println!("method          : {} [{}]", rep.method, rep.backend);
+        println!("system          : n={} nnz={}", rep.n, rep.nnz);
+        println!(
+            "converged       : {} in {} iterations (norm {:.3e}, true residual {:.3e})",
+            rep.result.converged, rep.result.iterations, rep.result.final_norm, rep.true_residual
+        );
+        println!(
+            "virtual time    : {} total, {} per iteration",
+            hypipe::util::human_time(rep.virtual_total),
+            hypipe::util::human_time(rep.virtual_per_iter)
+        );
+        println!("wall time       : {}", hypipe::util::human_time(rep.wall_seconds));
+        for (r, b) in &rep.busy {
+            if *b > 0.0 {
+                println!(
+                    "  {:8} busy : {} ({:.1}%)",
+                    r.name(),
+                    hypipe::util::human_time(*b),
+                    100.0 * b / rep.virtual_total.max(1e-30)
+                );
+            }
+        }
+    }
+    if let Some(path) = args.flag("trace") {
+        hypipe::metrics::write_chrome_trace(rep, std::path::Path::new(path))?;
+        eprintln!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let spec = args.flag_or("matrix", "poisson2d:64x64");
+    let a = build_matrix(&spec)?;
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let opts = solve_opts(args)?;
+    let cm = CostModel::default();
+    let cfg = HybridConfig {
+        opts: opts.clone(),
+        cm: cm.clone(),
+        keep_trace: args.flag("trace").is_some(),
+    };
+    let stats = MatrixStats::of(&a);
+    let gp = gpu_params(args)?;
+    let fits = gp
+        .mem_capacity
+        .map(|cap| {
+            GpuEngine::required_bytes_full(&a)
+                .map(|need| need <= cap)
+                .unwrap_or(false)
+        })
+        .unwrap_or(true);
+
+    let method = args.flag_or("method", "auto");
+    let rep = match method.as_str() {
+        "auto" | "h1" | "h2" | "h3" => {
+            let chosen = match method.as_str() {
+                "h1" => Method::Hybrid1,
+                "h2" => Method::Hybrid2,
+                "h3" => Method::Hybrid3,
+                _ => {
+                    let m = hybrid::select::select(&cm, &stats, fits);
+                    eprintln!("auto-selected {}", m.name());
+                    m
+                }
+            };
+            match chosen {
+                Method::Hybrid1 => {
+                    let mut acc = make_accel(args, &a, &pc)?;
+                    hybrid::hybrid1::solve(&a, &b, &pc, acc.as_mut(), &cfg)?
+                }
+                Method::Hybrid2 => {
+                    let mut acc = make_accel(args, &a, &pc)?;
+                    hybrid::hybrid2::solve(&a, &b, &pc, acc.as_mut(), &cfg)?
+                }
+                Method::Hybrid3 => {
+                    let budget = if fits {
+                        None
+                    } else {
+                        Some(hypipe::perfmodel::rows_fitting(
+                            &a,
+                            gp.mem_capacity.unwrap_or(u64::MAX),
+                        ))
+                    };
+                    let plan = hybrid::hybrid3::plan_capped(
+                        &a,
+                        &cfg,
+                        budget,
+                        gp.mem_capacity,
+                        None,
+                    );
+                    let mut acc: Box<dyn GpuCompute> = match backend_name(args).as_str() {
+                        "native" => Box::new(NativeAccel::with_panel(
+                            &a,
+                            plan.split.n_cpu,
+                            a.n,
+                            &pc.inv_diag,
+                        )),
+                        _ => {
+                            let lib = std::rc::Rc::new(runtime::open_default()?);
+                            let mut eng = GpuEngine::new(lib, gp.clone());
+                            eng.load_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag)?;
+                            Box::new(eng)
+                        }
+                    };
+                    hybrid::hybrid3::solve(&a, &b, &pc, acc.as_mut(), &plan, &cfg)?
+                }
+            }
+        }
+        "pipecg-rr" => {
+            // Residual-replacement PIPECG (accuracy extension; see
+            // solver::pipecg_rr) on the host reference path.
+            let wall = std::time::Instant::now();
+            let rr = hypipe::solver::pipecg_rr::solve(
+                &a,
+                &b,
+                &pc,
+                &hypipe::solver::pipecg_rr::RrOpts {
+                    base: opts.clone(),
+                    interval: args.flag_parse("rr-interval", 50)?,
+                },
+            );
+            let mut tl = hypipe::device::Timeline::new(false);
+            tl.run(
+                hypipe::device::Resource::CpuExec,
+                "pipecg-rr",
+                0.0,
+                &[],
+            );
+            let tr = rr.true_residual(&a, &b);
+            RunReport::from_timeline(
+                "PIPECG-RR",
+                "cpu-only",
+                a.n,
+                a.nnz(),
+                rr,
+                tr,
+                tl,
+                0.0,
+                wall.elapsed().as_secs_f64(),
+                false,
+            )
+        }
+        "pipecg-cpu" => baselines::run_cpu(&a, &b, CpuFlavor::PipecgOpenMp, &opts, &cm),
+        "pcg-cpu-paralution" => baselines::run_cpu(&a, &b, CpuFlavor::ParalutionOpenMp, &opts, &cm),
+        "pcg-cpu-petsc" => baselines::run_cpu(&a, &b, CpuFlavor::PetscMpi, &opts, &cm),
+        "pcg-gpu-paralution" | "pcg-gpu-petsc" | "pipecg-gpu-petsc" => {
+            let flavor = match method.as_str() {
+                "pcg-gpu-paralution" => GpuFlavor::ParalutionPcg,
+                "pcg-gpu-petsc" => GpuFlavor::PetscPcg,
+                _ => GpuFlavor::PetscPipecg,
+            };
+            let mut acc = make_accel(args, &a, &pc)?;
+            baselines::run_gpu(&a, &b, flavor, acc.as_mut(), &opts, &cm)?
+        }
+        other => {
+            return Err(hypipe::Error::Config(format!("unknown method '{other}'")));
+        }
+    };
+    print_report(args, &rep)
+}
+
+/// Run every method on one system and print the comparison table.
+fn cmd_suite(args: &Args) -> Result<()> {
+    let spec = args.flag_or("matrix", "poisson125:12");
+    let a = build_matrix(&spec)?;
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let cfg = HybridConfig {
+        opts: solve_opts(args)?,
+        ..Default::default()
+    };
+    let mut set = hypipe::metrics::ReportSet::new(&spec);
+    set.push(baselines::run_cpu(&a, &b, CpuFlavor::PipecgOpenMp, &cfg.opts, &cfg.cm));
+    set.push(baselines::run_cpu(&a, &b, CpuFlavor::ParalutionOpenMp, &cfg.opts, &cfg.cm));
+    set.push(baselines::run_cpu(&a, &b, CpuFlavor::PetscMpi, &cfg.opts, &cfg.cm));
+    for flavor in [GpuFlavor::PetscPipecg, GpuFlavor::PetscPcg, GpuFlavor::ParalutionPcg] {
+        let mut acc = make_accel(args, &a, &pc)?;
+        set.push(baselines::run_gpu(&a, &b, flavor, acc.as_mut(), &cfg.opts, &cfg.cm)?);
+    }
+    {
+        let mut acc = make_accel(args, &a, &pc)?;
+        set.push(hybrid::hybrid1::solve(&a, &b, &pc, acc.as_mut(), &cfg)?);
+    }
+    {
+        let mut acc = make_accel(args, &a, &pc)?;
+        set.push(hybrid::hybrid2::solve(&a, &b, &pc, acc.as_mut(), &cfg)?);
+    }
+    {
+        let plan = hybrid::hybrid3::plan(&a, &cfg, None, None);
+        let mut acc: Box<dyn GpuCompute> = match backend_name(args).as_str() {
+            "native" => Box::new(NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag)),
+            _ => {
+                let lib = std::rc::Rc::new(runtime::open_default()?);
+                let mut eng = GpuEngine::new(lib, gpu_params(args)?);
+                eng.load_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag)?;
+                Box::new(eng)
+            }
+        };
+        set.push(hybrid::hybrid3::solve(&a, &b, &pc, acc.as_mut(), &plan, &cfg)?);
+    }
+    let mut t = hypipe::util::table::Table::new(
+        &format!("all methods on {spec} (n={}, nnz={})", a.n, a.nnz()),
+        &["method", "backend", "iters", "true residual", "virtual total", "per iter", "speedup"],
+    );
+    let base = set.reports[0].virtual_total;
+    for r in &set.reports {
+        t.row(vec![
+            r.method.clone(),
+            r.backend.clone(),
+            r.result.iterations.to_string(),
+            format!("{:.2e}", r.true_residual),
+            hypipe::util::human_time(r.virtual_total),
+            hypipe::util::human_time(r.virtual_per_iter),
+            format!("{:.2}x", base / r.virtual_total),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_perfmodel(args: &Args) -> Result<()> {
+    let spec = args.flag_or("matrix", "poisson2d:64x64");
+    let a = build_matrix(&spec)?;
+    let cm = CostModel::default();
+    let cfg = HybridConfig::default();
+    let plan = hybrid::hybrid3::plan(&a, &cfg, None, None);
+    let stats = MatrixStats::of(&a);
+    println!("matrix          : {spec} (n={}, nnz={})", stats.n, stats.nnz);
+    println!(
+        "SPMV times      : cpu {} | gpu {}",
+        hypipe::util::human_time(plan.perf.t_cpu),
+        hypipe::util::human_time(plan.perf.t_gpu)
+    );
+    println!(
+        "relative speeds : r_cpu={:.4} r_gpu={:.4}",
+        plan.perf.r_cpu, plan.perf.r_gpu
+    );
+    println!(
+        "1-D split       : N_cpu={} ({} nnz) | N_gpu={} ({} nnz)",
+        plan.split.n_cpu,
+        plan.split.nnz_cpu,
+        plan.split.n_gpu(),
+        plan.split.nnz_gpu
+    );
+    println!(
+        "2-D split       : cpu nnz1={} nnz2={} | gpu nnz1={} nnz2={}",
+        plan.twod.nnz1_cpu, plan.twod.nnz2_cpu, plan.twod.nnz1_gpu, plan.twod.nnz2_gpu
+    );
+    println!(
+        "setup cost      : {}",
+        hypipe::util::human_time(plan.setup_time)
+    );
+    let preds = hybrid::select::predict_iteration_times(&cm, stats.n, stats.nnz);
+    for (m, t) in preds {
+        println!(
+            "predicted iter  : {:16} {}",
+            m.name(),
+            hypipe::util::human_time(t)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let cm = CostModel::default();
+    println!("cost model:");
+    for d in [&cm.cpu, &cm.gpu] {
+        println!(
+            "  {:12} bw={:.0} GB/s launch={:.1}us reduce={:.1}us mem={}",
+            d.name,
+            d.mem_bw / 1e9,
+            d.launch_overhead * 1e6,
+            d.reduce_overhead * 1e6,
+            d.mem_capacity.map(human_bytes).unwrap_or_else(|| "host".into())
+        );
+    }
+    println!(
+        "  link         bw={:.1} GB/s latency={:.0}us",
+        cm.link.bw / 1e9,
+        cm.link.latency * 1e6
+    );
+    if runtime::artifacts_available() {
+        let lib = runtime::open_default()?;
+        let names = lib.names();
+        println!(
+            "artifacts ({} in {}):",
+            names.len(),
+            runtime::default_artifact_dir().display()
+        );
+        for n in names {
+            let m = lib.meta(n)?;
+            println!(
+                "  {:44} [{}] {} in / {} out",
+                n,
+                m.impl_kind,
+                m.inputs.len(),
+                m.outputs.len()
+            );
+        }
+    } else {
+        println!("artifacts: none (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let spec = args.flag_or("matrix", "poisson2d:32x32");
+    let out = args.flag_or("out", "matrix.mtx");
+    let a = build_matrix(&spec)?;
+    hypipe::sparse::mm::write_mm(&a, std::path::Path::new(&out))?;
+    let stats = MatrixStats::of(&a);
+    println!(
+        "wrote {out}: n={} nnz={} ({} CSR)",
+        stats.n,
+        stats.nnz,
+        human_bytes(stats.csr_bytes)
+    );
+    Ok(())
+}

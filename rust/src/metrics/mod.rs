@@ -1,0 +1,207 @@
+//! Run reporting: what every solver execution (hybrid or baseline)
+//! returns — convergence data, virtual-time accounting, wall time, and
+//! optionally the full event trace.
+
+use crate::device::timeline::{Resource, Timeline, ALL_RESOURCES};
+use crate::solver::SolveResult;
+use crate::util::json::{arr, n, obj, s, Json};
+
+/// Outcome of one method execution on one system.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Method label, e.g. "Hybrid-PIPECG-2" or "Paralution-PCG-OpenMP".
+    pub method: String,
+    /// Backend the accelerator role used: "pjrt", "native" or "cpu-only".
+    pub backend: String,
+    pub n: usize,
+    pub nnz: usize,
+    pub result: SolveResult,
+    /// ‖b − A x‖ recomputed after the solve.
+    pub true_residual: f64,
+    /// Virtual seconds for the whole solve (timeline makespan), including
+    /// any setup the paper includes (Hybrid-3's perf model + decomposition).
+    pub virtual_total: f64,
+    /// Virtual seconds per iteration (steady-state average).
+    pub virtual_per_iter: f64,
+    /// Wall-clock seconds of the real execution on this box (not the
+    /// figure metric; recorded for the perf pass).
+    pub wall_seconds: f64,
+    /// Busy seconds per resource.
+    pub busy: Vec<(Resource, f64)>,
+    /// Event trace (None when tracing is disabled for long runs).
+    pub timeline: Option<Timeline>,
+}
+
+impl RunReport {
+    pub fn from_timeline(
+        method: &str,
+        backend: &str,
+        n: usize,
+        nnz: usize,
+        result: SolveResult,
+        true_residual: f64,
+        tl: Timeline,
+        setup_virtual: f64,
+        wall_seconds: f64,
+        keep_trace: bool,
+    ) -> RunReport {
+        let virtual_total = tl.makespan() + setup_virtual;
+        let iters = result.iterations.max(1);
+        RunReport {
+            method: method.to_string(),
+            backend: backend.to_string(),
+            n,
+            nnz,
+            true_residual,
+            virtual_per_iter: tl.makespan() / iters as f64,
+            virtual_total,
+            wall_seconds,
+            busy: ALL_RESOURCES.iter().map(|&r| (r, tl.busy(r))).collect(),
+            timeline: keep_trace.then_some(tl),
+            result,
+        }
+    }
+
+    /// Busy fraction of a resource relative to the makespan.
+    pub fn utilization(&self, r: Resource) -> f64 {
+        let total = self.virtual_total.max(1e-30);
+        self.busy
+            .iter()
+            .find(|(res, _)| *res == r)
+            .map(|(_, b)| b / total)
+            .unwrap_or(0.0)
+    }
+
+    /// JSON record (one row of EXPERIMENTS.md data).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("method", s(&self.method)),
+            ("backend", s(&self.backend)),
+            ("n", n(self.n as f64)),
+            ("nnz", n(self.nnz as f64)),
+            ("iterations", n(self.result.iterations as f64)),
+            ("converged", Json::Bool(self.result.converged)),
+            ("final_norm", n(self.result.final_norm)),
+            ("true_residual", n(self.true_residual)),
+            ("virtual_total_s", n(self.virtual_total)),
+            ("virtual_per_iter_s", n(self.virtual_per_iter)),
+            ("wall_s", n(self.wall_seconds)),
+            (
+                "busy",
+                obj(self
+                    .busy
+                    .iter()
+                    .map(|(r, b)| (r.name(), n(*b)))
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// A labelled collection of reports (one figure/table's data set).
+#[derive(Debug, Clone, Default)]
+pub struct ReportSet {
+    pub title: String,
+    pub reports: Vec<RunReport>,
+}
+
+impl ReportSet {
+    pub fn new(title: &str) -> ReportSet {
+        ReportSet {
+            title: title.to_string(),
+            reports: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: RunReport) {
+        self.reports.push(r);
+    }
+
+    /// Speedup of every report relative to the named reference method
+    /// (the paper's figures present speedup wrt a reference).
+    pub fn speedups_vs(&self, reference: &str) -> Vec<(String, f64)> {
+        let base = self
+            .reports
+            .iter()
+            .find(|r| r.method == reference)
+            .map(|r| r.virtual_total)
+            .unwrap_or(f64::NAN);
+        self.reports
+            .iter()
+            .map(|r| (r.method.clone(), base / r.virtual_total))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", s(&self.title)),
+            ("runs", arr(self.reports.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+}
+
+/// Write a chrome-trace file for a report that kept its timeline.
+pub fn write_chrome_trace(report: &RunReport, path: &std::path::Path) -> crate::Result<()> {
+    let tl = report
+        .timeline
+        .as_ref()
+        .ok_or_else(|| crate::Error::Config("report kept no timeline".into()))?;
+    std::fs::write(path, tl.to_chrome_trace().to_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{SolveResult, StopReason};
+
+    fn dummy_result() -> SolveResult {
+        SolveResult {
+            x: vec![1.0],
+            iterations: 10,
+            final_norm: 1e-6,
+            converged: true,
+            stop: StopReason::Converged,
+            history: vec![],
+        }
+    }
+
+    #[test]
+    fn report_math() {
+        let mut tl = Timeline::default();
+        tl.run(Resource::GpuExec, "k", 2.0, &[]);
+        let rep = RunReport::from_timeline(
+            "m", "native", 100, 500, dummy_result(), 1e-7, tl, 0.5, 0.01, true,
+        );
+        assert!((rep.virtual_total - 2.5).abs() < 1e-12);
+        assert!((rep.virtual_per_iter - 0.2).abs() < 1e-12);
+        assert!(rep.utilization(Resource::GpuExec) > 0.7);
+        assert!(rep.timeline.is_some());
+    }
+
+    #[test]
+    fn speedups_relative_to_reference() {
+        let mut set = ReportSet::new("demo");
+        for (name, dur) in [("slow", 4.0), ("fast", 1.0)] {
+            let mut tl = Timeline::default();
+            tl.run(Resource::CpuExec, "w", dur, &[]);
+            set.push(RunReport::from_timeline(
+                name, "native", 10, 10, dummy_result(), 0.0, tl, 0.0, 0.0, false,
+            ));
+        }
+        let sp = set.speedups_vs("slow");
+        assert_eq!(sp[0].1, 1.0);
+        assert_eq!(sp[1].1, 4.0);
+    }
+
+    #[test]
+    fn json_serializes() {
+        let mut tl = Timeline::default();
+        tl.run(Resource::Host, "h", 0.1, &[]);
+        let rep = RunReport::from_timeline(
+            "m", "pjrt", 5, 9, dummy_result(), 0.0, tl, 0.0, 0.0, false,
+        );
+        let txt = rep.to_json().to_string();
+        assert!(crate::util::json::parse(&txt).is_ok());
+    }
+}

@@ -1,0 +1,275 @@
+//! Performance modelling (paper §IV-C1).
+//!
+//! Five SPMV executions per device over the full matrix yield `t_cpu`,
+//! `t_gpu`; relative speeds `r_cpu = s_cpu / (s_cpu + s_gpu)` (with
+//! `s = nnz / t`) decide the 1-D row split. For matrices that do not fit
+//! the device (§VI-B), the measurement runs on the first `N_pf` rows whose
+//! stored entries fit, mirroring the paper's preliminary heuristic.
+//!
+//! Timing source: the calibrated cost model prices the measured SPMVs on
+//! the *simulated* devices (the devices our figures are about), and the
+//! real kernels also execute so the measurement has the same side effects
+//! (cache warm-up in the paper; real numerics here).
+
+use crate::device::costmodel::{CostModel, OpKind};
+use crate::device::native::GpuCompute;
+use crate::sparse::Csr;
+
+/// Result of the calibration phase.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    /// Per-run virtual seconds for the measured row subset.
+    pub t_cpu: f64,
+    pub t_gpu: f64,
+    /// Entries/second.
+    pub s_cpu: f64,
+    pub s_gpu: f64,
+    /// Relative speeds (sum to 1).
+    pub r_cpu: f64,
+    pub r_gpu: f64,
+    /// Rows actually measured (N_pf; == n when the matrix fits).
+    pub n_measured: usize,
+    /// Virtual cost of the whole calibration (5 runs on each device,
+    /// sequential per device, devices concurrent — paper Fig. 4 runs them
+    /// simultaneously).
+    pub calibration_time: f64,
+}
+
+/// Number of measurement executions per device (paper: five, "so that
+/// effects of cache locality ... are taken into consideration").
+pub const CALIBRATION_RUNS: usize = 5;
+
+/// Measure relative device speeds with `CALIBRATION_RUNS` SPMVs each.
+///
+/// `gpu_rows_budget`: max rows whose entries fit device memory (None = all
+/// rows). `exec`: optionally a real accelerator backend to actually execute
+/// the measurement SPMVs on (numerics side effects only).
+pub fn measure(
+    a: &Csr,
+    cm: &CostModel,
+    gpu_rows_budget: Option<usize>,
+    mut exec: Option<&mut dyn GpuCompute>,
+) -> PerfModel {
+    let n_pf = gpu_rows_budget.unwrap_or(a.n).min(a.n);
+    let nnz_pf = a.row_ptr[n_pf];
+    let op = OpKind::Spmv { n: n_pf, nnz: nnz_pf };
+    let x = vec![1.0; a.n];
+    let mut y = vec![0.0; n_pf];
+    // Really execute (host side always; accelerator side when provided).
+    for _ in 0..CALIBRATION_RUNS {
+        a.spmv_rows_into(0, n_pf, &x, &mut y);
+        if let Some(acc) = exec.as_deref_mut() {
+            if acc.rows() == a.n {
+                let _ = acc.spmv(&x);
+            }
+        }
+    }
+    let t_cpu = cm.on_cpu(op);
+    let t_gpu = cm.on_gpu(op);
+    let s_cpu = nnz_pf as f64 / t_cpu;
+    let s_gpu = nnz_pf as f64 / t_gpu;
+    let r_cpu = s_cpu / (s_cpu + s_gpu);
+    PerfModel {
+        t_cpu,
+        t_gpu,
+        s_cpu,
+        s_gpu,
+        r_cpu,
+        r_gpu: 1.0 - r_cpu,
+        n_measured: n_pf,
+        calibration_time: CALIBRATION_RUNS as f64 * t_cpu.max(t_gpu),
+    }
+}
+
+/// First `N_pf` rows whose stored entries (ELL footprint at the bucketed
+/// width) fit within `capacity_bytes` — the paper's preliminary subset for
+/// out-of-memory matrices ("the first N rows which contain the largest nnz
+/// that the GPU can contain").
+pub fn rows_fitting(a: &Csr, capacity_bytes: u64) -> usize {
+    let k = a.max_row_nnz().max(1) as u64;
+    let per_row = k * 12 + 13 * 8; // ELL slots + vector entries
+    ((capacity_bytes / per_row) as usize).min(a.n)
+}
+
+/// A sampled measurement subset: which rows, how many stored entries.
+#[derive(Debug, Clone)]
+pub struct RowSample {
+    /// Sampled row indices (sorted).
+    pub rows: Vec<usize>,
+    /// Stored entries across the sampled rows.
+    pub nnz: usize,
+}
+
+/// The heuristic the paper lists as future work (§VI-B / §VII): choose
+/// `N_pf` rows whose nnz distribution *represents the whole matrix*
+/// instead of taking the first rows. Strided sampling across the full row
+/// space preserves the global nnz/row mix (prefix sampling is biased
+/// whenever density trends with row index, which is common for meshes
+/// ordered by refinement level).
+pub fn representative_rows(a: &Csr, capacity_bytes: u64) -> RowSample {
+    let budget = rows_fitting(a, capacity_bytes).max(1);
+    if budget >= a.n {
+        return RowSample {
+            rows: (0..a.n).collect(),
+            nnz: a.nnz(),
+        };
+    }
+    // Evenly strided sample of `budget` rows over [0, n).
+    let mut rows = Vec::with_capacity(budget);
+    let mut nnz = 0usize;
+    for i in 0..budget {
+        // Round-to-nearest strided index; always strictly increasing.
+        let r = (i as u128 * a.n as u128 / budget as u128) as usize;
+        rows.push(r);
+        nnz += a.row_ptr[r + 1] - a.row_ptr[r];
+    }
+    RowSample { rows, nnz }
+}
+
+/// [`measure`] on a representative sample (the future-work heuristic):
+/// relative speeds estimated from the sampled rows' nnz, then applied to
+/// the whole matrix.
+pub fn measure_representative(a: &Csr, cm: &CostModel, capacity_bytes: u64) -> PerfModel {
+    let sample = representative_rows(a, capacity_bytes);
+    let n_pf = sample.rows.len();
+    let op = OpKind::Spmv { n: n_pf, nnz: sample.nnz };
+    // Execute the sampled rows for real (side effects as in `measure`).
+    let x = vec![1.0; a.n];
+    for _ in 0..CALIBRATION_RUNS {
+        let mut acc = 0.0;
+        for &r in &sample.rows {
+            for j in a.row_ptr[r]..a.row_ptr[r + 1] {
+                acc += a.vals[j] * x[a.cols[j] as usize];
+            }
+        }
+        std::hint::black_box(acc);
+    }
+    let t_cpu = cm.on_cpu(op);
+    let t_gpu = cm.on_gpu(op);
+    let s_cpu = sample.nnz as f64 / t_cpu;
+    let s_gpu = sample.nnz as f64 / t_gpu;
+    let r_cpu = s_cpu / (s_cpu + s_gpu);
+    PerfModel {
+        t_cpu,
+        t_gpu,
+        s_cpu,
+        s_gpu,
+        r_cpu,
+        r_gpu: 1.0 - r_cpu,
+        n_measured: n_pf,
+        calibration_time: CALIBRATION_RUNS as f64 * t_cpu.max(t_gpu),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn relative_speeds_sum_to_one() {
+        // Large enough that bandwidth (not launch latency) dominates; at
+        // tiny N the launch-latency asymmetry can favour the CPU, which is
+        // also what real hardware does.
+        let a = gen::poisson2d_5pt(100, 100);
+        let m = measure(&a, &CostModel::default(), None, None);
+        assert!((m.r_cpu + m.r_gpu - 1.0).abs() < 1e-12);
+        assert!(m.r_gpu > m.r_cpu, "GPU role must be the faster device");
+        assert_eq!(m.n_measured, a.n);
+    }
+
+    #[test]
+    fn symmetric_devices_split_evenly() {
+        let a = gen::poisson2d_5pt(16, 16);
+        let mut cm = CostModel::default();
+        cm.gpu = cm.cpu.clone();
+        let m = measure(&a, &cm, None, None);
+        assert!((m.r_cpu - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_limits_measured_rows() {
+        let a = gen::poisson2d_5pt(30, 30);
+        let m = measure(&a, &CostModel::default(), Some(100), None);
+        assert_eq!(m.n_measured, 100);
+    }
+
+    #[test]
+    fn rows_fitting_monotone_in_capacity() {
+        let a = gen::poisson3d_125pt(8);
+        let lo = rows_fitting(&a, 100_000);
+        let hi = rows_fitting(&a, 10_000_000);
+        assert!(lo <= hi);
+        assert!(rows_fitting(&a, u64::MAX) == a.n);
+        assert_eq!(rows_fitting(&a, 0), 0);
+    }
+
+    /// The future-work heuristic must out-estimate prefix sampling on a
+    /// matrix whose density trends with row index.
+    #[test]
+    fn representative_sampling_beats_prefix_on_skewed_matrices() {
+        // Row i has ~1 + 18*i/n off-diagonals: prefix rows are far
+        // sparser than the matrix average.
+        let n = 4000;
+        let mut coo = crate::sparse::Coo::new(n);
+        let mut rng = crate::util::prng::Rng::new(99);
+        for i in 0..n {
+            let want = 1 + (18 * i) / n;
+            for _ in 0..want {
+                let j = rng.below(n);
+                if j != i {
+                    coo.push(i, j, -0.1);
+                }
+            }
+            coo.push(i, i, 10.0);
+        }
+        let a = coo.to_csr().unwrap();
+        let cm = CostModel::default();
+        let truth = measure(&a, &cm, None, None);
+        // Budget ~10% of rows.
+        let cap = (rows_fitting(&a, u64::MAX) / 10) as u64
+            * (a.max_row_nnz() as u64 * 12 + 13 * 8);
+        let prefix = measure(&a, &cm, Some(a.n / 10), None);
+        let repr = measure_representative(&a, &cm, cap);
+        let err_prefix = (prefix.r_cpu - truth.r_cpu).abs();
+        let err_repr = (repr.r_cpu - truth.r_cpu).abs();
+        assert!(
+            err_repr <= err_prefix + 1e-12,
+            "representative err {err_repr} vs prefix err {err_prefix}"
+        );
+        // And the sampled nnz/row must track the global mean closely.
+        let sample = representative_rows(&a, cap);
+        let global = a.nnz() as f64 / a.n as f64;
+        let sampled = sample.nnz as f64 / sample.rows.len() as f64;
+        assert!(
+            (sampled - global).abs() / global < 0.15,
+            "sampled density {sampled} vs global {global}"
+        );
+    }
+
+    #[test]
+    fn representative_rows_full_when_fits() {
+        let a = gen::poisson2d_5pt(10, 10);
+        let s = representative_rows(&a, u64::MAX);
+        assert_eq!(s.rows.len(), a.n);
+        assert_eq!(s.nnz, a.nnz());
+    }
+
+    #[test]
+    fn representative_rows_strictly_increasing() {
+        let a = gen::poisson3d_125pt(8);
+        let s = representative_rows(&a, 200_000);
+        assert!(!s.rows.is_empty() && s.rows.len() < a.n);
+        assert!(s.rows.windows(2).all(|w| w[0] < w[1]));
+        assert!(*s.rows.last().unwrap() < a.n);
+    }
+
+    #[test]
+    fn calibration_time_accounts_five_runs() {
+        let a = gen::poisson2d_5pt(12, 12);
+        let cm = CostModel::default();
+        let m = measure(&a, &cm, None, None);
+        let per_run = m.t_cpu.max(m.t_gpu);
+        assert!((m.calibration_time - 5.0 * per_run).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! Preconditioners. The paper uses the Jacobi (diagonal) preconditioner for
+//! all methods (§V-A): cheap setup, cheap application, and it fuses into the
+//! VMA kernels on both devices.
+
+use crate::sparse::Csr;
+
+/// Preconditioner interface: `out = M⁻¹ x`.
+pub trait Preconditioner {
+    fn apply(&self, x: &[f64], out: &mut [f64]);
+
+    fn apply_alloc(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; x.len()];
+        self.apply(x, &mut out);
+        out
+    }
+}
+
+/// Jacobi preconditioner: `M = diag(A)`, applied as an elementwise product
+/// with `1 / a_ii`.
+#[derive(Debug, Clone)]
+pub struct Jacobi {
+    pub inv_diag: Vec<f64>,
+}
+
+impl Jacobi {
+    /// Build from a matrix. Zero diagonals (which cannot occur for SPD
+    /// inputs) fall back to 1.0 so the preconditioner stays a bijection.
+    pub fn from_matrix(a: &Csr) -> Jacobi {
+        let inv_diag = a
+            .diagonal()
+            .into_iter()
+            .map(|d| if d.abs() < f64::MIN_POSITIVE { 1.0 } else { 1.0 / d })
+            .collect();
+        Jacobi { inv_diag }
+    }
+
+    /// Restrict to a row range (for the Hybrid-3 data decomposition).
+    pub fn restrict(&self, r0: usize, r1: usize) -> Jacobi {
+        Jacobi {
+            inv_diag: self.inv_diag[r0..r1].to_vec(),
+        }
+    }
+}
+
+impl Preconditioner for Jacobi {
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        crate::blas::hadamard(&self.inv_diag, x, out);
+    }
+}
+
+/// Identity preconditioner (plain CG).
+#[derive(Debug, Clone, Default)]
+pub struct Identity;
+
+impl Preconditioner for Identity {
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn jacobi_inverts_diagonal() {
+        let a = gen::poisson2d_5pt(4, 4);
+        let m = Jacobi::from_matrix(&a);
+        let x = vec![4.0; a.n];
+        let y = m.apply_alloc(&x);
+        // diag of 5pt poisson is 4 -> y = 1
+        assert!(y.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn restrict_slices() {
+        let a = gen::poisson2d_5pt(3, 3);
+        let m = Jacobi::from_matrix(&a);
+        let r = m.restrict(2, 5);
+        assert_eq!(r.inv_diag.len(), 3);
+        assert_eq!(r.inv_diag[0], m.inv_diag[2]);
+    }
+
+    #[test]
+    fn identity_is_identity() {
+        let x = vec![1.0, -2.0, 3.0];
+        let y = Identity.apply_alloc(&x);
+        assert_eq!(x, y);
+    }
+}

@@ -1,0 +1,283 @@
+//! Artifact registry: manifest parsing, lazy PJRT compilation with an
+//! executable cache, and typed execution helpers.
+//!
+//! HLO **text** is the interchange format (never serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::util::json;
+use crate::{Error, Result};
+
+/// Dtype of a tensor in the artifact contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F64,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f64" => Ok(DType::F64),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Artifact(format!("unknown dtype {other}"))),
+        }
+    }
+}
+
+/// One tensor in an artifact's input or output list.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one compiled graph.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// "pallas" or "jnp" — which L1 composition was lowered (recorded for
+    /// reporting; the contract is identical).
+    pub impl_kind: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// Host-side argument for an artifact call.
+pub enum Arg<'a> {
+    F64(&'a [f64]),
+    I32(&'a [i32]),
+    Scalar(f64),
+}
+
+/// The artifact library: manifest + lazily compiled executables.
+///
+/// Not `Send`: all PJRT interaction stays on the coordinator thread (the
+/// virtual timeline provides the concurrency model; DESIGN.md §1).
+pub struct ArtifactLibrary {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    metas: HashMap<String, ArtifactMeta>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactLibrary {
+    /// Open `dir` (must contain `manifest.json`). Compiles nothing yet.
+    pub fn open(dir: &Path) -> Result<ArtifactLibrary> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let root = json::parse(&text)
+            .map_err(|e| Error::Artifact(format!("manifest.json malformed: {e}")))?;
+        let mut metas = HashMap::new();
+        let arts = root
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| Error::Artifact("manifest missing 'artifacts'".into()))?;
+        for (name, entry) in arts {
+            let parse_tensors = |key: &str| -> Result<Vec<TensorMeta>> {
+                entry
+                    .get(key)
+                    .as_arr()
+                    .ok_or_else(|| Error::Artifact(format!("{name}: missing {key}")))?
+                    .iter()
+                    .map(|t| {
+                        let t = t
+                            .as_arr()
+                            .ok_or_else(|| Error::Artifact(format!("{name}: bad tensor")))?;
+                        Ok(TensorMeta {
+                            name: t[0].as_str().unwrap_or("?").to_string(),
+                            shape: t[1]
+                                .as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .map(|d| d.as_usize().unwrap_or(0))
+                                .collect(),
+                            dtype: DType::parse(t[2].as_str().unwrap_or("?"))?,
+                        })
+                    })
+                    .collect()
+            };
+            metas.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: entry
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| Error::Artifact(format!("{name}: missing file")))?
+                        .to_string(),
+                    impl_kind: entry.get("impl").as_str().unwrap_or("?").to_string(),
+                    inputs: parse_tensors("inputs")?,
+                    outputs: parse_tensors("outputs")?,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactLibrary {
+            dir: dir.to_path_buf(),
+            client,
+            metas,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("artifact '{name}' not in manifest")))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.metas.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.metas.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Get (compiling and caching on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.meta(name)?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a host slice as a device buffer (used to keep the big ELL
+    /// arrays device-resident across iterations — the L3 hot-path
+    /// optimization).
+    pub fn upload_f64(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_scalar(&self, v: f64) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    /// Execute `name` with pre-uploaded buffers, returning output literals
+    /// (the root tuple is decomposed). Inputs are validated against the
+    /// manifest by count only — shape errors surface from XLA itself.
+    pub fn call_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let meta = self.meta(name)?;
+        if args.len() != meta.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                args.len()
+            )));
+        }
+        let exe = self.executable(name)?;
+        let out = exe.execute_b(args)?;
+        let mut lit = out[0][0].to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: manifest declares {} outputs, executable returned {}",
+                meta.outputs.len(),
+                parts.len()
+            )));
+        }
+        Ok(parts)
+    }
+
+    /// Convenience: execute with host-slice args (uploads everything).
+    pub fn call(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+        let mut bufs = Vec::with_capacity(args.len());
+        for a in args {
+            bufs.push(match a {
+                Arg::F64(v) => self.upload_f64(v, &[v.len()])?,
+                Arg::I32(v) => self.upload_i32(v, &[v.len()])?,
+                Arg::Scalar(v) => self.upload_scalar(*v)?,
+            });
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.call_buffers(name, &refs)
+    }
+}
+
+/// Extract an f64 vector from an output literal.
+pub fn to_f64_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f64>()?)
+}
+
+/// Extract an f64 scalar from an output literal.
+pub fn to_f64_scalar(lit: &xla::Literal) -> Result<f64> {
+    Ok(lit.get_first_element::<f64>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Manifest parsing from a synthetic manifest (no PJRT needed beyond
+    /// client creation; artifact files may be absent).
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join("hypipe_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"artifacts":{"spmv_n1024_k8":{"file":"spmv_n1024_k8.hlo.txt","impl":"pallas","inputs":[["ell_val",[1024,8],"f64"],["ell_col",[1024,8],"i32"],["x",[1024],"f64"]],"outputs":[["y",[1024],"f64"]]}}}"#,
+        )
+        .unwrap();
+        let lib = ArtifactLibrary::open(&dir).unwrap();
+        assert!(lib.has("spmv_n1024_k8"));
+        let m = lib.meta("spmv_n1024_k8").unwrap();
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[1].dtype, DType::I32);
+        assert_eq!(m.inputs[0].elements(), 8192);
+        assert_eq!(m.outputs[0].shape, vec![1024]);
+        assert!(lib.meta("nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_is_friendly_error() {
+        let Err(e) = ArtifactLibrary::open(Path::new("/nonexistent/zzz")) else {
+            panic!("open should fail");
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,113 @@
+//! Shape bucketing: mapping arbitrary (n, k) matrices onto the fixed shape
+//! buckets the AOT artifacts were lowered for (mirrors `aot.py`).
+//!
+//! Padding contract (must match `python/compile/aot.py` and
+//! `sparse::Ell::from_csr_padded`): rows pad with identity rows, slots pad
+//! with self-pointing zeros, vectors pad with zeros, `inv_diag` pads with
+//! ones. All reductions then stay exact on the padded domain.
+
+use crate::{Error, Result};
+
+/// n buckets lowered by `make artifacts` (keep in sync with aot.py).
+pub const N_BUCKETS: [usize; 8] = [1024, 2048, 4096, 16384, 32768, 65536, 131072, 262144];
+/// k buckets lowered by `make artifacts`.
+pub const K_BUCKETS: [usize; 4] = [8, 32, 64, 128];
+
+/// Smallest n bucket that fits `n`.
+pub fn bucket_n(n: usize) -> Result<usize> {
+    N_BUCKETS
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .ok_or_else(|| {
+            Error::Artifact(format!(
+                "n={n} exceeds the largest AOT bucket {}; rerun `make artifacts` \
+                 with a larger --n-buckets list",
+                N_BUCKETS[N_BUCKETS.len() - 1]
+            ))
+        })
+}
+
+/// Smallest k bucket that fits `k`.
+pub fn bucket_k(k: usize) -> Result<usize> {
+    K_BUCKETS
+        .iter()
+        .copied()
+        .find(|&b| b >= k)
+        .ok_or_else(|| {
+            Error::Artifact(format!(
+                "max row nnz {k} exceeds the largest AOT k bucket {}",
+                K_BUCKETS[K_BUCKETS.len() - 1]
+            ))
+        })
+}
+
+/// Hybrid-3 panel bucket: the panel (`nl` local rows) is lowered at the
+/// full bucket and at half the full bucket; choose the smaller that fits.
+pub fn bucket_panel(nl: usize, n_bucket: usize) -> Result<usize> {
+    let half = (n_bucket / 2).max(1024);
+    if nl <= half {
+        Ok(half)
+    } else if nl <= n_bucket {
+        Ok(n_bucket)
+    } else {
+        Err(Error::Artifact(format!(
+            "panel rows {nl} exceed full bucket {n_bucket}"
+        )))
+    }
+}
+
+/// Pad a vector with zeros up to `len`.
+pub fn pad_vec(v: &[f64], len: usize) -> Vec<f64> {
+    assert!(len >= v.len());
+    let mut out = Vec::with_capacity(len);
+    out.extend_from_slice(v);
+    out.resize(len, 0.0);
+    out
+}
+
+/// Pad `inv_diag` with ones (identity rows of the padded system).
+pub fn pad_diag(v: &[f64], len: usize) -> Vec<f64> {
+    assert!(len >= v.len());
+    let mut out = Vec::with_capacity(len);
+    out.extend_from_slice(v);
+    out.resize(len, 1.0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_n(1).unwrap(), 1024);
+        assert_eq!(bucket_n(1024).unwrap(), 1024);
+        assert_eq!(bucket_n(1025).unwrap(), 2048);
+        assert_eq!(bucket_n(262144).unwrap(), 262144);
+        assert!(bucket_n(262145).is_err());
+        assert_eq!(bucket_k(5).unwrap(), 8);
+        assert_eq!(bucket_k(125).unwrap(), 128);
+        assert!(bucket_k(129).is_err());
+    }
+
+    #[test]
+    fn panel_buckets() {
+        assert_eq!(bucket_panel(500, 4096).unwrap(), 2048);
+        assert_eq!(bucket_panel(3000, 4096).unwrap(), 4096);
+        assert_eq!(bucket_panel(1000, 2048).unwrap(), 1024);
+        assert!(bucket_panel(5000, 4096).is_err());
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad_vec(&[1.0, 2.0], 4), vec![1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(pad_diag(&[2.0], 3), vec![2.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn buckets_are_sorted_and_match_aot() {
+        assert!(N_BUCKETS.windows(2).all(|w| w[0] < w[1]));
+        assert!(K_BUCKETS.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,35 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`, produced once by `make artifacts`) and executes them on
+//! the CPU PJRT client. This is the only module that talks to the `xla`
+//! crate; Python never runs on the request path.
+
+pub mod artifacts;
+pub mod buckets;
+
+pub use artifacts::{ArtifactLibrary, ArtifactMeta, TensorMeta};
+
+/// Locate the artifacts directory: `$HYPIPE_ARTIFACTS`, else `./artifacts`,
+/// else `../artifacts` (for tests running inside `rust/`).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("HYPIPE_ARTIFACTS") {
+        return p.into();
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = std::path::Path::new(cand);
+        if p.join("manifest.json").exists() {
+            return p.to_path_buf();
+        }
+    }
+    "artifacts".into()
+}
+
+/// True when `make artifacts` has been run (integration tests and examples
+/// use this to skip-with-notice instead of failing).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+/// Open the default artifact library.
+pub fn open_default() -> crate::Result<ArtifactLibrary> {
+    ArtifactLibrary::open(&default_artifact_dir())
+}

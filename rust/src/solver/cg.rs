@@ -1,0 +1,96 @@
+//! Plain Conjugate Gradient (Hestenes & Stiefel 1952) — unpreconditioned
+//! baseline used in tests.
+
+use crate::blas;
+use crate::sparse::Csr;
+
+use super::{is_bad, SolveOpts, SolveResult, StopReason};
+
+/// Solve `A x = b` with CG from `x₀ = 0`.
+pub fn solve(a: &Csr, b: &[f64], opts: &SolveOpts) -> SolveResult {
+    let n = a.n;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let mut rr = blas::dot(&r, &r);
+    let mut history = Vec::new();
+    let mut norm = rr.sqrt();
+    if opts.record_history {
+        history.push(norm);
+    }
+    for it in 0..opts.max_iters {
+        if norm < opts.tol {
+            return SolveResult {
+                x,
+                iterations: it,
+                final_norm: norm,
+                converged: true,
+                stop: StopReason::Converged,
+                history,
+            };
+        }
+        a.spmv_into(&p, &mut ap);
+        let pap = blas::dot(&p, &ap);
+        if is_bad(pap) {
+            return SolveResult {
+                x,
+                iterations: it,
+                final_norm: norm,
+                converged: false,
+                stop: StopReason::Breakdown,
+                history,
+            };
+        }
+        let alpha = rr / pap;
+        blas::axpy(alpha, &p, &mut x);
+        blas::axpy(-alpha, &ap, &mut r);
+        let rr_new = blas::dot(&r, &r);
+        let beta = rr_new / rr;
+        rr = rr_new;
+        blas::xpay(&r, beta, &mut p);
+        norm = rr.sqrt();
+        if opts.record_history {
+            history.push(norm);
+        }
+    }
+    SolveResult {
+        x,
+        iterations: opts.max_iters,
+        final_norm: norm,
+        converged: norm < opts.tol,
+        stop: if norm < opts.tol {
+            StopReason::Converged
+        } else {
+            StopReason::MaxIterations
+        },
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn solves_identity() {
+        let a = gen::banded_spd(10, 1.0, 3); // nearly diagonal
+        let b = vec![1.0; 10];
+        let r = solve(&a, &b, &SolveOpts::default());
+        assert!(r.converged);
+        assert!(r.true_residual(&a, &b) < 1e-4);
+    }
+
+    #[test]
+    fn exact_in_n_steps_small() {
+        // CG terminates in ≤ n steps in exact arithmetic; with fp noise
+        // allow a couple extra.
+        let a = gen::poisson2d_5pt(3, 3);
+        let b = a.mul_ones();
+        let r = solve(&a, &b, &SolveOpts::default());
+        assert!(r.converged);
+        assert!(r.iterations <= a.n + 2, "iterations {}", r.iterations);
+    }
+}

@@ -1,0 +1,139 @@
+//! Chronopoulos–Gear CG (s-step form with a single reduction per
+//! iteration) — the intermediate algorithm between PCG and PIPECG
+//! (paper §I, ref [9]). PIPECG is Chronopoulos–Gear with the PC+SPMV
+//! hoisted past the dot products.
+
+use crate::blas;
+use crate::precond::Preconditioner;
+use crate::sparse::Csr;
+
+use super::{is_bad, SolveOpts, SolveResult, StopReason};
+
+/// Solve `A x = b` with Chronopoulos–Gear PCG from `x₀ = 0`.
+///
+/// Per iteration: one SPMV (`w = A u`), one PC apply, and a *single* fused
+/// reduction computing γ = (r,u), δ = (w,u) and ‖u‖² together.
+pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> SolveResult {
+    let n = a.n;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut u = vec![0.0; n];
+    m.apply(&r, &mut u);
+    let mut w = a.spmv(&u);
+
+    let (mut gamma, mut delta, mut nn) = blas::fused_dots3(&r, &w, &u);
+    let mut norm = nn.sqrt();
+
+    let mut p = vec![0.0; n];
+    let mut s = vec![0.0; n];
+    let mut q = vec![0.0; n]; // M⁻¹ s
+    let mut z = vec![0.0; n]; // A q  (recurrence for w)
+    let mut mw = vec![0.0; n]; // M⁻¹ w scratch
+    let mut gamma_prev = 0.0;
+    let mut alpha_prev = 0.0;
+    let mut history = Vec::new();
+    if opts.record_history {
+        history.push(norm);
+    }
+
+    for it in 0..opts.max_iters {
+        if norm < opts.tol {
+            return SolveResult {
+                x,
+                iterations: it,
+                final_norm: norm,
+                converged: true,
+                stop: StopReason::Converged,
+                history,
+            };
+        }
+        let (alpha, beta);
+        if it > 0 {
+            beta = gamma / gamma_prev;
+            let denom = delta - beta * gamma / alpha_prev;
+            if is_bad(denom) {
+                return SolveResult {
+                    x,
+                    iterations: it,
+                    final_norm: norm,
+                    converged: false,
+                    stop: StopReason::Breakdown,
+                    history,
+                };
+            }
+            alpha = gamma / denom;
+        } else {
+            beta = 0.0;
+            if is_bad(delta) {
+                return SolveResult {
+                    x,
+                    iterations: it,
+                    final_norm: norm,
+                    converged: false,
+                    stop: StopReason::Breakdown,
+                    history,
+                };
+            }
+            alpha = gamma / delta;
+        }
+
+        // p = u + β p ; s = w + β s
+        blas::xpay(&u, beta, &mut p);
+        blas::xpay(&w, beta, &mut s);
+        // q = M⁻¹ s ; z = A q  (computed via the recurrences' definitions)
+        m.apply(&s, &mut q);
+        a.spmv_into(&q, &mut z);
+        // x += α p ; r −= α s ; u −= α q ; w −= α z
+        blas::axpy(alpha, &p, &mut x);
+        blas::axpy(-alpha, &s, &mut r);
+        blas::axpy(-alpha, &q, &mut u);
+        blas::axpy(-alpha, &z, &mut w);
+
+        // Single fused reduction.
+        gamma_prev = gamma;
+        alpha_prev = alpha;
+        let (g, d, n2) = blas::fused_dots3(&r, &w, &u);
+        gamma = g;
+        delta = d;
+        norm = n2.sqrt();
+        // Maintain w = A u against drift: w recurrence is exact in exact
+        // arithmetic; we do not re-orthogonalize (matching the paper).
+        let _ = &mut mw;
+        if opts.record_history {
+            history.push(norm);
+        }
+    }
+    let converged = norm < opts.tol;
+    SolveResult {
+        x,
+        iterations: opts.max_iters,
+        final_norm: norm,
+        converged,
+        stop: if converged {
+            StopReason::Converged
+        } else {
+            StopReason::MaxIterations
+        },
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::Jacobi;
+    use crate::sparse::gen;
+
+    #[test]
+    fn matches_pcg_solution() {
+        let a = gen::poisson2d_5pt(10, 10);
+        let b = a.mul_ones();
+        let m = Jacobi::from_matrix(&a);
+        let opts = SolveOpts::default();
+        let r1 = super::super::pcg::solve(&a, &b, &m, &opts);
+        let r2 = solve(&a, &b, &m, &opts);
+        assert!(r1.converged && r2.converged);
+        assert!(crate::util::max_abs_diff(&r1.x, &r2.x) < 1e-4);
+    }
+}

@@ -1,0 +1,159 @@
+//! Sequential reference solvers.
+//!
+//! These are the mathematical ground truth the hybrid schedulers are
+//! validated against: plain CG, PCG (paper Algorithm 1), Chronopoulos–Gear
+//! CG (single-reduction PCG, the basis of PIPECG) and PIPECG (paper
+//! Algorithm 2).
+
+pub mod cg;
+pub mod chrono_gear;
+pub mod pcg;
+pub mod pipecg;
+pub mod pipecg_rr;
+
+/// Stopping configuration shared by all solvers. Matches the paper's setup:
+/// absolute tolerance `1e-5` on the preconditioned residual norm, max
+/// 10 000 iterations.
+#[derive(Debug, Clone)]
+pub struct SolveOpts {
+    /// Absolute tolerance on √(u,u) (preconditioned residual norm).
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// Record the residual norm each iteration (costs one Vec push).
+    pub record_history: bool,
+}
+
+impl Default for SolveOpts {
+    fn default() -> Self {
+        SolveOpts {
+            tol: 1e-5,
+            max_iters: 10_000,
+            record_history: true,
+        }
+    }
+}
+
+/// Why a solve stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    Converged,
+    MaxIterations,
+    /// Breakdown: a zero/NaN denominator in α or β (indicates a non-SPD
+    /// system or severe rounding).
+    Breakdown,
+}
+
+/// Result of a linear solve.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub final_norm: f64,
+    pub converged: bool,
+    pub stop: StopReason,
+    /// Preconditioned residual norm per iteration (if recorded).
+    pub history: Vec<f64>,
+}
+
+impl SolveResult {
+    /// True residual `‖b − A x‖₂` (recomputed, not the recursive residual).
+    pub fn true_residual(&self, a: &crate::sparse::Csr, b: &[f64]) -> f64 {
+        let ax = a.spmv(&self.x);
+        let mut acc = 0.0;
+        for i in 0..b.len() {
+            let d = b[i] - ax[i];
+            acc += d * d;
+        }
+        acc.sqrt()
+    }
+}
+
+/// Shared helper: detect breakdown values.
+pub(crate) fn is_bad(v: f64) -> bool {
+    !v.is_finite() || v == 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::Jacobi;
+    use crate::sparse::gen;
+
+    /// All four reference solvers must agree on a moderately conditioned
+    /// SPD system.
+    #[test]
+    fn all_solvers_agree() {
+        let a = gen::poisson2d_5pt(12, 12);
+        let b = a.mul_ones();
+        let m = Jacobi::from_matrix(&a);
+        let opts = SolveOpts::default();
+
+        let r_cg = cg::solve(&a, &b, &opts);
+        let r_pcg = pcg::solve(&a, &b, &m, &opts);
+        let r_cgr = chrono_gear::solve(&a, &b, &m, &opts);
+        let r_pipe = pipecg::solve(&a, &b, &m, &opts);
+
+        for (name, r) in [
+            ("cg", &r_cg),
+            ("pcg", &r_pcg),
+            ("chrono_gear", &r_cgr),
+            ("pipecg", &r_pipe),
+        ] {
+            assert!(r.converged, "{name} did not converge");
+            let tr = r.true_residual(&a, &b);
+            assert!(tr < 1e-4, "{name} true residual {tr}");
+        }
+        // Same solution up to tolerance.
+        assert!(crate::util::max_abs_diff(&r_pcg.x, &r_pipe.x) < 1e-4);
+        assert!(crate::util::max_abs_diff(&r_pcg.x, &r_cgr.x) < 1e-4);
+    }
+
+    /// PIPECG is algebraically equivalent to PCG: iteration counts must be
+    /// close (identical in exact arithmetic).
+    #[test]
+    fn pipecg_iteration_count_matches_pcg() {
+        let a = gen::banded_spd(400, 12.0, 5);
+        let b = a.mul_ones();
+        let m = Jacobi::from_matrix(&a);
+        let opts = SolveOpts::default();
+        let r_pcg = pcg::solve(&a, &b, &m, &opts);
+        let r_pipe = pipecg::solve(&a, &b, &m, &opts);
+        assert!(r_pcg.converged && r_pipe.converged);
+        let diff = (r_pcg.iterations as i64 - r_pipe.iterations as i64).abs();
+        assert!(
+            diff <= 2,
+            "PCG {} vs PIPECG {} iterations",
+            r_pcg.iterations,
+            r_pipe.iterations
+        );
+    }
+
+    #[test]
+    fn max_iters_respected() {
+        let a = gen::poisson2d_5pt(30, 30);
+        let b = a.mul_ones();
+        let m = Jacobi::from_matrix(&a);
+        let opts = SolveOpts {
+            tol: 1e-30,
+            max_iters: 5,
+            record_history: true,
+        };
+        let r = pipecg::solve(&a, &b, &m, &opts);
+        assert!(!r.converged);
+        assert_eq!(r.stop, StopReason::MaxIterations);
+        assert_eq!(r.iterations, 5);
+    }
+
+    #[test]
+    fn history_is_monotonically_convergent_overall() {
+        let a = gen::poisson2d_5pt(16, 16);
+        let b = a.mul_ones();
+        let m = Jacobi::from_matrix(&a);
+        let r = pipecg::solve(&a, &b, &m, &SolveOpts::default());
+        assert!(r.history.len() >= 2);
+        // CG residuals are not strictly monotone, but the last must be far
+        // below the first.
+        assert!(r.history.last().unwrap() < &(r.history[0] * 1e-2));
+    }
+}

@@ -1,0 +1,250 @@
+//! Pipelined PCG — paper **Algorithm 2** (Ghysels & Vanroose 2014), the
+//! algorithm all three hybrid methods execute. Line numbers from the paper
+//! are preserved in comments.
+//!
+//! The defining property: the dot products (lines 18–20) and the PC + SPMV
+//! (lines 21–22) have **no data dependence within an iteration**, so a
+//! heterogeneous system can run them simultaneously on different devices —
+//! exactly what `hybrid::{hybrid1, hybrid2, hybrid3}` do. This module is the
+//! sequential reference; it additionally exposes [`PipecgState`] and
+//! [`step`] so the hybrid schedulers and tests can drive iterations
+//! one at a time and compare state vectors after every step.
+
+use crate::blas::{self, PipecgVectors};
+use crate::precond::Preconditioner;
+use crate::sparse::Csr;
+
+use super::{is_bad, SolveOpts, SolveResult, StopReason};
+
+/// Full working set of PIPECG (Algorithm 2).
+#[derive(Debug, Clone)]
+pub struct PipecgState {
+    pub x: Vec<f64>,
+    pub r: Vec<f64>,
+    pub u: Vec<f64>, // M⁻¹ r
+    pub w: Vec<f64>, // A u
+    pub z: Vec<f64>, // A q (recurrence)
+    pub q: Vec<f64>, // M⁻¹ s
+    pub s: Vec<f64>, // A p
+    pub p: Vec<f64>,
+    pub m: Vec<f64>, // M⁻¹ w
+    pub n: Vec<f64>, // A m
+    pub gamma: f64,
+    pub delta: f64,
+    pub norm: f64,
+    pub gamma_prev: f64,
+    pub alpha_prev: f64,
+    pub iteration: usize,
+}
+
+impl PipecgState {
+    /// Initialization steps (Alg. 2 lines 1–3) from `x₀ = 0`.
+    pub fn init<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M) -> PipecgState {
+        let nn = a.n;
+        assert_eq!(b.len(), nn);
+        // line 1: r₀ = b − A x₀ ; u₀ = M⁻¹ r₀ ; w₀ = A u₀
+        let x = vec![0.0; nn];
+        let r = b.to_vec();
+        let mut u = vec![0.0; nn];
+        pc.apply(&r, &mut u);
+        let w = a.spmv(&u);
+        // line 2: γ₀ = (r₀,u₀) ; δ = (w₀,u₀) ; norm₀ = √(u₀,u₀)
+        let (gamma, delta, nsq) = blas::fused_dots3(&r, &w, &u);
+        // line 3: m₀ = M⁻¹ w₀ ; n₀ = A m₀
+        let mut m = vec![0.0; nn];
+        pc.apply(&w, &mut m);
+        let n = a.spmv(&m);
+        PipecgState {
+            x,
+            r,
+            u,
+            w,
+            z: vec![0.0; nn],
+            q: vec![0.0; nn],
+            s: vec![0.0; nn],
+            p: vec![0.0; nn],
+            m,
+            n,
+            gamma,
+            delta,
+            norm: nsq.sqrt(),
+            gamma_prev: 0.0,
+            alpha_prev: 0.0,
+            iteration: 0,
+        }
+    }
+
+    /// Scalar update (Alg. 2 lines 5–9). Returns `(α, β)`, or `None` on
+    /// breakdown.
+    pub fn scalars(&self) -> Option<(f64, f64)> {
+        if self.iteration > 0 {
+            let beta = self.gamma / self.gamma_prev;
+            let denom = self.delta - beta * self.gamma / self.alpha_prev;
+            if is_bad(denom) || !beta.is_finite() {
+                return None;
+            }
+            Some((self.gamma / denom, beta))
+        } else {
+            if is_bad(self.delta) {
+                return None;
+            }
+            Some((self.gamma / self.delta, 0.0))
+        }
+    }
+}
+
+/// One full PIPECG iteration (lines 5–22) on the sequential reference path.
+/// Returns `false` on breakdown.
+pub fn step<M: Preconditioner>(a: &Csr, pc: &M, st: &mut PipecgState) -> bool {
+    let Some((alpha, beta)) = st.scalars() else {
+        return false;
+    };
+    // lines 10–17: the eight merged VMAs (fused, §V-B.2)
+    blas::fused_pipecg_update(
+        &st.n,
+        &st.m,
+        alpha,
+        beta,
+        &mut PipecgVectors {
+            z: &mut st.z,
+            q: &mut st.q,
+            s: &mut st.s,
+            p: &mut st.p,
+            x: &mut st.x,
+            r: &mut st.r,
+            u: &mut st.u,
+            w: &mut st.w,
+        },
+    );
+    // lines 18–20: γ, δ, norm (fused)
+    let (g, d, nsq) = blas::fused_dots3(&st.r, &st.w, &st.u);
+    st.gamma_prev = st.gamma;
+    st.alpha_prev = alpha;
+    st.gamma = g;
+    st.delta = d;
+    st.norm = nsq.sqrt();
+    // line 21: m = M⁻¹ w ; line 22: n = A m
+    pc.apply(&st.w, &mut st.m);
+    a.spmv_into(&st.m, &mut st.n);
+    st.iteration += 1;
+    true
+}
+
+/// Solve `A x = b` with sequential PIPECG from `x₀ = 0`.
+pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &SolveOpts) -> SolveResult {
+    let mut st = PipecgState::init(a, b, pc);
+    let mut history = Vec::new();
+    if opts.record_history {
+        history.push(st.norm);
+    }
+    for it in 0..opts.max_iters {
+        if st.norm < opts.tol {
+            return SolveResult {
+                x: st.x,
+                iterations: it,
+                final_norm: st.norm,
+                converged: true,
+                stop: StopReason::Converged,
+                history,
+            };
+        }
+        if !step(a, pc, &mut st) {
+            return SolveResult {
+                x: st.x,
+                iterations: it,
+                final_norm: st.norm,
+                converged: false,
+                stop: StopReason::Breakdown,
+                history,
+            };
+        }
+        if opts.record_history {
+            history.push(st.norm);
+        }
+    }
+    let converged = st.norm < opts.tol;
+    SolveResult {
+        x: st.x,
+        iterations: opts.max_iters,
+        final_norm: st.norm,
+        converged,
+        stop: if converged {
+            StopReason::Converged
+        } else {
+            StopReason::MaxIterations
+        },
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::Jacobi;
+    use crate::sparse::gen;
+    use crate::util::prng::Rng;
+
+    /// The PIPECG auxiliary recurrences must track their definitions:
+    /// u = M⁻¹r, w = Au, m = M⁻¹w, n = Am (within rounding drift).
+    #[test]
+    fn recurrence_invariants_hold() {
+        let a = gen::poisson2d_5pt(8, 8);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let mut st = PipecgState::init(&a, &b, &pc);
+        for _ in 0..20 {
+            assert!(step(&a, &pc, &mut st));
+            let u_def = pc.apply_alloc(&st.r);
+            let w_def = a.spmv(&st.u);
+            let m_def = pc.apply_alloc(&st.w);
+            let n_def = a.spmv(&st.m);
+            assert!(crate::util::max_abs_diff(&st.u, &u_def) < 1e-8);
+            assert!(crate::util::max_abs_diff(&st.w, &w_def) < 1e-8);
+            assert!(crate::util::max_abs_diff(&st.m, &m_def) < 1e-8);
+            assert!(crate::util::max_abs_diff(&st.n, &n_def) < 1e-8);
+        }
+    }
+
+    /// r must equal b − A x (recursive residual vs true residual drift).
+    #[test]
+    fn residual_recurrence_tracks_truth() {
+        let a = gen::banded_spd(200, 6.0, 17);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let mut st = PipecgState::init(&a, &b, &pc);
+        for _ in 0..30 {
+            assert!(step(&a, &pc, &mut st));
+        }
+        let ax = a.spmv(&st.x);
+        let true_r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        assert!(crate::util::max_abs_diff(&st.r, &true_r) < 1e-8);
+    }
+
+    #[test]
+    fn random_spd_systems_converge() {
+        let mut rng = Rng::new(2024);
+        for _ in 0..5 {
+            let n = rng.range(50, 300);
+            let a = gen::banded_spd(n, rng.range_f64(4.0, 24.0), rng.next_u64());
+            let b = a.mul_ones();
+            let pc = Jacobi::from_matrix(&a);
+            let r = solve(&a, &b, &pc, &SolveOpts::default());
+            assert!(r.converged, "n={n} failed to converge");
+            assert!(r.true_residual(&a, &b) < 1e-3);
+        }
+    }
+
+    /// The known exact solution setup from the paper: x₀ = 1/√N · 1.
+    #[test]
+    fn recovers_known_solution() {
+        let a = gen::poisson2d_5pt(10, 10);
+        let b = a.mul_ones(); // b = A · (1/√N)·1
+        let pc = Jacobi::from_matrix(&a);
+        let r = solve(&a, &b, &pc, &SolveOpts { tol: 1e-10, ..Default::default() });
+        assert!(r.converged);
+        let expect = 1.0 / (a.n as f64).sqrt();
+        for &xi in &r.x {
+            assert!((xi - expect).abs() < 1e-6, "xi={xi} expect={expect}");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Coordinate-format sparse matrix (assembly format).
+
+use crate::{Error, Result};
+
+/// A square sparse matrix in coordinate (triplet) form.
+///
+/// Duplicate entries are *summed* on conversion to CSR, matching the usual
+/// finite-element assembly convention.
+#[derive(Debug, Clone)]
+pub struct Coo {
+    pub n: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(n: usize) -> Self {
+        Coo {
+            n,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(n: usize, cap: usize) -> Self {
+        Coo {
+            n,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Append one entry. Bounds are checked in debug builds and on conversion.
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.n && c < self.n, "coo entry out of bounds");
+        self.rows.push(r as u32);
+        self.cols.push(c as u32);
+        self.vals.push(v);
+    }
+
+    /// Append both (r,c,v) and (c,r,v) (skips the duplicate when r == c).
+    pub fn push_sym(&mut self, r: usize, c: usize, v: f64) {
+        self.push(r, c, v);
+        if r != c {
+            self.push(c, r, v);
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Convert to CSR, summing duplicates and dropping explicit zeros
+    /// produced by cancellation.
+    pub fn to_csr(&self) -> Result<super::Csr> {
+        let n = self.n;
+        for (&r, &c) in self.rows.iter().zip(&self.cols) {
+            if r as usize >= n || c as usize >= n {
+                return Err(Error::Sparse(format!(
+                    "COO entry ({r},{c}) out of bounds for n={n}"
+                )));
+            }
+        }
+        // Counting sort by row.
+        let mut counts = vec![0usize; n + 1];
+        for &r in &self.rows {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let mut order: Vec<u32> = vec![0; self.nnz()];
+        {
+            let mut next = counts.clone();
+            for (idx, &r) in self.rows.iter().enumerate() {
+                order[next[r as usize]] = idx as u32;
+                next[r as usize] += 1;
+            }
+        }
+        // Per-row: sort by column, merge duplicates.
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut cols: Vec<u32> = Vec::with_capacity(self.nnz());
+        let mut vals: Vec<f64> = Vec::with_capacity(self.nnz());
+        row_ptr.push(0usize);
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for r in 0..n {
+            scratch.clear();
+            for &idx in &order[counts[r]..counts[r + 1]] {
+                scratch.push((self.cols[idx as usize], self.vals[idx as usize]));
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < scratch.len() {
+                let c = scratch[i].0;
+                let mut v = scratch[i].1;
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                cols.push(c);
+                vals.push(v);
+                i = j;
+            }
+            row_ptr.push(cols.len());
+        }
+        Ok(super::Csr {
+            n,
+            row_ptr,
+            cols,
+            vals,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sorts_and_merges() {
+        let mut a = Coo::new(3);
+        a.push(0, 2, 1.0);
+        a.push(0, 0, 2.0);
+        a.push(0, 2, 3.0); // duplicate, summed
+        a.push(2, 1, -1.0);
+        let m = a.to_csr().unwrap();
+        assert_eq!(m.row_ptr, vec![0, 2, 2, 3]);
+        assert_eq!(m.cols, vec![0, 2, 1]);
+        assert_eq!(m.vals, vec![2.0, 4.0, -1.0]);
+    }
+
+    #[test]
+    fn push_sym_mirrors() {
+        let mut a = Coo::new(2);
+        a.push_sym(0, 1, 5.0);
+        a.push_sym(1, 1, 2.0);
+        let m = a.to_csr().unwrap();
+        assert_eq!(m.get(0, 1), 5.0);
+        assert_eq!(m.get(1, 0), 5.0);
+        assert_eq!(m.get(1, 1), 2.0);
+        assert!(m.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let a = Coo {
+            n: 2,
+            rows: vec![5],
+            cols: vec![0],
+            vals: vec![1.0],
+        };
+        assert!(a.to_csr().is_err());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Coo::new(4);
+        let m = a.to_csr().unwrap();
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.row_ptr.len(), 5);
+    }
+}

@@ -1,0 +1,264 @@
+//! Compressed Sparse Row matrix — the host-side working format (paper §V-A).
+
+use crate::{Error, Result};
+
+/// A square sparse matrix in CSR form with `u32` column indices and `f64`
+/// values (the precision the paper's solvers require).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// Number of rows (== columns; all systems here are square).
+    pub n: usize,
+    /// `row_ptr[i]..row_ptr[i+1]` indexes row `i`'s entries. Length `n + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Column index per entry, sorted ascending within each row.
+    pub cols: Vec<u32>,
+    /// Value per entry.
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Validate structural invariants (monotone row_ptr, sorted in-bounds
+    /// columns). Used by tests, the MatrixMarket reader and decomposition.
+    pub fn validate(&self) -> Result<()> {
+        if self.row_ptr.len() != self.n + 1 {
+            return Err(Error::Sparse("row_ptr length != n+1".into()));
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.nnz() {
+            return Err(Error::Sparse("row_ptr endpoints invalid".into()));
+        }
+        if self.cols.len() != self.vals.len() {
+            return Err(Error::Sparse("cols/vals length mismatch".into()));
+        }
+        for i in 0..self.n {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            if s > e {
+                return Err(Error::Sparse(format!("row_ptr not monotone at row {i}")));
+            }
+            for j in s..e {
+                if self.cols[j] as usize >= self.n {
+                    return Err(Error::Sparse(format!(
+                        "column {} out of bounds in row {i}",
+                        self.cols[j]
+                    )));
+                }
+                if j > s && self.cols[j] <= self.cols[j - 1] {
+                    return Err(Error::Sparse(format!(
+                        "columns not strictly ascending in row {i}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Entry accessor (binary search within the row); zero when absent.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        match self.cols[s..e].binary_search(&(c as u32)) {
+            Ok(k) => self.vals[s + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// `y = A x` (allocating).
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n];
+        self.spmv_into(x, &mut y);
+        y
+    }
+
+    /// `y = A x` into a caller-provided buffer (the hot-path form).
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            let mut acc = 0.0;
+            for j in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.vals[j] * x[self.cols[j] as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// SPMV restricted to a row range `[r0, r1)` — the building block for the
+    /// 1-D row decomposition (Hybrid-PIPECG-3). Output has length `r1 - r0`.
+    pub fn spmv_rows_into(&self, r0: usize, r1: usize, x: &[f64], y: &mut [f64]) {
+        assert!(r0 <= r1 && r1 <= self.n);
+        assert_eq!(y.len(), r1 - r0);
+        assert_eq!(x.len(), self.n);
+        for i in r0..r1 {
+            let mut acc = 0.0;
+            for j in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.vals[j] * x[self.cols[j] as usize];
+            }
+            y[i - r0] = acc;
+        }
+    }
+
+    /// The main diagonal (used by the Jacobi preconditioner).
+    pub fn diagonal(&self) -> Vec<f64> {
+        (0..self.n).map(|i| self.get(i, i)).collect()
+    }
+
+    /// `b = A · 1` — the paper's test setup uses the exact solution
+    /// `x₀ = 1/√N`, i.e. `b = A x₀`; [`Csr::mul_ones`] scaled by `1/√N`.
+    pub fn mul_ones(&self) -> Vec<f64> {
+        let x0 = 1.0 / (self.n as f64).sqrt();
+        let x = vec![x0; self.n];
+        self.spmv(&x)
+    }
+
+    /// Symmetry check within tolerance `tol` (0.0 = exact).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        for r in 0..self.n {
+            for j in self.row_ptr[r]..self.row_ptr[r + 1] {
+                let c = self.cols[j] as usize;
+                if (self.vals[j] - self.get(c, r)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Weak diagonal-dominance check: `|a_ii| >= Σ_{j≠i} |a_ij|` for all rows.
+    /// Together with symmetry and positive diagonal this certifies SPD for
+    /// our generators.
+    pub fn is_diagonally_dominant(&self) -> bool {
+        for i in 0..self.n {
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for j in self.row_ptr[i]..self.row_ptr[i + 1] {
+                if self.cols[j] as usize == i {
+                    diag = self.vals[j].abs();
+                } else {
+                    off += self.vals[j].abs();
+                }
+            }
+            if diag + 1e-14 < off {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Maximum number of stored entries in any row (the natural ELL width).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.n)
+            .map(|i| self.row_ptr[i + 1] - self.row_ptr[i])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Dense materialization for tiny test matrices.
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.n]; self.n];
+        for r in 0..self.n {
+            for j in self.row_ptr[r]..self.row_ptr[r + 1] {
+                d[r][self.cols[j] as usize] = self.vals[j];
+            }
+        }
+        d
+    }
+
+    /// Extract the sub-matrix of rows `[r0, r1)` (all columns kept, i.e. a
+    /// row *panel*, not a principal submatrix). Used by the decomposition.
+    pub fn row_panel(&self, r0: usize, r1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.n);
+        let (s, e) = (self.row_ptr[r0], self.row_ptr[r1]);
+        Csr {
+            n: self.n, // column space unchanged; row index space is r1-r0
+            row_ptr: self.row_ptr[r0..=r1].iter().map(|p| p - s).collect(),
+            cols: self.cols[s..e].to_vec(),
+            vals: self.vals[s..e].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn small() -> Csr {
+        // [2 1 0]
+        // [1 3 1]
+        // [0 1 2]
+        let mut c = Coo::new(3);
+        c.push(0, 0, 2.0);
+        c.push_sym(0, 1, 1.0);
+        c.push(1, 1, 3.0);
+        c.push_sym(1, 2, 1.0);
+        c.push(2, 2, 2.0);
+        c.to_csr().unwrap()
+    }
+
+    #[test]
+    fn validate_ok() {
+        small().validate().unwrap();
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = small();
+        let x = vec![1.0, 2.0, 3.0];
+        let y = a.spmv(&x);
+        assert_eq!(y, vec![4.0, 10.0, 8.0]);
+    }
+
+    #[test]
+    fn spmv_rows_is_a_slice_of_spmv() {
+        let a = small();
+        let x = vec![0.5, -1.0, 2.0];
+        let full = a.spmv(&x);
+        let mut part = vec![0.0; 2];
+        a.spmv_rows_into(1, 3, &x, &mut part);
+        assert_eq!(part, full[1..3]);
+    }
+
+    #[test]
+    fn diagonal_and_symmetry() {
+        let a = small();
+        assert_eq!(a.diagonal(), vec![2.0, 3.0, 2.0]);
+        assert!(a.is_symmetric(0.0));
+        assert!(a.is_diagonally_dominant());
+    }
+
+    #[test]
+    fn get_absent_is_zero() {
+        let a = small();
+        assert_eq!(a.get(0, 2), 0.0);
+    }
+
+    #[test]
+    fn row_panel_preserves_rows() {
+        let a = small();
+        let p = a.row_panel(1, 3);
+        assert_eq!(p.row_ptr, vec![0, 3, 5]);
+        assert_eq!(p.get(0, 0), 1.0); // row 1 of original
+        assert_eq!(p.get(1, 1), 1.0); // row 2 of original
+    }
+
+    #[test]
+    fn validate_catches_bad_columns() {
+        let mut a = small();
+        a.cols[0] = 99;
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_unsorted() {
+        let a = Csr {
+            n: 2,
+            row_ptr: vec![0, 2, 2],
+            cols: vec![1, 0],
+            vals: vec![1.0, 2.0],
+        };
+        assert!(a.validate().is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! ELLPACK format — the accelerator-side layout.
+//!
+//! ELL stores a sparse matrix as two dense `n × k` arrays (values and column
+//! indices), `k` = max stored entries per row. The dense rectangular shape is
+//! what the shape-bucketed HLO artifacts consume: padding slots carry value
+//! `0.0` and point at **their own row** so gathers stay in bounds and the
+//! padded SPMV is exact. Padded *rows* (bucketing `n` up) are identity rows.
+
+use crate::{Error, Result};
+
+use super::Csr;
+
+/// ELLPACK matrix. Row-major layout: slot `s` of row `i` is at `i * k + s`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ell {
+    /// Logical number of rows (may include identity padding rows).
+    pub n: usize,
+    /// Slots per row.
+    pub k: usize,
+    /// Column index per slot (`n * k`), padding slots point at their own row.
+    pub cols: Vec<u32>,
+    /// Value per slot (`n * k`), padding slots are `0.0`.
+    pub vals: Vec<f64>,
+    /// Rows of the original matrix (before row padding); `<= n`.
+    pub n_orig: usize,
+}
+
+impl Ell {
+    /// Convert from CSR with width `k = max_row_nnz` and no row padding.
+    pub fn from_csr(a: &Csr) -> Ell {
+        Self::from_csr_padded(a, a.max_row_nnz().max(1), a.n).expect("natural width fits")
+    }
+
+    /// Convert from CSR padding the width to `k` and the row count to
+    /// `n_pad`. Fails if any row has more than `k` entries or `n_pad < n`.
+    pub fn from_csr_padded(a: &Csr, k: usize, n_pad: usize) -> Result<Ell> {
+        if n_pad < a.n {
+            return Err(Error::Sparse(format!("n_pad {n_pad} < n {}", a.n)));
+        }
+        if a.max_row_nnz() > k {
+            return Err(Error::Sparse(format!(
+                "row with {} entries exceeds ELL width {k}",
+                a.max_row_nnz()
+            )));
+        }
+        let mut cols = vec![0u32; n_pad * k];
+        let mut vals = vec![0.0f64; n_pad * k];
+        for i in 0..n_pad {
+            let base = i * k;
+            // Default: all slots self-referencing with value 0.
+            for s in 0..k {
+                cols[base + s] = i as u32;
+            }
+            if i < a.n {
+                let (s0, e0) = (a.row_ptr[i], a.row_ptr[i + 1]);
+                for (s, j) in (s0..e0).enumerate() {
+                    cols[base + s] = a.cols[j];
+                    vals[base + s] = a.vals[j];
+                }
+            } else {
+                // Identity padding row: diag 1 keeps the padded system SPD
+                // and leaves zero RHS entries at zero.
+                vals[base] = 1.0;
+            }
+        }
+        Ok(Ell {
+            n: n_pad,
+            k,
+            cols,
+            vals,
+            n_orig: a.n,
+        })
+    }
+
+    pub fn nnz_slots(&self) -> usize {
+        self.n * self.k
+    }
+
+    /// `y = A x` over the padded domain (x.len() == n).
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n];
+        self.spmv_into(x, &mut y);
+        y
+    }
+
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            let base = i * self.k;
+            let mut acc = 0.0;
+            for s in 0..self.k {
+                acc += self.vals[base + s] * x[self.cols[base + s] as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Back to CSR (drops padding rows and zero-valued padding slots).
+    pub fn to_csr(&self) -> Csr {
+        let mut row_ptr = Vec::with_capacity(self.n_orig + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..self.n_orig {
+            let base = i * self.k;
+            let mut row: Vec<(u32, f64)> = (0..self.k)
+                .filter(|&s| self.vals[base + s] != 0.0)
+                .map(|s| (self.cols[base + s], self.vals[base + s]))
+                .collect();
+            row.sort_unstable_by_key(|&(c, _)| c);
+            for (c, v) in row {
+                cols.push(c);
+                vals.push(v);
+            }
+            row_ptr.push(cols.len());
+        }
+        Csr {
+            n: self.n_orig,
+            row_ptr,
+            cols,
+            vals,
+        }
+    }
+
+    /// Storage footprint in bytes (f64 values + u32 indices).
+    pub fn bytes(&self) -> u64 {
+        (self.nnz_slots() * (8 + 4)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_csr_ell_csr() {
+        let a = gen::poisson2d_5pt(7, 5);
+        let e = Ell::from_csr(&a);
+        let back = e.to_csr();
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let a = gen::poisson2d_5pt(6, 6);
+        let e = Ell::from_csr(&a);
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..a.n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let yc = a.spmv(&x);
+        let ye = e.spmv(&x);
+        assert!(crate::util::max_abs_diff(&yc, &ye) < 1e-12);
+    }
+
+    #[test]
+    fn padded_spmv_is_exact_on_original_rows() {
+        let a = gen::poisson2d_5pt(5, 5); // n = 25
+        let e = Ell::from_csr_padded(&a, 8, 32).unwrap();
+        assert_eq!(e.n, 32);
+        let mut rng = Rng::new(2);
+        let mut x = vec![0.0; 32];
+        for v in x.iter_mut().take(25) {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+        let y = e.spmv(&x);
+        let y_ref = a.spmv(&x[..25]);
+        assert!(crate::util::max_abs_diff(&y[..25], &y_ref) < 1e-12);
+        // padding rows: identity * 0 input = 0 output
+        assert!(y[25..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn width_too_small_rejected() {
+        let a = gen::poisson2d_5pt(4, 4);
+        assert!(Ell::from_csr_padded(&a, 2, 16).is_err());
+    }
+
+    #[test]
+    fn padding_rows_are_identity() {
+        let a = gen::poisson2d_5pt(3, 3);
+        let e = Ell::from_csr_padded(&a, 5, 16).unwrap();
+        let mut x = vec![0.0; 16];
+        x[12] = 3.5;
+        let y = e.spmv(&x);
+        assert_eq!(y[12], 3.5);
+    }
+}

@@ -1,0 +1,401 @@
+//! Matrix generators.
+//!
+//! Two roles:
+//!
+//! 1. **Poisson stencils** (5-pt 2-D; 7/27/125-pt 3-D). The 125-pt stencil
+//!    (5×5×5 neighborhood) is the generator behind the paper's Table II.
+//! 2. **SuiteSparse profile synthesis** ([`table1_suite`]). The paper's
+//!    Table I matrices are not downloadable in this offline environment, so
+//!    we synthesize symmetric positive-definite matrices matching each
+//!    matrix's `N` and `nnz/N` statistics (banded random symmetric pattern,
+//!    diagonally dominant values). Every profile carries both its
+//!    *paper-scale* statistics (driving the virtual-time cost model, so the
+//!    figures reproduce at the paper's N) and a *bench-scale* `n` at which
+//!    the real matrix is generated and numerically solved. Scaling per
+//!    matrix is documented in EXPERIMENTS.md.
+
+use super::{Coo, Csr};
+use crate::util::prng::Rng;
+
+/// 2-D Poisson, 5-point stencil on an `nx × ny` grid. SPD, weakly
+/// diagonally dominant (the classic `[-1, -1, 4, -1, -1]` operator).
+pub fn poisson2d_5pt(nx: usize, ny: usize) -> Csr {
+    let n = nx * ny;
+    let mut coo = Coo::with_capacity(n, 5 * n);
+    let idx = |x: usize, y: usize| y * nx + x;
+    for y in 0..ny {
+        for x in 0..nx {
+            let i = idx(x, y);
+            coo.push(i, i, 4.0);
+            if x > 0 {
+                coo.push(i, idx(x - 1, y), -1.0);
+            }
+            if x + 1 < nx {
+                coo.push(i, idx(x + 1, y), -1.0);
+            }
+            if y > 0 {
+                coo.push(i, idx(x, y - 1), -1.0);
+            }
+            if y + 1 < ny {
+                coo.push(i, idx(x, y + 1), -1.0);
+            }
+        }
+    }
+    coo.to_csr().expect("stencil in bounds")
+}
+
+/// 3-D Poisson on an `m³` grid with a `(2r+1)³`-point star-free box stencil:
+/// every grid point within Chebyshev distance `r` is a neighbor. `r = 1`
+/// gives the 27-point stencil, `r = 2` the paper's 125-point stencil.
+///
+/// Off-diagonal weight `-1/d²` (d = Euclidean offset distance) and a
+/// diagonal equal to the sum of |off-diagonals| times `1 + 2%` — a lightly
+/// regularized graph Laplacian. Conditioning grows with the grid like a
+/// real Poisson operator, so Jacobi-PCG iteration counts land in the
+/// paper's regime (tens to hundreds at bench scale) instead of converging
+/// in a handful of steps.
+pub fn poisson3d_box(m: usize, r: usize) -> Csr {
+    let n = m * m * m;
+    let idx = |x: usize, y: usize, z: usize| (z * m + y) * m + x;
+    let ir = r as isize;
+    let mut coo = Coo::with_capacity(n, n * (2 * r + 1).pow(3));
+    for z in 0..m {
+        for y in 0..m {
+            for x in 0..m {
+                let i = idx(x, y, z);
+                let mut diag = 0.0;
+                for dz in -ir..=ir {
+                    for dy in -ir..=ir {
+                        for dx in -ir..=ir {
+                            if dx == 0 && dy == 0 && dz == 0 {
+                                continue;
+                            }
+                            let (nx, ny, nz) =
+                                (x as isize + dx, y as isize + dy, z as isize + dz);
+                            if nx < 0
+                                || ny < 0
+                                || nz < 0
+                                || nx >= m as isize
+                                || ny >= m as isize
+                                || nz >= m as isize
+                            {
+                                continue;
+                            }
+                            let d2 = (dx * dx + dy * dy + dz * dz) as f64;
+                            let w = -1.0 / d2;
+                            coo.push(i, idx(nx as usize, ny as usize, nz as usize), w);
+                            diag += w.abs();
+                        }
+                    }
+                }
+                // Heterogeneous regularization (1%..11% excess, varying by
+                // row): keeps the matrix SPD and diagonally dominant while
+                // breaking the constant vector's near-eigenvector alignment
+                // — otherwise the paper's b = A·(1/√N)·1 setup converges in
+                // O(1) iterations and no timing behaviour is exercised.
+                let h = (i as u64).wrapping_mul(0x9E3779B97F4A7C15) >> 40;
+                let frac = h as f64 / (1u64 << 24) as f64;
+                // log-uniform excess in [1e-4, 5e-2]: condition numbers and
+                // Jacobi-PCG iteration counts in the regime of real
+                // SuiteSparse/Poisson systems (hundreds of iterations).
+                let excess = 1.0 + 10f64.powf(-4.0 + 2.7 * frac);
+                coo.push(i, i, diag * excess + 1e-9);
+            }
+        }
+    }
+    coo.to_csr().expect("stencil in bounds")
+}
+
+/// 3-D 7-point Poisson (faces only) on an `m³` grid.
+pub fn poisson3d_7pt(m: usize) -> Csr {
+    let n = m * m * m;
+    let idx = |x: usize, y: usize, z: usize| (z * m + y) * m + x;
+    let mut coo = Coo::with_capacity(n, 7 * n);
+    for z in 0..m {
+        for y in 0..m {
+            for x in 0..m {
+                let i = idx(x, y, z);
+                coo.push(i, i, 6.0);
+                let mut nb = |c: Option<usize>| {
+                    if let Some(j) = c {
+                        coo.push(i, j, -1.0);
+                    }
+                };
+                nb((x > 0).then(|| idx(x - 1, y, z)));
+                nb((x + 1 < m).then(|| idx(x + 1, y, z)));
+                nb((y > 0).then(|| idx(x, y - 1, z)));
+                nb((y + 1 < m).then(|| idx(x, y + 1, z)));
+                nb((z > 0).then(|| idx(x, y, z - 1)));
+                nb((z + 1 < m).then(|| idx(x, y, z + 1)));
+            }
+        }
+    }
+    coo.to_csr().expect("stencil in bounds")
+}
+
+/// The paper's 125-point Poisson stencil (5×5×5 box) on an `m³` grid.
+/// Interior rows have 124 off-diagonals + diagonal, so `nnz/N ≈ 122` for
+/// moderate `m`, matching Table II.
+pub fn poisson3d_125pt(m: usize) -> Csr {
+    poisson3d_box(m, 2)
+}
+
+/// Random banded symmetric positive-definite matrix with ~`avg_row_nnz`
+/// stored entries per row. Pattern: each row draws off-diagonal partners
+/// uniformly within a band; values uniform in `[-1, -0.05]`; the diagonal is
+/// the row's |off-diagonal| sum + `margin`, certifying SPD.
+pub fn banded_spd(n: usize, avg_row_nnz: f64, seed: u64) -> Csr {
+    assert!(n > 0);
+    let mut rng = Rng::new(seed);
+    // Each symmetric pair contributes 2 stored entries; diagonal 1.
+    let pairs_per_row = ((avg_row_nnz - 1.0) / 2.0).max(0.0);
+    let bandwidth = ((avg_row_nnz * 4.0) as usize).clamp(2, n.max(2));
+    let mut coo = Coo::with_capacity(n, (avg_row_nnz as usize + 2) * n);
+    let mut offdiag_sum = vec![0.0f64; n];
+    for i in 0..n {
+        // Expected `pairs_per_row` partners at columns > i within the band.
+        let hi = (i + bandwidth).min(n - 1);
+        if hi <= i {
+            continue;
+        }
+        let span = hi - i;
+        let want = pairs_per_row.floor() as usize
+            + if rng.chance(pairs_per_row.fract()) { 1 } else { 0 };
+        let k = want.min(span);
+        for off in rng.sample_distinct(span, k) {
+            let j = i + 1 + off;
+            let v = rng.range_f64(-1.0, -0.05);
+            coo.push_sym(i, j, v);
+            offdiag_sum[i] += v.abs();
+            offdiag_sum[j] += v.abs();
+        }
+    }
+    // Heterogeneous light regularization (1%..11% excess per row, + floor):
+    // conditioning comparable to the paper's matrices rather than a
+    // trivially dominant system (see poisson3d_box for why uniform excess
+    // is degenerate under the b = A·1 test setup).
+    for i in 0..n {
+        let excess = 1.0 + 10f64.powf(-4.0 + 2.7 * rng.next_f64());
+        coo.push(i, i, offdiag_sum[i] * excess + 1e-6);
+    }
+    coo.to_csr().expect("banded entries in bounds")
+}
+
+/// A named matrix profile: paper-scale statistics plus the bench-scale size
+/// at which we actually generate and solve it.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub name: &'static str,
+    /// N reported by the paper (drives the virtual-time simulation).
+    pub paper_n: usize,
+    /// nnz reported by the paper.
+    pub paper_nnz: usize,
+    /// Rows at which the synthetic matrix is generated for real execution.
+    pub bench_n: usize,
+    /// Estimated Jacobi-PCG iteration count at paper scale and tol 1e-5
+    /// (order-of-magnitude, consistent with the paper's maxit 10000 being
+    /// a live constraint on these ill-conditioned systems; our synthetics
+    /// are better conditioned, so the bench-scale count does not transfer
+    /// directly — the estimate only affects Hybrid-3 setup amortization in
+    /// the figure benches, never per-iteration rankings). Documented in
+    /// EXPERIMENTS.md.
+    pub paper_iters: usize,
+    /// Generator kind.
+    pub kind: ProfileKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileKind {
+    /// Banded random SPD matching nnz/N.
+    Banded,
+    /// 125-pt Poisson; `bench_n` is rounded down to a cube.
+    Poisson125,
+}
+
+impl Profile {
+    pub fn paper_nnz_per_row(&self) -> f64 {
+        self.paper_nnz as f64 / self.paper_n as f64
+    }
+
+    /// Generate the bench-scale matrix (deterministic per profile name).
+    pub fn build(&self) -> Csr {
+        match self.kind {
+            ProfileKind::Banded => {
+                let seed = self
+                    .name
+                    .bytes()
+                    .fold(0xB5ADu64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
+                banded_spd(self.bench_n, self.paper_nnz_per_row(), seed)
+            }
+            ProfileKind::Poisson125 => {
+                let m = (self.bench_n as f64).cbrt().floor() as usize;
+                poisson3d_125pt(m.max(3))
+            }
+        }
+    }
+
+    /// nnz the bench-scale matrix is expected to have (approximately).
+    pub fn bench_nnz_estimate(&self) -> usize {
+        (self.bench_n as f64 * self.paper_nnz_per_row()) as usize
+    }
+}
+
+/// Table I of the paper (SuiteSparse collection profiles).
+///
+/// `bench_scale` divides the generated size for the larger matrices so that
+/// real numerics stay laptop-sized while *preserving the paper's N
+/// ordering* (the property that decides which hybrid method wins).
+/// `bench_scale = 1` reproduces bench sizes used in EXPERIMENTS.md.
+pub fn table1_suite(bench_scale: usize) -> Vec<Profile> {
+    let s = bench_scale.max(1);
+    // (name, paper N, paper nnz, bench divisor at scale 1, est. paper iters)
+    let spec: [(&'static str, usize, usize, usize, usize); 7] = [
+        ("bcsstk15", 3948, 117_816, 1, 3000),
+        ("gyro", 17_361, 1_021_159, 1, 4000),
+        ("boneS01", 127_224, 6_715_152, 2, 4000),
+        ("hood", 220_542, 10_768_436, 2, 5000),
+        ("offshore", 259_789, 4_242_673, 2, 3000),
+        ("Serena", 1_391_349, 64_531_701, 8, 5000),
+        ("Queen_4147", 4_147_110, 329_499_284, 16, 6000),
+    ];
+    spec.iter()
+        .map(|&(name, n, nnz, div, paper_iters)| Profile {
+            name,
+            paper_n: n,
+            paper_nnz: nnz,
+            bench_n: (n / (div * s)).max(64),
+            paper_iters,
+            kind: ProfileKind::Banded,
+        })
+        .collect()
+}
+
+/// Table II of the paper (125-pt Poisson matrices exceeding GPU memory).
+///
+/// Paper grids are ~165³..185³ (4.5M–6.3M rows). Bench grids are scaled to
+/// `m = base_m` .. `base_m + 6` (step 2) with the same stencil, preserving
+/// `nnz/N ≈ 122`; the simulated GPU memory capacity in the Fig-8 bench is
+/// scaled correspondingly so the "does not fit" predicate matches the paper.
+pub fn table2_suite(base_m: usize) -> Vec<Profile> {
+    let paper: [(&'static str, usize, usize); 4] = [
+        ("4.5M Poisson", 4_492_125, 549_353_259),
+        ("5M Poisson", 4_913_000, 601_211_584),
+        ("6M Poisson", 5_929_741, 726_572_699),
+        ("6.3M Poisson", 6_331_625, 776_151_559),
+    ];
+    paper
+        .iter()
+        .enumerate()
+        .map(|(i, &(name, n, nnz))| {
+            let m = base_m + 2 * i;
+            Profile {
+                name,
+                paper_n: n,
+                paper_nnz: nnz,
+                bench_n: m * m * m,
+                // Poisson at 165³..185³: iters ~ O(grid) for Jacobi-CG.
+                paper_iters: 600 + 50 * i,
+                kind: ProfileKind::Poisson125,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson2d_structure() {
+        let a = poisson2d_5pt(4, 3);
+        a.validate().unwrap();
+        assert_eq!(a.n, 12);
+        assert!(a.is_symmetric(0.0));
+        assert!(a.is_diagonally_dominant());
+        // interior row has 5 entries
+        assert_eq!(a.row_ptr[6], a.row_ptr[5] + 5);
+    }
+
+    #[test]
+    fn poisson3d_125pt_profile() {
+        let a = poisson3d_125pt(6);
+        a.validate().unwrap();
+        assert_eq!(a.n, 216);
+        assert!(a.is_symmetric(1e-12));
+        assert!(a.is_diagonally_dominant());
+        // interior point of a 6³ grid with r=2 has the full 125-slot row
+        let stats = crate::sparse::MatrixStats::of(&a);
+        assert_eq!(stats.max_row_nnz, 125);
+    }
+
+    #[test]
+    fn poisson3d_7pt_structure() {
+        let a = poisson3d_7pt(4);
+        a.validate().unwrap();
+        assert!(a.is_symmetric(0.0));
+        assert_eq!(a.max_row_nnz(), 7);
+    }
+
+    #[test]
+    fn banded_spd_properties() {
+        let a = banded_spd(500, 20.0, 42);
+        a.validate().unwrap();
+        assert!(a.is_symmetric(1e-12));
+        assert!(a.is_diagonally_dominant());
+        let stats = crate::sparse::MatrixStats::of(&a);
+        assert!(
+            (stats.nnz_per_row - 20.0).abs() < 4.0,
+            "nnz/row {} too far from 20",
+            stats.nnz_per_row
+        );
+    }
+
+    #[test]
+    fn banded_spd_deterministic() {
+        let a = banded_spd(100, 10.0, 7);
+        let b = banded_spd(100, 10.0, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn table1_ordering_preserved() {
+        let suite = table1_suite(4);
+        for w in suite.windows(2) {
+            assert!(
+                w[0].paper_n < w[1].paper_n,
+                "paper N must be ascending"
+            );
+            assert!(
+                w[0].bench_n <= w[1].bench_n,
+                "bench N ordering broken: {} {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+        assert_eq!(suite.len(), 7);
+        assert_eq!(suite[6].paper_nnz, 329_499_284);
+    }
+
+    #[test]
+    fn table2_nnz_ratio_matches() {
+        for p in table2_suite(10) {
+            let a = p.build();
+            let stats = crate::sparse::MatrixStats::of(&a);
+            // paper reports nnz/N ≈ 120-123 for the 125-pt stencil
+            assert!(
+                stats.nnz_per_row > 60.0,
+                "{}: nnz/N {} too small (boundary-dominated grid)",
+                p.name,
+                stats.nnz_per_row
+            );
+        }
+    }
+
+    #[test]
+    fn profile_build_small() {
+        let suite = table1_suite(16);
+        let a = suite[0].build();
+        a.validate().unwrap();
+        assert!(a.is_diagonally_dominant());
+    }
+}

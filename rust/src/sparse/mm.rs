@@ -1,0 +1,153 @@
+//! MatrixMarket I/O (coordinate format, `real`/`integer` fields,
+//! `general`/`symmetric` symmetry). Lets users bring their own SuiteSparse
+//! downloads when the environment has them.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::{Error, Result};
+
+use super::{Coo, Csr};
+
+/// Read a MatrixMarket `.mtx` file into CSR. Symmetric files are expanded.
+pub fn read_mm(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)?;
+    read_mm_from(BufReader::new(f))
+}
+
+/// Read MatrixMarket from any reader (used by tests with in-memory data).
+pub fn read_mm_from<R: BufRead>(r: R) -> Result<Csr> {
+    let mut lines = r.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Sparse("empty MatrixMarket file".into()))??;
+    let h = header.to_lowercase();
+    if !h.starts_with("%%matrixmarket matrix coordinate") {
+        return Err(Error::Sparse(format!(
+            "unsupported MatrixMarket header: {header}"
+        )));
+    }
+    if h.contains("complex") || h.contains("pattern") {
+        return Err(Error::Sparse("complex/pattern matrices unsupported".into()));
+    }
+    let symmetric = h.contains("symmetric");
+
+    // Skip comments, read size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| Error::Sparse("missing size line".into()))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|e| Error::Sparse(format!("bad size: {e}"))))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        return Err(Error::Sparse("size line must have 3 fields".into()));
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+    if rows != cols {
+        return Err(Error::Sparse(format!(
+            "only square matrices supported ({rows}x{cols})"
+        )));
+    }
+
+    let mut coo = Coo::with_capacity(rows, if symmetric { nnz * 2 } else { nnz });
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it
+            .next()
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| Error::Sparse(format!("bad entry line: {t}")))?;
+        let c: usize = it
+            .next()
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| Error::Sparse(format!("bad entry line: {t}")))?;
+        let v: f64 = it.next().and_then(|v| v.parse().ok()).unwrap_or(1.0);
+        if r == 0 || c == 0 || r > rows || c > cols {
+            return Err(Error::Sparse(format!("entry ({r},{c}) out of bounds")));
+        }
+        if symmetric {
+            coo.push_sym(r - 1, c - 1, v);
+        } else {
+            coo.push(r - 1, c - 1, v);
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        return Err(Error::Sparse(format!(
+            "expected {nnz} entries, found {seen}"
+        )));
+    }
+    coo.to_csr()
+}
+
+/// Write CSR as a `general` MatrixMarket file.
+pub fn write_mm(a: &Csr, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by hypipe")?;
+    writeln!(f, "{} {} {}", a.n, a.n, a.nnz())?;
+    for r in 0..a.n {
+        for j in a.row_ptr[r]..a.row_ptr[r + 1] {
+            writeln!(f, "{} {} {:.17e}", r + 1, a.cols[j] + 1, a.vals[j])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn parse_symmetric() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   % comment\n\
+                   3 3 4\n\
+                   1 1 2.0\n\
+                   2 1 1.0\n\
+                   2 2 3.0\n\
+                   3 3 2.5\n";
+        let a = read_mm_from(src.as_bytes()).unwrap();
+        assert_eq!(a.n, 3);
+        assert_eq!(a.get(0, 1), 1.0); // expanded
+        assert_eq!(a.get(1, 0), 1.0);
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let a = gen::poisson2d_5pt(5, 4);
+        let path = std::env::temp_dir().join("hypipe_mm_test.mtx");
+        write_mm(&a, &path).unwrap();
+        let b = read_mm(&path).unwrap();
+        assert_eq!(a, b);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_mm_from("hello\n".as_bytes()).is_err());
+        assert!(read_mm_from("%%MatrixMarket matrix coordinate real general\n2 2 1\n5 1 1.0\n".as_bytes()).is_err());
+        assert!(read_mm_from("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_rectangular() {
+        assert!(read_mm_from("%%MatrixMarket matrix coordinate real general\n2 3 1\n1 1 1.0\n".as_bytes()).is_err());
+    }
+}

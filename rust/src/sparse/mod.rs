@@ -1,0 +1,45 @@
+//! Sparse matrix formats and generators.
+//!
+//! The framework stores matrices in **CSR** (the format the paper uses on the
+//! host, §V-A) and converts to **ELLPACK** for the accelerator path — ELL's
+//! dense rectangular (values, columns) layout is what the L1 Pallas kernels
+//! and shape-bucketed HLO artifacts consume. **COO** is the assembly format
+//! used by the generators and the MatrixMarket reader.
+
+pub mod coo;
+pub mod csr;
+pub mod ell;
+pub mod gen;
+pub mod mm;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use ell::Ell;
+
+/// Basic sizing statistics for a sparse matrix (Table I / Table II columns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixStats {
+    pub n: usize,
+    pub nnz: usize,
+    pub nnz_per_row: f64,
+    pub max_row_nnz: usize,
+    /// Bytes for CSR storage in f64 + u32 indices (+ row pointers).
+    pub csr_bytes: u64,
+    /// Bytes for ELL storage at width `max_row_nnz`.
+    pub ell_bytes: u64,
+}
+
+impl MatrixStats {
+    pub fn of(a: &Csr) -> MatrixStats {
+        let nnz = a.nnz();
+        let max_row_nnz = (0..a.n).map(|i| a.row_ptr[i + 1] - a.row_ptr[i]).max().unwrap_or(0);
+        MatrixStats {
+            n: a.n,
+            nnz,
+            nnz_per_row: nnz as f64 / a.n.max(1) as f64,
+            max_row_nnz,
+            csr_bytes: (nnz * 12 + (a.n + 1) * 8) as u64,
+            ell_bytes: (a.n * max_row_nnz * 12) as u64,
+        }
+    }
+}

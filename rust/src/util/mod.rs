@@ -1,0 +1,88 @@
+//! Small self-contained utilities.
+//!
+//! This session's environment is fully offline (vendored crates only), so we
+//! hand-roll the pieces that would usually come from crates.io:
+//! a PRNG ([`prng`]), a JSON reader/writer ([`json`]), a property-testing
+//! driver ([`propcheck`]) and fixed-width ASCII tables ([`table`]).
+
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod table;
+
+/// Format a byte count as a human-readable string (e.g. `1.5 GiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds with an adaptive unit (`ns`/`µs`/`ms`/`s`).
+pub fn human_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+/// `a ≈ b` within both a relative and an absolute tolerance.
+pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let d = (a - b).abs();
+    d <= abs || d <= rel * a.abs().max(b.abs())
+}
+
+/// Max |a_i - b_i| over two equal-length slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(2.0), "2.000 s");
+        assert!(human_time(2.5e-3).contains("ms"));
+        assert!(human_time(2.5e-6).contains("µs"));
+        assert!(human_time(3e-9).contains("ns"));
+    }
+
+    #[test]
+    fn approx_eq_basics() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!approx_eq(1.0, 1.1, 1e-9, 1e-9));
+        assert!(approx_eq(0.0, 1e-15, 0.0, 1e-12));
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

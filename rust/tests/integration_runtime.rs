@@ -1,0 +1,206 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts must compute
+//! exactly what the native Rust kernels compute. Requires `make artifacts`;
+//! every test skips with a notice when the artifacts are absent so the
+//! suite stays runnable on a fresh checkout.
+
+use std::rc::Rc;
+
+use hypipe::device::native::GpuCompute;
+use hypipe::device::{DeviceParams, GpuEngine, GpuSolveVectors, NativeAccel};
+use hypipe::precond::Jacobi;
+use hypipe::runtime;
+use hypipe::sparse::gen;
+use hypipe::util::max_abs_diff;
+
+macro_rules! require_artifacts {
+    () => {
+        if !runtime::artifacts_available() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn engine() -> GpuEngine {
+    let lib = Rc::new(runtime::open_default().expect("artifact library"));
+    GpuEngine::new(lib, DeviceParams::gpu_k20m())
+}
+
+#[test]
+fn spmv_artifact_matches_native() {
+    require_artifacts!();
+    let a = gen::banded_spd(900, 12.0, 7);
+    let pc = Jacobi::from_matrix(&a);
+    let mut eng = engine();
+    eng.load_matrix(&a, &pc.inv_diag).unwrap();
+    let x: Vec<f64> = (0..a.n).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
+    let y_pjrt = GpuCompute::spmv(&mut eng, &x).unwrap();
+    let y_native = a.spmv(&x);
+    assert_eq!(y_pjrt.len(), a.n);
+    assert!(
+        max_abs_diff(&y_pjrt, &y_native) < 1e-9,
+        "PJRT SPMV diverges from native"
+    );
+}
+
+#[test]
+fn pipecg_step_artifact_matches_native_backend() {
+    require_artifacts!();
+    let a = gen::poisson2d_5pt(30, 30); // 900 rows -> bucket 1024 (pallas impl)
+    let pc = Jacobi::from_matrix(&a);
+    let b = a.mul_ones();
+
+    let mut eng = engine();
+    eng.load_matrix(&a, &pc.inv_diag).unwrap();
+    let mut nat = NativeAccel::with_matrix(&a, &pc.inv_diag);
+
+    let init = hypipe::solver::pipecg::PipecgState::init(&a, &b, &pc);
+    let mut st_p = GpuSolveVectors::zeros(a.n, eng.state_bucket());
+    let mut st_n = GpuSolveVectors::zeros(a.n, a.n);
+    for (dst_p, dst_n, src) in [
+        (&mut st_p.r, &mut st_n.r, &init.r),
+        (&mut st_p.u, &mut st_n.u, &init.u),
+        (&mut st_p.w, &mut st_n.w, &init.w),
+        (&mut st_p.m, &mut st_n.m, &init.m),
+        (&mut st_p.n, &mut st_n.n, &init.n),
+    ] {
+        dst_p[..a.n].copy_from_slice(src);
+        dst_n[..a.n].copy_from_slice(src);
+    }
+
+    // Drive both backends through several iterations with identical
+    // scalars; states must stay equal.
+    let (mut gamma, mut delta) = (init.gamma, init.delta);
+    let (mut gamma_prev, mut alpha_prev) = (0.0, 0.0);
+    for it in 0..5 {
+        let (alpha, beta) = if it == 0 {
+            (gamma / delta, 0.0)
+        } else {
+            let beta = gamma / gamma_prev;
+            (gamma / (delta - beta * gamma / alpha_prev), beta)
+        };
+        let (g1, d1, nn1) = eng.pipecg_step(&mut st_p, alpha, beta).unwrap();
+        let (g2, d2, nn2) = nat.pipecg_step(&mut st_n, alpha, beta).unwrap();
+        assert!((g1 - g2).abs() < 1e-8, "gamma diverged at iter {it}: {g1} vs {g2}");
+        assert!((d1 - d2).abs() < 1e-8);
+        assert!((nn1 - nn2).abs() < 1e-8);
+        assert!(max_abs_diff(&st_p.x[..a.n], &st_n.x[..a.n]) < 1e-9);
+        assert!(max_abs_diff(&st_p.w[..a.n], &st_n.w[..a.n]) < 1e-9);
+        gamma_prev = gamma;
+        alpha_prev = alpha;
+        gamma = g1;
+        delta = d1;
+        let _ = nn1;
+    }
+}
+
+#[test]
+fn hybrid3_panel_artifact_matches_native() {
+    require_artifacts!();
+    let a = gen::banded_spd(1500, 10.0, 3);
+    let pc = Jacobi::from_matrix(&a);
+    let split = 600;
+
+    let mut eng = engine();
+    eng.load_panel(&a, split, a.n, &pc.inv_diag).unwrap();
+    let mut nat = NativeAccel::with_panel(&a, split, a.n, &pc.inv_diag);
+
+    let ng = a.n - split;
+    let mk = |len: usize| -> Vec<f64> {
+        (0..len).map(|i| ((i * 13 + 5) % 17) as f64 * 0.1 - 0.8).collect()
+    };
+    let m_full = mk(a.n);
+    let m_loc = m_full[split..].to_vec();
+    let mut st_p = GpuSolveVectors::zeros(ng, eng.state_bucket());
+    let mut st_n = GpuSolveVectors::zeros(ng, ng);
+    for (p, nvec) in [
+        (&mut st_p.z, &mut st_n.z),
+        (&mut st_p.q, &mut st_n.q),
+        (&mut st_p.s, &mut st_n.s),
+        (&mut st_p.p, &mut st_n.p),
+        (&mut st_p.x, &mut st_n.x),
+        (&mut st_p.r, &mut st_n.r),
+        (&mut st_p.u, &mut st_n.u),
+        (&mut st_p.w, &mut st_n.w),
+    ] {
+        let v = mk(ng);
+        p[..ng].copy_from_slice(&v);
+        nvec[..ng].copy_from_slice(&v);
+    }
+
+    let ((g1, d1, n1), m1) = eng.hybrid3_step(&mut st_p, &m_full, &m_loc, 0.7, 0.3).unwrap();
+    let ((g2, d2, n2), m2) = nat.hybrid3_step(&mut st_n, &m_full, &m_loc, 0.7, 0.3).unwrap();
+    assert!((g1 - g2).abs() < 1e-8, "gamma_p {g1} vs {g2}");
+    assert!((d1 - d2).abs() < 1e-8);
+    assert!((n1 - n2).abs() < 1e-8);
+    assert!(max_abs_diff(&m1[..ng], &m2) < 1e-9);
+    assert!(max_abs_diff(&st_p.x[..ng], &st_n.x[..ng]) < 1e-9);
+    assert!(max_abs_diff(&st_p.w[..ng], &st_n.w[..ng]) < 1e-9);
+}
+
+#[test]
+fn full_hybrid_solves_on_pjrt_backend() {
+    require_artifacts!();
+    let a = gen::poisson2d_5pt(28, 28); // 784 -> bucket 1024
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let cfg = hypipe::hybrid::HybridConfig::default();
+
+    // Hybrid-1 on PJRT.
+    let mut eng = engine();
+    eng.load_matrix(&a, &pc.inv_diag).unwrap();
+    let rep1 = hypipe::hybrid::hybrid1::solve(&a, &b, &pc, &mut eng, &cfg).unwrap();
+    assert!(rep1.result.converged, "hybrid1/pjrt did not converge");
+    assert!(rep1.true_residual < 1e-4);
+    assert_eq!(rep1.backend, "pjrt");
+
+    // Hybrid-2 on PJRT.
+    let mut eng2 = engine();
+    eng2.load_matrix(&a, &pc.inv_diag).unwrap();
+    let rep2 = hypipe::hybrid::hybrid2::solve(&a, &b, &pc, &mut eng2, &cfg).unwrap();
+    assert!(rep2.result.converged, "hybrid2/pjrt did not converge");
+
+    // Hybrid-3 on PJRT (panel resident).
+    let plan = hypipe::hybrid::hybrid3::plan(&a, &cfg, None, None);
+    let mut eng3 = engine();
+    eng3.load_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag).unwrap();
+    let rep3 = hypipe::hybrid::hybrid3::solve(&a, &b, &pc, &mut eng3, &plan, &cfg).unwrap();
+    assert!(rep3.result.converged, "hybrid3/pjrt did not converge");
+    assert!(rep3.true_residual < 1e-4);
+}
+
+#[test]
+fn simulated_memory_capacity_gates_loads() {
+    require_artifacts!();
+    let a = gen::poisson3d_125pt(10); // 1000 rows, k=125 -> ELL bucket 1024x128
+    let pc = Jacobi::from_matrix(&a);
+    let lib = Rc::new(runtime::open_default().unwrap());
+    let mut tiny = DeviceParams::gpu_k20m();
+    tiny.mem_capacity = Some(500_000); // 0.5 MB: full ELL (~1.6 MB) cannot fit
+    let mut eng = GpuEngine::new(lib, tiny);
+    let err = eng.load_matrix(&a, &pc.inv_diag).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("memory exhausted"), "{msg}");
+    assert_eq!(eng.mem_used(), 0);
+}
+
+#[test]
+fn dots3_artifact_matches_native() {
+    require_artifacts!();
+    let lib = runtime::open_default().unwrap();
+    let n = 1024;
+    let r: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+    let w: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).cos()).collect();
+    let u: Vec<f64> = (0..n).map(|i| (i as f64 * 0.71).sin()).collect();
+    use hypipe::runtime::artifacts::Arg;
+    let out = lib
+        .call("dots3_n1024", &[Arg::F64(&r), Arg::F64(&w), Arg::F64(&u)])
+        .unwrap();
+    let g = hypipe::runtime::artifacts::to_f64_scalar(&out[0]).unwrap();
+    let d = hypipe::runtime::artifacts::to_f64_scalar(&out[1]).unwrap();
+    let nn = hypipe::runtime::artifacts::to_f64_scalar(&out[2]).unwrap();
+    let (g2, d2, nn2) = hypipe::blas::fused_dots3(&r, &w, &u);
+    assert!((g - g2).abs() < 1e-9);
+    assert!((d - d2).abs() < 1e-9);
+    assert!((nn - nn2).abs() < 1e-9);
+}

@@ -1,0 +1,234 @@
+//! Property-based invariants across modules (propcheck; the offline
+//! stand-in for proptest — failing seeds are reported for replay).
+
+use hypipe::blas;
+use hypipe::decomp;
+use hypipe::device::native::{GpuCompute, NativeAccel};
+use hypipe::precond::{Jacobi, Preconditioner};
+use hypipe::runtime::buckets;
+use hypipe::solver::{pipecg, SolveOpts};
+use hypipe::sparse::{gen, Ell};
+use hypipe::util::propcheck::check;
+use hypipe::util::{max_abs_diff, prng::Rng};
+
+fn random_spd(rng: &mut Rng) -> hypipe::sparse::Csr {
+    let n = rng.range(20, 400);
+    let d = rng.range_f64(2.0, 20.0);
+    gen::banded_spd(n, d, rng.next_u64())
+}
+
+#[test]
+fn prop_ell_roundtrip_and_spmv_equivalence() {
+    check("ELL<->CSR roundtrip + SPMV equivalence", 40, |rng| {
+        let a = random_spd(rng);
+        let e = Ell::from_csr(&a);
+        assert_eq!(e.to_csr(), a, "roundtrip");
+        let x: Vec<f64> = (0..a.n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        assert!(max_abs_diff(&a.spmv(&x), &e.spmv(&x)) < 1e-11);
+    });
+}
+
+#[test]
+fn prop_padded_ell_exact_on_live_rows() {
+    check("bucketed padding exactness", 30, |rng| {
+        let a = random_spd(rng);
+        let k = a.max_row_nnz() + rng.below(8);
+        let n_pad = a.n + rng.below(64);
+        let e = Ell::from_csr_padded(&a, k, n_pad).unwrap();
+        let mut x = vec![0.0; n_pad];
+        for v in x.iter_mut().take(a.n) {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+        let y = e.spmv(&x);
+        let y_ref = a.spmv(&x[..a.n]);
+        assert!(max_abs_diff(&y[..a.n], &y_ref) < 1e-11);
+        assert!(y[a.n..].iter().all(|&v| v == 0.0), "padding rows must stay 0");
+    });
+}
+
+#[test]
+fn prop_decomposition_partitions_exactly() {
+    check("1-D + 2-D decomposition partition", 40, |rng| {
+        let a = random_spd(rng);
+        let split = decomp::split_rows_by_nnz(&a, rng.next_f64());
+        assert_eq!(split.nnz_cpu + split.nnz_gpu, a.nnz());
+        let twod = decomp::decompose_2d(&a, &split);
+        assert_eq!(twod.total(), a.nnz());
+        assert_eq!(twod.nnz1_cpu + twod.nnz2_cpu, split.nnz_cpu);
+        assert_eq!(twod.nnz1_gpu + twod.nnz2_gpu, split.nnz_gpu);
+    });
+}
+
+#[test]
+fn prop_panel_split_spmv_linearity() {
+    check("SPMV part1 + part2 == full panel SPMV", 25, |rng| {
+        let a = random_spd(rng);
+        let nc = rng.range(1, a.n);
+        let x: Vec<f64> = (0..a.n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let mut x_loc = x.clone();
+        for v in x_loc.iter_mut().skip(nc) {
+            *v = 0.0;
+        }
+        let mut x_rem = x.clone();
+        for v in x_rem.iter_mut().take(nc) {
+            *v = 0.0;
+        }
+        let mut y_full = vec![0.0; nc];
+        let mut y1 = vec![0.0; nc];
+        let mut y2 = vec![0.0; nc];
+        a.spmv_rows_into(0, nc, &x, &mut y_full);
+        a.spmv_rows_into(0, nc, &x_loc, &mut y1);
+        a.spmv_rows_into(0, nc, &x_rem, &mut y2);
+        for i in 0..nc {
+            assert!((y1[i] + y2[i] - y_full[i]).abs() < 1e-10);
+        }
+    });
+}
+
+#[test]
+fn prop_hybrid_methods_match_sequential_reference() {
+    check("hybrid1/2/3 == sequential PIPECG", 10, |rng| {
+        let a = random_spd(rng);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let cfg = hypipe::hybrid::HybridConfig {
+            opts: SolveOpts {
+                tol: 1e-6,
+                max_iters: 2000,
+                record_history: false,
+            },
+            ..Default::default()
+        };
+        let r_ref = pipecg::solve(&a, &b, &pc, &cfg.opts);
+        if !r_ref.converged {
+            return; // pathological draw; convergence tested elsewhere
+        }
+        let mut acc1 = NativeAccel::with_matrix(&a, &pc.inv_diag);
+        let rep1 = hypipe::hybrid::hybrid1::solve(&a, &b, &pc, &mut acc1, &cfg).unwrap();
+        let mut acc2 = NativeAccel::with_matrix(&a, &pc.inv_diag);
+        let rep2 = hypipe::hybrid::hybrid2::solve(&a, &b, &pc, &mut acc2, &cfg).unwrap();
+        let plan = hypipe::hybrid::hybrid3::plan(&a, &cfg, None, None);
+        let mut acc3 = NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag);
+        let rep3 = hypipe::hybrid::hybrid3::solve(&a, &b, &pc, &mut acc3, &plan, &cfg).unwrap();
+        for rep in [&rep1, &rep2, &rep3] {
+            assert!(rep.result.converged, "{} diverged", rep.method);
+            assert!(
+                max_abs_diff(&rep.result.x, &r_ref.x) < 1e-4,
+                "{} solution mismatch",
+                rep.method
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_native_accel_state_invariants() {
+    check("backend pipecg recurrences: u=M⁻¹r, w=Au", 10, |rng| {
+        let a = random_spd(rng);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let init = pipecg::PipecgState::init(&a, &b, &pc);
+        let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
+        let mut st = hypipe::device::GpuSolveVectors::zeros(a.n, a.n);
+        st.r.copy_from_slice(&init.r);
+        st.u.copy_from_slice(&init.u);
+        st.w.copy_from_slice(&init.w);
+        st.m.copy_from_slice(&init.m);
+        st.n.copy_from_slice(&init.n);
+        let (mut gamma, mut delta) = (init.gamma, init.delta);
+        let (mut gamma_prev, mut alpha_prev) = (0.0, 0.0);
+        for it in 0..rng.range(2, 12) {
+            let (alpha, beta) = if it == 0 {
+                (gamma / delta, 0.0)
+            } else {
+                let bta = gamma / gamma_prev;
+                (gamma / (delta - bta * gamma / alpha_prev), bta)
+            };
+            let (g, d, _) = acc.pipecg_step(&mut st, alpha, beta).unwrap();
+            gamma_prev = gamma;
+            alpha_prev = alpha;
+            gamma = g;
+            delta = d;
+            let u_def = pc.apply_alloc(&st.r);
+            let w_def = a.spmv(&st.u);
+            assert!(max_abs_diff(&st.u, &u_def) < 1e-7);
+            assert!(max_abs_diff(&st.w, &w_def) < 1e-7);
+        }
+    });
+}
+
+#[test]
+fn prop_bucket_padding_helpers() {
+    check("pad_vec / pad_diag / bucket monotonicity", 100, |rng| {
+        let n = rng.range(1, 300_000);
+        if let Ok(b) = buckets::bucket_n(n) {
+            assert!(b >= n && b >= 1024);
+            // minimality: the next smaller bucket (if any) must not fit
+            if let Some(&prev) = buckets::N_BUCKETS.iter().rev().find(|&&x| x < b) {
+                assert!(prev < n || b == 1024);
+            }
+        }
+        let len = rng.range(1, 100);
+        let v: Vec<f64> = (0..len).map(|_| rng.next_f64()).collect();
+        let padded = buckets::pad_vec(&v, len + rng.below(50));
+        assert_eq!(&padded[..len], &v[..]);
+        assert!(padded[len..].iter().all(|&x| x == 0.0));
+        let pd = buckets::pad_diag(&v, len + 3);
+        assert!(pd[len..].iter().all(|&x| x == 1.0));
+    });
+}
+
+#[test]
+fn prop_fused_dots_match_separate() {
+    check("fused dots == separate dots", 60, |rng| {
+        let n = rng.range(1, 3000);
+        let r: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let u: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let (g, d, nn) = blas::fused_dots3(&r, &w, &u);
+        assert!((g - blas::dot(&r, &u)).abs() < 1e-10);
+        assert!((d - blas::dot(&w, &u)).abs() < 1e-10);
+        assert!((nn - blas::dot(&u, &u)).abs() < 1e-10);
+        assert!(nn >= 0.0);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    use hypipe::util::json::{self, Json};
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| char::from_u32(0x20 + rng.below(0x50) as u32).unwrap())
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json pretty/compact roundtrip", 150, |rng| {
+        let v = random_json(rng, 3);
+        assert_eq!(json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(json::parse(&v.to_pretty()).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_mm_roundtrip() {
+    check("MatrixMarket write/read roundtrip", 10, |rng| {
+        let a = random_spd(rng);
+        let path = std::env::temp_dir().join(format!("hypipe_prop_{}.mtx", rng.next_u64()));
+        hypipe::sparse::mm::write_mm(&a, &path).unwrap();
+        let b = hypipe::sparse::mm::read_mm(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(a, b);
+    });
+}
