@@ -1,0 +1,123 @@
+//! Ablation: serial vs pool-parallel host kernels (the PR's wall-clock
+//! claim, measured). Sweeps thread counts over the hot kernels on a
+//! 512×512 Poisson system (n = 262 144, ~1.3 M nnz) and times a full
+//! PIPECG solve serial vs parallel.
+//!
+//! `HYPIPE_BENCH_SAMPLES` controls samples; `HYPIPE_THREADS` caps the
+//! "all cores" row.
+
+use hypipe::bench;
+use hypipe::blas::{self, PipecgVectors};
+use hypipe::precond::Jacobi;
+use hypipe::solver::{pipecg, SolveOpts};
+use hypipe::sparse::{gen, Ell};
+use hypipe::util::pool;
+use hypipe::util::prng::Rng;
+
+fn main() {
+    let all = pool::default_threads();
+    bench::header(
+        "Ablation — serial vs parallel CPU execution layer",
+        &format!("512x512 Poisson (n=262144); thread counts up to {all} (this box)"),
+    );
+    let samples = bench::samples(10);
+    let a = gen::poisson2d_5pt(512, 512);
+    let ell = Ell::from_csr(&a);
+    let n = a.n;
+    let mut rng = Rng::new(42);
+    let rv = |rng: &mut Rng| -> Vec<f64> { (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect() };
+    let x = rv(&mut rng);
+    let mut y = vec![0.0; n];
+
+    let mut threads: Vec<usize> = [1usize, 2, 4, all].into_iter().filter(|&t| t <= all).collect();
+    threads.dedup();
+
+    let mut spmv_base = 0.0;
+    for &t in &threads {
+        let pl = pool::with_threads(t);
+        let s = bench::time(&format!("spmv CSR 512^2 (t={t})"), 2, samples, || {
+            a.par_spmv_into(&pl, &x, &mut y);
+        });
+        if t == 1 {
+            spmv_base = s.mean;
+        }
+        println!("  {}  ({:.2}x vs serial)", s.report(), spmv_base / s.mean);
+    }
+    let mut ell_base = 0.0;
+    for &t in &threads {
+        let pl = pool::with_threads(t);
+        let s = bench::time(&format!("spmv ELL 512^2 (t={t})"), 2, samples, || {
+            ell.par_spmv_into(&pl, &x, &mut y);
+        });
+        if t == 1 {
+            ell_base = s.mean;
+        }
+        println!("  {}  ({:.2}x vs serial)", s.report(), ell_base / s.mean);
+    }
+
+    // Merged VMA (10 vectors) and fused dots.
+    let nv = rv(&mut rng);
+    let mv = rv(&mut rng);
+    let mut vecs: Vec<Vec<f64>> = (0..8).map(|_| rv(&mut rng)).collect();
+    let mut vma_base = 0.0;
+    for &t in &threads {
+        let pl = pool::with_threads(t);
+        let s = bench::time(&format!("fused VMA 262k (t={t})"), 2, samples, || {
+            let [z, q, s, p, xx, r, u, w] = &mut vecs[..] else {
+                unreachable!()
+            };
+            blas::par_fused_pipecg_update(
+                &pl,
+                &nv,
+                &mv,
+                1.000001,
+                0.999999,
+                &mut PipecgVectors { z, q, s, p, x: xx, r, u, w },
+            );
+        });
+        if t == 1 {
+            vma_base = s.mean;
+        }
+        println!("  {}  ({:.2}x vs serial)", s.report(), vma_base / s.mean);
+    }
+    let (r, w, u) = (rv(&mut rng), rv(&mut rng), rv(&mut rng));
+    let mut dots_base = 0.0;
+    for &t in &threads {
+        let pl = pool::with_threads(t);
+        let s = bench::time(&format!("fused dots3 262k (t={t})"), 2, samples, || {
+            std::hint::black_box(blas::par_fused_dots3(&pl, &r, &w, &u));
+        });
+        if t == 1 {
+            dots_base = s.mean;
+        }
+        println!("  {}  ({:.2}x vs serial)", s.report(), dots_base / s.mean);
+    }
+
+    // End-to-end: a capped-iteration PIPECG solve, serial vs all-cores.
+    println!();
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let iters = bench::bench_iters(60);
+    let mut solve_base = 0.0;
+    for &t in &threads {
+        let opts = SolveOpts {
+            tol: 1e-30, // run the full iteration budget
+            max_iters: iters,
+            record_history: false,
+            threads: t,
+        };
+        let s = bench::time(
+            &format!("pipecg solve 512^2 x{iters} iters (t={t})"),
+            1,
+            samples.min(5),
+            || {
+                std::hint::black_box(pipecg::solve(&a, &b, &pc, &opts));
+            },
+        );
+        if t == 1 {
+            solve_base = s.mean;
+        }
+        println!("  {}  ({:.2}x vs serial)", s.report(), solve_base / s.mean);
+    }
+    println!("\n(virtual-timeline totals are thread-count independent by design; see lib.rs docs)");
+}

@@ -6,12 +6,16 @@ use hypipe::bench;
 use hypipe::blas;
 use hypipe::runtime::{self, artifacts::Arg};
 use hypipe::sparse::{gen, Ell};
+use hypipe::util::pool;
 use hypipe::util::prng::Rng;
 
 fn main() {
     bench::header(
         "Micro — host kernels + PJRT dispatch",
-        "wall time on this box (single core)",
+        &format!(
+            "wall time on this box (serial + pool-parallel, {} cores)",
+            pool::default_threads()
+        ),
     );
     let samples = bench::samples(20);
     let n = 1 << 20;
@@ -32,6 +36,16 @@ fn main() {
         std::hint::black_box(blas::fused_dots3(&x, &y, &z));
     });
     println!("  {}  ({:.2} GB/s)", s.report(), 24.0 * n as f64 / s.mean / 1e9);
+    let par = pool::with_threads(0);
+    let s = bench::time(
+        &format!("par fused_dots3 1M (t={})", par.threads()),
+        3,
+        samples,
+        || {
+            std::hint::black_box(blas::par_fused_dots3(&par, &x, &y, &z));
+        },
+    );
+    println!("  {}  ({:.2} GB/s)", s.report(), 24.0 * n as f64 / s.mean / 1e9);
 
     // SPMV formats.
     let a = gen::poisson3d_125pt(20); // 8000 rows, ~1M nnz
@@ -46,6 +60,24 @@ fn main() {
     let s = bench::time("spmv ELL poisson125-20^3", 3, samples, || {
         ell.spmv_into(&xs, &mut ys);
     });
+    println!("  {}  ({:.2} GB/s effective)", s.report(), traffic / s.mean / 1e9);
+    let s = bench::time(
+        &format!("par spmv CSR poisson125-20^3 (t={})", par.threads()),
+        3,
+        samples,
+        || {
+            a.par_spmv_into(&par, &xs, &mut ys);
+        },
+    );
+    println!("  {}  ({:.2} GB/s effective)", s.report(), traffic / s.mean / 1e9);
+    let s = bench::time(
+        &format!("par spmv ELL poisson125-20^3 (t={})", par.threads()),
+        3,
+        samples,
+        || {
+            ell.par_spmv_into(&par, &xs, &mut ys);
+        },
+    );
     println!("  {}  ({:.2} GB/s effective)", s.report(), traffic / s.mean / 1e9);
 
     // PJRT dispatch.

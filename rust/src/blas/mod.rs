@@ -7,6 +7,31 @@
 //! Separate (`dot`, `axpy`, …) and fused (`fused_pipecg_update`,
 //! `fused_dots3`, …) forms are both provided; the ablation bench
 //! `ablation_merged_vma` measures the difference.
+//!
+//! Every hot kernel also has a `par_*` form that distributes contiguous
+//! index blocks over a shared [`ThreadPool`] (`util::pool`). Elementwise
+//! kernels (SPMV, the merged VMAs) are **bit-identical** to their serial
+//! forms for any thread count; reductions (`par_dot`, `par_fused_dots3`)
+//! keep one partial per block and reduce in block order, so they are
+//! bit-reproducible for a fixed thread count and agree with the serial
+//! form to rounding (≤ 1e-12 relative in practice). Short vectors
+//! (`< pool::PAR_MIN_LEN`) fall back to the serial kernels: fork/join
+//! latency would dominate the loop. `ablation_parallel_cpu` measures the
+//! serial-vs-parallel wall-clock.
+
+use crate::util::pool::{self, SendPtr, ThreadPool};
+
+/// Blocks to split a length-`len` kernel into on `pool` (1 block means
+/// "run serial"). Short vectors stay serial; longer ones get at most one
+/// block per lane and at least `pool::PAR_CHUNK_MIN` elements per block,
+/// so fork/join never dominates the loop.
+fn par_blocks(pool: &ThreadPool, len: usize) -> usize {
+    if len < pool::PAR_MIN_LEN {
+        1
+    } else {
+        pool::block_count(len, pool.threads())
+    }
+}
 
 /// `(x, y)` dot product.
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
@@ -29,6 +54,23 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     acc[0] + acc[1] + acc[2] + acc[3] + tail
 }
 
+/// Parallel [`dot`]: per-block partials reduced in block order
+/// (deterministic for a fixed thread count).
+pub fn par_dot(pool: &ThreadPool, x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let blocks = par_blocks(pool, x.len());
+    if blocks <= 1 {
+        return dot(x, y);
+    }
+    let len = x.len();
+    pool.map_blocks(blocks, |b| {
+        let (lo, hi) = pool::chunk(len, blocks, b);
+        dot(&x[lo..hi], &y[lo..hi])
+    })
+    .into_iter()
+    .sum()
+}
+
 /// Squared Euclidean norm.
 pub fn norm2_sq(x: &[f64]) -> f64 {
     dot(x, x)
@@ -47,12 +89,36 @@ pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// Parallel [`axpy`]; bit-identical to serial for any thread count.
+pub fn par_axpy(pool: &ThreadPool, a: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    if par_blocks(pool, x.len()) <= 1 {
+        return axpy(a, x, y);
+    }
+    let yp = SendPtr::new(y);
+    pool.run_chunks(x.len(), |lo, hi| {
+        axpy(a, &x[lo..hi], unsafe { yp.range_mut(lo, hi) });
+    });
+}
+
 /// `y = x + a * y` (the CG "xpay" update `p = u + β p`).
 pub fn xpay(x: &[f64], a: f64, y: &mut [f64]) {
     assert_eq!(x.len(), y.len());
     for i in 0..x.len() {
         y[i] = x[i] + a * y[i];
     }
+}
+
+/// Parallel [`xpay`]; bit-identical to serial for any thread count.
+pub fn par_xpay(pool: &ThreadPool, x: &[f64], a: f64, y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    if par_blocks(pool, x.len()) <= 1 {
+        return xpay(x, a, y);
+    }
+    let yp = SendPtr::new(y);
+    pool.run_chunks(x.len(), |lo, hi| {
+        xpay(&x[lo..hi], a, unsafe { yp.range_mut(lo, hi) });
+    });
 }
 
 /// `x *= a`.
@@ -74,6 +140,19 @@ pub fn hadamard(d: &[f64], x: &[f64], out: &mut [f64]) {
     for i in 0..x.len() {
         out[i] = d[i] * x[i];
     }
+}
+
+/// Parallel [`hadamard`]; bit-identical to serial for any thread count.
+pub fn par_hadamard(pool: &ThreadPool, d: &[f64], x: &[f64], out: &mut [f64]) {
+    assert_eq!(d.len(), x.len());
+    assert_eq!(x.len(), out.len());
+    if par_blocks(pool, x.len()) <= 1 {
+        return hadamard(d, x, out);
+    }
+    let op = SendPtr::new(out);
+    pool.run_chunks(x.len(), |lo, hi| {
+        hadamard(&d[lo..hi], &x[lo..hi], unsafe { op.range_mut(lo, hi) });
+    });
 }
 
 /// The PIPECG vector-update state mutated by the fused kernels
@@ -140,6 +219,68 @@ pub fn fused_pipecg_update(
     }
 }
 
+/// Parallel [`fused_pipecg_update`]: each lane runs the same fused loop on
+/// a contiguous block of the 10 vectors. All updates are elementwise, so
+/// the result is bit-identical to the serial kernel for any thread count.
+pub fn par_fused_pipecg_update(
+    pool: &ThreadPool,
+    n_vec: &[f64],
+    m_vec: &[f64],
+    alpha: f64,
+    beta: f64,
+    v: &mut PipecgVectors<'_>,
+) {
+    let len = n_vec.len();
+    if par_blocks(pool, len) <= 1 {
+        return fused_pipecg_update(n_vec, m_vec, alpha, beta, v);
+    }
+    assert!(
+        [
+            m_vec.len(),
+            v.z.len(),
+            v.q.len(),
+            v.s.len(),
+            v.p.len(),
+            v.x.len(),
+            v.r.len(),
+            v.u.len(),
+            v.w.len(),
+        ]
+        .iter()
+        .all(|&l| l == len),
+        "par_fused_pipecg_update: length mismatch"
+    );
+    let (z, q, s, p) = (
+        SendPtr::new(v.z),
+        SendPtr::new(v.q),
+        SendPtr::new(v.s),
+        SendPtr::new(v.p),
+    );
+    let (x, r, u, w) = (
+        SendPtr::new(v.x),
+        SendPtr::new(v.r),
+        SendPtr::new(v.u),
+        SendPtr::new(v.w),
+    );
+    pool.run_chunks(len, |lo, hi| {
+        // SAFETY: chunks are pairwise disjoint; the serial kernel asserts
+        // the per-block lengths agree.
+        let mut block = unsafe {
+            PipecgVectors {
+                z: z.range_mut(lo, hi),
+                q: q.range_mut(lo, hi),
+                s: s.range_mut(lo, hi),
+                p: p.range_mut(lo, hi),
+                x: x.range_mut(lo, hi),
+                r: r.range_mut(lo, hi),
+                u: u.range_mut(lo, hi),
+                w: w.range_mut(lo, hi),
+            }
+        };
+        fused_pipecg_update(&n_vec[lo..hi], &m_vec[lo..hi], alpha, beta, &mut block);
+    });
+}
+
 /// Unfused form of [`fused_pipecg_update`] — separate loop per operation,
 /// i.e. what a library composed of individual BLAS calls does. Used as the
 /// baseline in the merged-VMA ablation and to cross-check the fused kernel.
@@ -175,10 +316,34 @@ pub fn fused_dots3(r: &[f64], w: &[f64], u: &[f64]) -> (f64, f64, f64) {
     (g, d, nn)
 }
 
+/// Parallel [`fused_dots3`]: one `(γ, δ, ‖u‖²)` partial per block, reduced
+/// in block order — bit-reproducible for a fixed thread count.
+pub fn par_fused_dots3(pool: &ThreadPool, r: &[f64], w: &[f64], u: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(r.len(), u.len());
+    assert_eq!(w.len(), u.len());
+    let len = u.len();
+    let blocks = par_blocks(pool, len);
+    if blocks <= 1 {
+        return fused_dots3(r, w, u);
+    }
+    let parts = pool.map_blocks(blocks, |b| {
+        let (lo, hi) = pool::chunk(len, blocks, b);
+        fused_dots3(&r[lo..hi], &w[lo..hi], &u[lo..hi])
+    });
+    let (mut g, mut d, mut nn) = (0.0, 0.0, 0.0);
+    for (gb, db, nb) in parts {
+        g += gb;
+        d += db;
+        nn += nb;
+    }
+    (g, d, nn)
+}
+
 /// Partial fused update used by Hybrid-PIPECG-2's host side *before* the
 /// `n` vector arrives (Alg. 2 ops that do not involve `n`):
 /// `q = m + βq; s = w + βs; r -= αs; u -= αq` (and `p`, `x` when tracked).
 /// Returns nothing; see `hybrid::hybrid2` for the full protocol.
+#[allow(clippy::too_many_arguments)]
 pub fn fused_update_without_n(
     m_vec: &[f64],
     alpha: f64,
@@ -201,6 +366,44 @@ pub fn fused_update_without_n(
     }
 }
 
+/// Parallel [`fused_update_without_n`]; bit-identical to serial.
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_update_without_n(
+    pool: &ThreadPool,
+    m_vec: &[f64],
+    alpha: f64,
+    beta: f64,
+    q: &mut [f64],
+    s: &mut [f64],
+    r: &mut [f64],
+    u: &mut [f64],
+    w: &[f64],
+) {
+    let len = m_vec.len();
+    if par_blocks(pool, len) <= 1 {
+        return fused_update_without_n(m_vec, alpha, beta, q, s, r, u, w);
+    }
+    assert!(q.len() == len && s.len() == len && r.len() == len && u.len() == len && w.len() == len);
+    let (qp, sp, rp, up) = (
+        SendPtr::new(q),
+        SendPtr::new(s),
+        SendPtr::new(r),
+        SendPtr::new(u),
+    );
+    pool.run_chunks(len, |lo, hi| unsafe {
+        fused_update_without_n(
+            &m_vec[lo..hi],
+            alpha,
+            beta,
+            qp.range_mut(lo, hi),
+            sp.range_mut(lo, hi),
+            rp.range_mut(lo, hi),
+            up.range_mut(lo, hi),
+            &w[lo..hi],
+        );
+    });
+}
+
 /// Completion of Hybrid-PIPECG-2's host update once `n` has been copied:
 /// `z = n + βz; w -= αz` and the preconditioned `m = d .* w`.
 pub fn fused_update_with_n(
@@ -221,6 +424,127 @@ pub fn fused_update_with_n(
         w[i] = wi;
         m[i] = inv_diag[i] * wi;
     }
+}
+
+/// Parallel [`fused_update_with_n`]; bit-identical to serial.
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_update_with_n(
+    pool: &ThreadPool,
+    n_vec: &[f64],
+    inv_diag: &[f64],
+    alpha: f64,
+    beta: f64,
+    z: &mut [f64],
+    w: &mut [f64],
+    m: &mut [f64],
+) {
+    let len = n_vec.len();
+    if par_blocks(pool, len) <= 1 {
+        return fused_update_with_n(n_vec, inv_diag, alpha, beta, z, w, m);
+    }
+    assert!(z.len() == len && w.len() == len && m.len() == len && inv_diag.len() == len);
+    let (zp, wp, mp) = (SendPtr::new(z), SendPtr::new(w), SendPtr::new(m));
+    pool.run_chunks(len, |lo, hi| unsafe {
+        fused_update_with_n(
+            &n_vec[lo..hi],
+            &inv_diag[lo..hi],
+            alpha,
+            beta,
+            zp.range_mut(lo, hi),
+            wp.range_mut(lo, hi),
+            mp.range_mut(lo, hi),
+        );
+    });
+}
+
+/// Hybrid-PIPECG-3's pre-exchange local update (the n-independent subset
+/// of the merged VMA on one device's row slice, Alg. 2 lines 10–16 minus
+/// `z`): `q = m + βq; s = w + βs; p = u + βp; x += αp; r -= αs; u -= αq`.
+/// `w` is read-only here (its update needs `n`, which waits for the `m`
+/// exchange). Shared by the Hybrid-3 CPU side and the native accelerator
+/// backend so both devices run literally the same kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_h3_pre(
+    m_loc: &[f64],
+    w: &[f64],
+    alpha: f64,
+    beta: f64,
+    q: &mut [f64],
+    s: &mut [f64],
+    p: &mut [f64],
+    x: &mut [f64],
+    r: &mut [f64],
+    u: &mut [f64],
+) {
+    let len = m_loc.len();
+    assert!(
+        w.len() == len
+            && q.len() == len
+            && s.len() == len
+            && p.len() == len
+            && x.len() == len
+            && r.len() == len
+            && u.len() == len,
+        "fused_h3_pre: length mismatch"
+    );
+    for i in 0..len {
+        let qi = m_loc[i] + beta * q[i];
+        let si = w[i] + beta * s[i];
+        let pi = u[i] + beta * p[i]; // pre-update u, as in Alg. 2
+        q[i] = qi;
+        s[i] = si;
+        p[i] = pi;
+        x[i] += alpha * pi;
+        r[i] -= alpha * si;
+        u[i] -= alpha * qi;
+    }
+}
+
+/// Parallel [`fused_h3_pre`]; bit-identical to serial.
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_h3_pre(
+    pool: &ThreadPool,
+    m_loc: &[f64],
+    w: &[f64],
+    alpha: f64,
+    beta: f64,
+    q: &mut [f64],
+    s: &mut [f64],
+    p: &mut [f64],
+    x: &mut [f64],
+    r: &mut [f64],
+    u: &mut [f64],
+) {
+    let len = m_loc.len();
+    if par_blocks(pool, len) <= 1 {
+        return fused_h3_pre(m_loc, w, alpha, beta, q, s, p, x, r, u);
+    }
+    assert!(
+        w.len() == len
+            && q.len() == len
+            && s.len() == len
+            && p.len() == len
+            && x.len() == len
+            && r.len() == len
+            && u.len() == len,
+        "par_fused_h3_pre: length mismatch"
+    );
+    let (qp, sp, pp) = (SendPtr::new(q), SendPtr::new(s), SendPtr::new(p));
+    let (xp, rp, up) = (SendPtr::new(x), SendPtr::new(r), SendPtr::new(u));
+    pool.run_chunks(len, |lo, hi| unsafe {
+        fused_h3_pre(
+            &m_loc[lo..hi],
+            &w[lo..hi],
+            alpha,
+            beta,
+            qp.range_mut(lo, hi),
+            sp.range_mut(lo, hi),
+            pp.range_mut(lo, hi),
+            xp.range_mut(lo, hi),
+            rp.range_mut(lo, hi),
+            up.range_mut(lo, hi),
+        );
+    });
 }
 
 #[cfg(test)]
@@ -362,6 +686,80 @@ mod tests {
         assert!(crate::util::max_abs_diff(&w1, &w2) < 1e-12);
         // m = M⁻¹ w with unit diag = w
         assert!(crate::util::max_abs_diff(&m2, &w2) < 1e-12);
+    }
+
+    /// fused_h3_pre + fused_update_with_n must together reproduce the full
+    /// merged VMA (this is what lets Hybrid-3 split the update around the
+    /// m exchange without changing the numerics).
+    #[test]
+    fn h3_split_update_matches_full_fused() {
+        let mut rng = Rng::new(77);
+        let n = 96;
+        let nv = randvec(&mut rng, n);
+        let mv = randvec(&mut rng, n);
+        let inv_diag = vec![1.0; n];
+        let (alpha, beta) = (0.9, 0.4);
+        let init: Vec<Vec<f64>> = (0..8).map(|_| randvec(&mut rng, n)).collect();
+
+        let mut a: Vec<Vec<f64>> = init.clone();
+        {
+            let [z, q, s, p, x, r, u, w] = &mut a[..] else {
+                unreachable!()
+            };
+            fused_pipecg_update(
+                &nv,
+                &mv,
+                alpha,
+                beta,
+                &mut PipecgVectors { z, q, s, p, x, r, u, w },
+            );
+        }
+
+        let mut b: Vec<Vec<f64>> = init;
+        let mut m_new = vec![0.0; n];
+        {
+            let [z, q, s, p, x, r, u, w] = &mut b[..] else {
+                unreachable!()
+            };
+            fused_h3_pre(&mv, w, alpha, beta, q, s, p, x, r, u);
+            fused_update_with_n(&nv, &inv_diag, alpha, beta, z, w, &mut m_new);
+        }
+        for (va, vb) in a.iter().zip(&b) {
+            assert!(crate::util::max_abs_diff(va, vb) < 1e-12);
+        }
+        // m = D⁻¹ w with unit diagonal
+        assert!(crate::util::max_abs_diff(&m_new, &b[7]) < 1e-12);
+    }
+
+    /// The par_* kernels agree with their serial forms (exhaustive sweeps
+    /// over thread counts live in tests/parallel_kernels.rs; this is the
+    /// in-module smoke check).
+    #[test]
+    fn par_kernels_match_serial_smoke() {
+        use crate::util::pool;
+        let mut rng = Rng::new(123);
+        let n = 10_001; // non-divisible by the pool sizes, above PAR_MIN_LEN
+        let x = randvec(&mut rng, n);
+        let y = randvec(&mut rng, n);
+        let z = randvec(&mut rng, n);
+        let pool = pool::with_threads(4);
+        assert!((par_dot(&pool, &x, &y) - dot(&x, &y)).abs() < 1e-10);
+        let (g, d, nn) = par_fused_dots3(&pool, &x, &y, &z);
+        let (gs, ds, ns) = fused_dots3(&x, &y, &z);
+        assert!((g - gs).abs() < 1e-10 && (d - ds).abs() < 1e-10 && (nn - ns).abs() < 1e-10);
+        let mut a = y.clone();
+        let mut b = y.clone();
+        axpy(0.3, &x, &mut a);
+        par_axpy(&pool, 0.3, &x, &mut b);
+        assert_eq!(a, b);
+        xpay(&x, 0.7, &mut a);
+        par_xpay(&pool, &x, 0.7, &mut b);
+        assert_eq!(a, b);
+        let mut oa = vec![0.0; n];
+        let mut ob = vec![0.0; n];
+        hadamard(&x, &y, &mut oa);
+        par_hadamard(&pool, &x, &y, &mut ob);
+        assert_eq!(oa, ob);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Data decomposition (paper §IV-C1/C2).
+//! Data decomposition (paper §IV-C1/C2) and row partitions.
 //!
 //! **1-D**: rows split at `N_cpu` so the CPU's rows hold ≈ `nnz · r_cpu`
 //! stored entries (equal-or-slightly-less, exactly as the paper rounds).
@@ -9,8 +9,133 @@
 //! SPMV part 2 — waits for the `m` exchange). The counts drive the
 //! overlap model; numerically part 1 + part 2 together are the plain
 //! panel SPMV.
+//!
+//! **Intra-device**: [`RowPartition`] generalizes the same
+//! equal-nnz-prefix idea from 2 devices to *t* CPU worker lanes — it is
+//! the load-balancing input of the parallel SPMV (`Csr::par_spmv_into`).
+//! Partitions are cached per matrix in a [`PartitionCache`].
+
+use std::sync::{Arc, Mutex};
 
 use crate::sparse::Csr;
+
+/// Contiguous row blocks for intra-device parallelism. `bounds` has
+/// `blocks + 1` monotone entries; block `b` owns rows
+/// `[bounds[b], bounds[b+1])`. Construction is a pure function of the
+/// sparsity structure and the block count, so a fixed thread count always
+/// yields the same partition (the determinism contract of `util::pool`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowPartition {
+    bounds: Vec<usize>,
+}
+
+impl RowPartition {
+    /// nnz-balanced split of rows `[r0, r1)` of a CSR `row_ptr` into
+    /// `blocks` contiguous blocks: block `b` starts at the first row whose
+    /// nnz prefix reaches `b/blocks` of the range's stored entries — the
+    /// per-thread analogue of [`split_rows_by_nnz`].
+    pub fn by_nnz_range(row_ptr: &[usize], r0: usize, r1: usize, blocks: usize) -> RowPartition {
+        assert!(r0 <= r1 && r1 + 1 <= row_ptr.len());
+        let blocks = blocks.max(1);
+        let base = row_ptr[r0];
+        let total = row_ptr[r1] - base;
+        let mut bounds = Vec::with_capacity(blocks + 1);
+        bounds.push(r0);
+        for b in 1..blocks {
+            let target = base + total * b / blocks;
+            // First row in [prev, r1] whose nnz prefix reaches the target.
+            let (mut lo, mut hi) = (*bounds.last().unwrap(), r1);
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if row_ptr[mid] < target {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            bounds.push(lo);
+        }
+        bounds.push(r1);
+        RowPartition { bounds }
+    }
+
+    /// nnz-balanced split of all rows.
+    pub fn by_nnz(row_ptr: &[usize], blocks: usize) -> RowPartition {
+        RowPartition::by_nnz_range(row_ptr, 0, row_ptr.len() - 1, blocks)
+    }
+
+    /// Uniform split of `len` items (ELL rows, dense vectors).
+    pub fn uniform(len: usize, blocks: usize) -> RowPartition {
+        let blocks = blocks.max(1);
+        let bounds = (0..=blocks).map(|b| len * b / blocks).collect();
+        RowPartition { bounds }
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// `[lo, hi)` row range of block `b` (possibly empty).
+    pub fn range(&self, b: usize) -> (usize, usize) {
+        (self.bounds[b], self.bounds[b + 1])
+    }
+
+    /// First row of the partitioned range.
+    pub fn start(&self) -> usize {
+        self.bounds[0]
+    }
+
+    /// One-past-last row of the partitioned range.
+    pub fn end(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// Lazy per-matrix cache of [`RowPartition`]s, keyed by `(r0, r1, blocks)`.
+/// Lives inside `Csr`/`Ell` so repeated parallel SPMVs (thousands per
+/// solve) reuse one partition. Interior-mutable and thread-safe; cloning a
+/// matrix starts with an empty cache (partitions are cheap to rebuild).
+#[derive(Default)]
+pub struct PartitionCache {
+    inner: Mutex<Vec<(usize, usize, Arc<RowPartition>)>>,
+}
+
+impl PartitionCache {
+    /// Fetch the partition for rows `[r0, r1)` in `blocks` blocks, building
+    /// it with `build` on first use.
+    pub fn get(
+        &self,
+        r0: usize,
+        r1: usize,
+        blocks: usize,
+        build: impl FnOnce() -> RowPartition,
+    ) -> Arc<RowPartition> {
+        let mut guard = self.inner.lock().unwrap();
+        if let Some((_, _, p)) = guard
+            .iter()
+            .find(|(a, b, p)| *a == r0 && *b == r1 && p.blocks() == blocks)
+        {
+            return p.clone();
+        }
+        let p = Arc::new(build());
+        debug_assert!(p.start() == r0 && p.end() == r1 && p.blocks() == blocks);
+        guard.push((r0, r1, p.clone()));
+        p
+    }
+}
+
+impl Clone for PartitionCache {
+    fn clone(&self) -> Self {
+        PartitionCache::default()
+    }
+}
+
+impl std::fmt::Debug for PartitionCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.inner.lock().map(|g| g.len()).unwrap_or(0);
+        write!(f, "PartitionCache({n} cached)")
+    }
+}
 
 /// 1-D row split. CPU owns rows `[0, n_cpu)`, GPU owns `[n_cpu, n)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -160,6 +285,62 @@ mod tests {
             assert_eq!(d.nnz1_cpu + d.nnz2_cpu, s.nnz_cpu);
             assert_eq!(d.nnz1_gpu + d.nnz2_gpu, s.nnz_gpu);
         });
+    }
+
+    #[test]
+    fn row_partition_covers_and_balances() {
+        check("RowPartition covers rows, balances nnz", 30, |rng| {
+            let n = rng.range(5, 400);
+            let a = gen::banded_spd(n, rng.range_f64(2.0, 16.0), rng.next_u64());
+            for blocks in [1, 2, 3, 4, 7, 16] {
+                let p = RowPartition::by_nnz(&a.row_ptr, blocks);
+                assert_eq!(p.blocks(), blocks);
+                assert_eq!(p.start(), 0);
+                assert_eq!(p.end(), a.n);
+                let mut prev = 0;
+                let ideal = a.nnz() as f64 / blocks as f64;
+                for b in 0..blocks {
+                    let (lo, hi) = p.range(b);
+                    assert_eq!(lo, prev, "contiguous");
+                    prev = hi;
+                    let nnz_b = a.row_ptr[hi] - a.row_ptr[lo];
+                    // Each block is within one max-row of the ideal share.
+                    assert!(
+                        (nnz_b as f64 - ideal).abs() <= a.max_row_nnz() as f64 + 1.0,
+                        "block {b}: {nnz_b} vs ideal {ideal}"
+                    );
+                }
+                assert_eq!(prev, a.n);
+            }
+        });
+    }
+
+    #[test]
+    fn row_partition_uniform_and_ranges() {
+        let p = RowPartition::uniform(10, 3);
+        assert_eq!(p.blocks(), 3);
+        assert_eq!(p.range(0), (0, 3));
+        assert_eq!(p.range(1), (3, 6));
+        assert_eq!(p.range(2), (6, 10));
+        // Degenerate: more blocks than items still covers exactly.
+        let p = RowPartition::uniform(2, 5);
+        let total: usize = (0..5).map(|b| p.range(b).1 - p.range(b).0).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn partition_cache_reuses_and_keys_correctly() {
+        let a = gen::banded_spd(200, 8.0, 1);
+        let c = PartitionCache::default();
+        let p1 = c.get(0, a.n, 4, || RowPartition::by_nnz(&a.row_ptr, 4));
+        let p2 = c.get(0, a.n, 4, || panic!("must be cached"));
+        assert!(std::sync::Arc::ptr_eq(&p1, &p2));
+        let p3 = c.get(0, a.n, 2, || RowPartition::by_nnz(&a.row_ptr, 2));
+        assert_eq!(p3.blocks(), 2);
+        let p4 = c.get(10, 50, 4, || {
+            RowPartition::by_nnz_range(&a.row_ptr, 10, 50, 4)
+        });
+        assert_eq!((p4.start(), p4.end()), (10, 50));
     }
 
     #[test]

@@ -1,12 +1,16 @@
 //! Host engine: the CPU-role device.
 //!
 //! Executes the solver kernels natively (the merged-VMA fused loops of
-//! `blas`) and accounts every operation — bytes moved, launches, virtual
-//! seconds — so the metrics layer can report per-device utilisation and the
-//! perf model can calibrate against the same op stream the hybrids use.
+//! `blas`, distributed over the shared worker pool) and accounts every
+//! operation — bytes moved, launches, virtual seconds — so the metrics
+//! layer can report per-device utilisation and the perf model can
+//! calibrate against the same op stream the hybrids use.
+
+use std::sync::Arc;
 
 use crate::blas::{self, PipecgVectors};
 use crate::sparse::Csr;
+use crate::util::pool::{self, ThreadPool};
 
 use super::costmodel::{CostModel, DeviceParams, OpKind};
 
@@ -22,14 +26,27 @@ pub struct OpLog {
 pub struct CpuEngine {
     pub params: DeviceParams,
     pub log: OpLog,
+    pool: Arc<ThreadPool>,
 }
 
 impl CpuEngine {
+    /// Engine on the default shared pool (all cores / `HYPIPE_THREADS`).
     pub fn new(params: DeviceParams) -> CpuEngine {
+        CpuEngine::with_pool(params, pool::with_threads(0))
+    }
+
+    /// Engine on an explicit pool (tests, thread-count ablations).
+    pub fn with_pool(params: DeviceParams, pool: Arc<ThreadPool>) -> CpuEngine {
         CpuEngine {
             params,
             log: OpLog::default(),
+            pool,
         }
+    }
+
+    /// The worker pool this engine's kernels run on.
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
     }
 
     /// Virtual duration of `op` on this device (also logs it).
@@ -46,22 +63,23 @@ impl CpuEngine {
         CostModel::exec_time(&self.params, op)
     }
 
-    /// `y = A x` over rows `[r0, r1)`; returns virtual duration.
+    /// `y = A x` over rows `[r0, r1)` (pool-parallel); returns virtual
+    /// duration.
     pub fn spmv_rows(&mut self, a: &Csr, r0: usize, r1: usize, x: &[f64], y: &mut [f64]) -> f64 {
-        a.spmv_rows_into(r0, r1, x, y);
+        a.par_spmv_rows_into(&self.pool, r0, r1, x, y);
         let nnz = a.row_ptr[r1] - a.row_ptr[r0];
         self.charge(OpKind::Spmv { n: r1 - r0, nnz })
     }
 
-    /// Full SPMV.
+    /// Full SPMV (pool-parallel over the cached nnz-balanced partition).
     pub fn spmv(&mut self, a: &Csr, x: &[f64], y: &mut [f64]) -> f64 {
-        a.spmv_into(x, y);
+        a.par_spmv_into(&self.pool, x, y);
         self.charge(OpKind::Spmv { n: a.n, nnz: a.nnz() })
     }
 
     /// Fused 3-way dot (γ, δ, ‖u‖²); returns values and duration.
     pub fn dots3(&mut self, r: &[f64], w: &[f64], u: &[f64]) -> ((f64, f64, f64), f64) {
-        let v = blas::fused_dots3(r, w, u);
+        let v = blas::par_fused_dots3(&self.pool, r, w, u);
         let t = self.charge(OpKind::Dots3Fused { n: u.len() });
         (v, t)
     }
@@ -75,13 +93,13 @@ impl CpuEngine {
         beta: f64,
         v: &mut PipecgVectors<'_>,
     ) -> f64 {
-        blas::fused_pipecg_update(n_vec, m_vec, alpha, beta, v);
+        blas::par_fused_pipecg_update(&self.pool, n_vec, m_vec, alpha, beta, v);
         self.charge(OpKind::FusedVmaPc { n: n_vec.len() })
     }
 
     /// Jacobi apply (+ duration).
     pub fn pc_apply(&mut self, inv_diag: &[f64], x: &[f64], out: &mut [f64]) -> f64 {
-        blas::hadamard(inv_diag, x, out);
+        blas::par_hadamard(&self.pool, inv_diag, x, out);
         self.charge(OpKind::PcApply { n: x.len() })
     }
 }

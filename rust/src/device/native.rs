@@ -247,30 +247,37 @@ impl GpuCompute for NativeAccel {
             .as_mut()
             .ok_or_else(|| Error::Device("hybrid3_step needs a panel".into()))?;
         let nl = p.r1 - p.r0;
-        // Pre-copy phase (matches model.hybrid3_local_step op order).
-        for i in 0..nl {
-            let qi = m_loc[i] + beta * st.q[i];
-            let si = st.w[i] + beta * st.s[i];
-            let pi = st.u[i] + beta * st.p[i];
-            st.q[i] = qi;
-            st.s[i] = si;
-            st.p[i] = pi;
-            st.x[i] += alpha * pi;
-            st.r[i] -= alpha * si;
-            st.u[i] -= alpha * qi;
-        }
+        // Pre-copy phase (matches model.hybrid3_local_step op order) —
+        // the same shared kernel the Hybrid-3 CPU side runs (w is read-only
+        // here; its update needs n and happens post-copy).
+        blas::fused_h3_pre(
+            &m_loc[..nl],
+            &st.w[..nl],
+            alpha,
+            beta,
+            &mut st.q[..nl],
+            &mut st.s[..nl],
+            &mut st.p[..nl],
+            &mut st.x[..nl],
+            &mut st.r[..nl],
+            &mut st.u[..nl],
+        );
         let gamma_p = blas::dot(&st.r[..nl], &st.u[..nl]);
         let nn_p = blas::dot(&st.u[..nl], &st.u[..nl]);
-        // Post-copy phase: panel SPMV over the full m, then z/w/m + δ.
+        // Post-copy phase: panel SPMV over the full m, then z/w/m + δ —
+        // again the shared split-update kernel.
         let mut n_new = vec![0.0; nl];
         p.a.spmv_rows_into(p.r0, p.r1, m_full, &mut n_new);
         let mut m_new = vec![0.0; nl];
-        for i in 0..nl {
-            let zi = n_new[i] + beta * st.z[i];
-            st.z[i] = zi;
-            st.w[i] -= alpha * zi;
-            m_new[i] = p.inv_diag[i] * st.w[i];
-        }
+        blas::fused_update_with_n(
+            &n_new,
+            &p.inv_diag,
+            alpha,
+            beta,
+            &mut st.z[..nl],
+            &mut st.w[..nl],
+            &mut m_new,
+        );
         let delta_p = blas::dot(&st.w[..nl], &st.u[..nl]);
         Ok(((gamma_p, delta_p, nn_p), m_new))
     }

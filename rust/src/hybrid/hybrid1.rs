@@ -38,6 +38,7 @@ pub fn solve(
     let wall_start = Instant::now();
     let n = a.n;
     let cm = &cfg.cm;
+    let pool = cfg.opts.pool();
     let mut tl = Timeline::new(cfg.keep_trace);
     let stream = CopyStream::d2h();
 
@@ -106,8 +107,9 @@ pub fn solve(
                 + (n * 24) as f64 / cm.gpu.mem_bw,
             &[t_vecops],
         );
-        // Host: dots after the copy lands (lines 18–20).
-        let (g, d, nn) = blas::fused_dots3(&st.r[..n], &st.w[..n], &st.u[..n]);
+        // Host: dots after the copy lands (lines 18–20), parallel across
+        // the host pool's lanes.
+        let (g, d, nn) = blas::par_fused_dots3(&pool, &st.r[..n], &st.w[..n], &st.u[..n]);
         let t_dots = tl.run(
             Resource::CpuExec,
             "dots(18-20)",
@@ -205,6 +207,7 @@ mod tests {
                 tol: 1e-30,
                 max_iters: 20,
                 record_history: false,
+                ..Default::default()
             },
             ..Default::default()
         };

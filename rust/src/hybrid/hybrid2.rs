@@ -36,6 +36,7 @@ pub fn solve(
     let wall_start = Instant::now();
     let n = a.n;
     let cm = &cfg.cm;
+    let pool = cfg.opts.pool();
     let mut tl = Timeline::new(cfg.keep_trace);
     let stream = CopyStream::d2h();
 
@@ -120,8 +121,10 @@ pub fn solve(
         );
 
         // Host: n-independent updates while the copy is in flight
-        // (q = m+βq; s = w+βs; r -= αs; u -= αq).
-        blas::fused_update_without_n(&mc, alpha, beta, &mut qc, &mut sc, &mut rc, &mut uc, &wc);
+        // (q = m+βq; s = w+βs; r -= αs; u -= αq), parallel on the pool.
+        blas::par_fused_update_without_n(
+            &pool, &mc, alpha, beta, &mut qc, &mut sc, &mut rc, &mut uc, &wc,
+        );
         let t_pre = tl.run(
             Resource::CpuExec,
             "host q,s,r,u",
@@ -129,8 +132,8 @@ pub fn solve(
             &[t_scalars],
         );
         // γ and ‖u‖² need only r, u (both updated pre-copy).
-        let g = blas::dot(&rc, &uc);
-        let nn = blas::dot(&uc, &uc);
+        let g = blas::par_dot(&pool, &rc, &uc);
+        let nn = blas::par_dot(&pool, &uc, &uc);
         let t_gn = tl.run(
             Resource::CpuExec,
             "host gamma,norm",
@@ -138,14 +141,23 @@ pub fn solve(
             &[t_pre],
         );
         // Wait for n, then z = n+βz; w -= αz; m = D·w; δ = (w,u).
-        blas::fused_update_with_n(&n_cur, &pc.inv_diag, alpha, beta, &mut zc, &mut wc, &mut mc);
+        blas::par_fused_update_with_n(
+            &pool,
+            &n_cur,
+            &pc.inv_diag,
+            alpha,
+            beta,
+            &mut zc,
+            &mut wc,
+            &mut mc,
+        );
         let t_post = tl.run(
             Resource::CpuExec,
             "host z,w,m",
             cm.on_cpu(OpKind::Stream { n, vecs: 7 }),
             &[t_gn, t_copy],
         );
-        let d = blas::dot(&wc, &uc);
+        let d = blas::par_dot(&pool, &wc, &uc);
         let t_delta = tl.run(
             Resource::CpuExec,
             "host delta",

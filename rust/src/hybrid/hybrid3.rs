@@ -106,6 +106,7 @@ pub fn solve(
     let ng = n - nc;
     assert_eq!(acc.rows(), ng, "accelerator must hold the GPU panel");
     let cm = &cfg.cm;
+    let pool = cfg.opts.pool();
     let mut tl = Timeline::new(cfg.keep_trace);
     let s_d2h = CopyStream::d2h(); // GPU m slice -> host
     let s_h2d = CopyStream::h2d(); // host m slice -> GPU
@@ -220,23 +221,17 @@ pub fn solve(
             &[t_g_spmv2],
         );
 
-        // ---- CPU side (native kernels, same op order). Host ops pay the
-        // concurrency penalty: these cores also drive the device
-        // (launches, streams, DMA staging) while computing their share.
+        // ---- CPU side (native kernels, same op order, parallel over the
+        // host pool). Host ops pay the concurrency penalty: these cores
+        // also drive the device (launches, streams, DMA staging) while
+        // computing their share.
         let pen = 1.0 + cm.h3_cpu_penalty;
-        for i in 0..nc {
-            let qi = m_cpu[i] + beta * qc[i];
-            let si = wc[i] + beta * sc[i];
-            let pi = uc[i] + beta * pcv[i];
-            qc[i] = qi;
-            sc[i] = si;
-            pcv[i] = pi;
-            xc[i] += alpha * pi;
-            rc[i] -= alpha * si;
-            uc[i] -= alpha * qi;
-        }
-        let g_c = blas::dot(&rc, &uc);
-        let nn_c = blas::dot(&uc, &uc);
+        blas::par_fused_h3_pre(
+            &pool, &m_cpu, &wc, alpha, beta, &mut qc, &mut sc, &mut pcv, &mut xc, &mut rc,
+            &mut uc,
+        );
+        let g_c = blas::par_dot(&pool, &rc, &uc);
+        let nn_c = blas::par_dot(&pool, &uc, &uc);
         let t_c_pre = tl.run(
             Resource::CpuExec,
             "cpu q,s,p,x,r,u + dots",
@@ -249,7 +244,7 @@ pub fn solve(
         // numerics below do part1+part2 in one pass over the assembled
         // m_full — identical by linearity (decomp tests assert this).
         let mut n_loc = vec![0.0; nc];
-        a.spmv_rows_into(0, nc, &m_full, &mut n_loc);
+        a.par_spmv_rows_into(&pool, 0, nc, &m_full, &mut n_loc);
         let t_c_spmv1 = tl.run(
             Resource::CpuExec,
             "cpu SPMV part1",
@@ -263,13 +258,17 @@ pub fn solve(
             &[t_c_spmv1, t_cp_gpu2cpu],
         );
         let mut m_cpu_new = vec![0.0; nc];
-        for i in 0..nc {
-            let zi = n_loc[i] + beta * zc[i];
-            zc[i] = zi;
-            wc[i] -= alpha * zi;
-            m_cpu_new[i] = pc.inv_diag[i] * wc[i];
-        }
-        let d_c = blas::dot(&wc, &uc);
+        blas::par_fused_update_with_n(
+            &pool,
+            &n_loc,
+            &pc.inv_diag[..nc],
+            alpha,
+            beta,
+            &mut zc,
+            &mut wc,
+            &mut m_cpu_new,
+        );
+        let d_c = blas::par_dot(&pool, &wc, &uc);
         let t_c_done = tl.run(
             Resource::CpuExec,
             "cpu z,w,m + delta",

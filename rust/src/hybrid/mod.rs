@@ -39,27 +39,11 @@ impl Default for HybridConfig {
 }
 
 /// Compute α/β from the Chronopoulos–Gear scalars (Alg. 2 lines 5–9).
-pub(crate) fn pipecg_scalars(
-    iteration: usize,
-    gamma: f64,
-    delta: f64,
-    gamma_prev: f64,
-    alpha_prev: f64,
-) -> Option<(f64, f64)> {
-    if iteration == 0 {
-        if delta == 0.0 || !delta.is_finite() {
-            return None;
-        }
-        Some((gamma / delta, 0.0))
-    } else {
-        let beta = gamma / gamma_prev;
-        let denom = delta - beta * gamma / alpha_prev;
-        if !beta.is_finite() || denom == 0.0 || !denom.is_finite() {
-            return None;
-        }
-        Some((gamma / denom, beta))
-    }
-}
+/// One implementation for the whole crate: this is
+/// [`crate::solver::pipecg::scalars`] (which uses the shared `is_bad`
+/// breakdown check — zero *or* non-finite), re-exported under the name the
+/// schedulers historically used.
+pub(crate) use crate::solver::pipecg::scalars as pipecg_scalars;
 
 #[cfg(test)]
 mod tests {

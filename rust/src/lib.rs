@@ -17,6 +17,32 @@
 //! Python never runs on the request path: `make artifacts` lowers the L2
 //! graphs once; the [`runtime`] module loads and executes them via PJRT.
 //!
+//! ## Threading model
+//!
+//! The CPU-role hot path runs **real multithreaded kernels**, not just the
+//! simulated parallelism of the virtual timeline:
+//!
+//! * [`util::pool`] — a std-only worker pool shared process-wide (one pool
+//!   per distinct thread count). [`solver::SolveOpts::threads`] selects the
+//!   lane count: `0` (default) = all available cores, overridable with the
+//!   `HYPIPE_THREADS` environment variable; `1` = serial.
+//! * SPMV parallelizes over an **nnz-balanced row partition** cached on
+//!   the matrix ([`decomp::RowPartition`], `Csr::par_spmv_into`,
+//!   `Ell::par_spmv_into`) — the per-thread analogue of the paper's 1-D
+//!   device split.
+//! * The merged VMA and the fused 3-way dot (`blas::par_*`) split into
+//!   contiguous blocks; reductions keep one partial per block and reduce
+//!   in block order, so results are **bit-reproducible for a fixed thread
+//!   count**, and elementwise kernels are bit-identical to serial for any
+//!   thread count.
+//!
+//! Wall-clock parallelism and the virtual timeline are deliberately
+//! orthogonal: the discrete-event timeline prices the *paper's* modelled
+//! hardware (K20m + Xeon) for reproducing its figures, while the pool
+//! makes the actual solve fast on the host running it. `cargo bench
+//! --bench ablation_parallel_cpu` measures the real serial-vs-parallel
+//! speedup; the virtual totals are unaffected by the thread count.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -46,25 +72,48 @@ pub mod solver;
 pub mod sparse;
 pub mod util;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled `Display`/`Error` impls: the build
+/// is offline and std-only, so no `thiserror`).
+#[derive(Debug)]
 pub enum Error {
-    #[error("sparse matrix error: {0}")]
     Sparse(String),
-    #[error("solver error: {0}")]
     Solver(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("artifact error: {0}")]
     Artifact(String),
-    #[error("device error: {0}")]
     Device(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Sparse(m) => write!(f, "sparse matrix error: {m}"),
+            Error::Solver(m) => write!(f, "solver error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Device(m) => write!(f, "device error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

@@ -44,6 +44,8 @@ COMMON FLAGS
   --backend B       native | pjrt               (default: pjrt if artifacts exist)
   --tol T           absolute tolerance on the preconditioned residual (1e-5)
   --max-iters N     iteration cap (10000)
+  --threads T       host worker threads for the parallel CPU kernels
+                    (default 0 = all cores; HYPIPE_THREADS also honored)
   --gpu-mem BYTES   simulated device memory capacity (default 5 GiB)
   --trace PATH      write a chrome-trace of the run
   --json            print the report as JSON
@@ -96,6 +98,7 @@ fn solve_opts(args: &Args) -> Result<SolveOpts> {
         tol: args.flag_parse("tol", 1e-5)?,
         max_iters: args.flag_parse("max-iters", 10_000)?,
         record_history: true,
+        threads: args.flag_parse("threads", 0usize)?,
     })
 }
 

@@ -6,15 +6,17 @@ use crate::sparse::Csr;
 
 use super::{is_bad, SolveOpts, SolveResult, StopReason};
 
-/// Solve `A x = b` with CG from `x₀ = 0`.
+/// Solve `A x = b` with CG from `x₀ = 0` on the pool selected by
+/// `opts.threads`.
 pub fn solve(a: &Csr, b: &[f64], opts: &SolveOpts) -> SolveResult {
+    let pool = opts.pool();
     let n = a.n;
     assert_eq!(b.len(), n);
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
     let mut p = r.clone();
     let mut ap = vec![0.0; n];
-    let mut rr = blas::dot(&r, &r);
+    let mut rr = blas::par_dot(&pool, &r, &r);
     let mut history = Vec::new();
     let mut norm = rr.sqrt();
     if opts.record_history {
@@ -31,8 +33,8 @@ pub fn solve(a: &Csr, b: &[f64], opts: &SolveOpts) -> SolveResult {
                 history,
             };
         }
-        a.spmv_into(&p, &mut ap);
-        let pap = blas::dot(&p, &ap);
+        a.par_spmv_into(&pool, &p, &mut ap);
+        let pap = blas::par_dot(&pool, &p, &ap);
         if is_bad(pap) {
             return SolveResult {
                 x,
@@ -44,12 +46,12 @@ pub fn solve(a: &Csr, b: &[f64], opts: &SolveOpts) -> SolveResult {
             };
         }
         let alpha = rr / pap;
-        blas::axpy(alpha, &p, &mut x);
-        blas::axpy(-alpha, &ap, &mut r);
-        let rr_new = blas::dot(&r, &r);
+        blas::par_axpy(&pool, alpha, &p, &mut x);
+        blas::par_axpy(&pool, -alpha, &ap, &mut r);
+        let rr_new = blas::par_dot(&pool, &r, &r);
         let beta = rr_new / rr;
         rr = rr_new;
-        blas::xpay(&r, beta, &mut p);
+        blas::par_xpay(&pool, &r, beta, &mut p);
         norm = rr.sqrt();
         if opts.record_history {
             history.push(norm);

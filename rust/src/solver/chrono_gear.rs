@@ -14,6 +14,7 @@ use super::{is_bad, SolveOpts, SolveResult, StopReason};
 /// Per iteration: one SPMV (`w = A u`), one PC apply, and a *single* fused
 /// reduction computing γ = (r,u), δ = (w,u) and ‖u‖² together.
 pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> SolveResult {
+    let pool = opts.pool();
     let n = a.n;
     assert_eq!(b.len(), n);
     let mut x = vec![0.0; n];
@@ -22,7 +23,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
     m.apply(&r, &mut u);
     let mut w = a.spmv(&u);
 
-    let (mut gamma, mut delta, mut nn) = blas::fused_dots3(&r, &w, &u);
+    let (mut gamma, mut delta, mut nn) = blas::par_fused_dots3(&pool, &r, &w, &u);
     let mut norm = nn.sqrt();
 
     let mut p = vec![0.0; n];
@@ -79,21 +80,21 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
         }
 
         // p = u + β p ; s = w + β s
-        blas::xpay(&u, beta, &mut p);
-        blas::xpay(&w, beta, &mut s);
+        blas::par_xpay(&pool, &u, beta, &mut p);
+        blas::par_xpay(&pool, &w, beta, &mut s);
         // q = M⁻¹ s ; z = A q  (computed via the recurrences' definitions)
         m.apply(&s, &mut q);
-        a.spmv_into(&q, &mut z);
+        a.par_spmv_into(&pool, &q, &mut z);
         // x += α p ; r −= α s ; u −= α q ; w −= α z
-        blas::axpy(alpha, &p, &mut x);
-        blas::axpy(-alpha, &s, &mut r);
-        blas::axpy(-alpha, &q, &mut u);
-        blas::axpy(-alpha, &z, &mut w);
+        blas::par_axpy(&pool, alpha, &p, &mut x);
+        blas::par_axpy(&pool, -alpha, &s, &mut r);
+        blas::par_axpy(&pool, -alpha, &q, &mut u);
+        blas::par_axpy(&pool, -alpha, &z, &mut w);
 
         // Single fused reduction.
         gamma_prev = gamma;
         alpha_prev = alpha;
-        let (g, d, n2) = blas::fused_dots3(&r, &w, &u);
+        let (g, d, n2) = blas::par_fused_dots3(&pool, &r, &w, &u);
         gamma = g;
         delta = d;
         norm = n2.sqrt();

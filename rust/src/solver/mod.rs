@@ -22,6 +22,11 @@ pub struct SolveOpts {
     pub max_iters: usize,
     /// Record the residual norm each iteration (costs one Vec push).
     pub record_history: bool,
+    /// Host worker threads for the parallel kernels. `0` (the default)
+    /// means "all available cores", overridable with `HYPIPE_THREADS`;
+    /// `1` forces the serial kernels. Results are bit-reproducible for a
+    /// fixed thread count (see `util::pool`).
+    pub threads: usize,
 }
 
 impl Default for SolveOpts {
@@ -30,7 +35,15 @@ impl Default for SolveOpts {
             tol: 1e-5,
             max_iters: 10_000,
             record_history: true,
+            threads: 0,
         }
+    }
+}
+
+impl SolveOpts {
+    /// The shared worker pool this configuration selects.
+    pub fn pool(&self) -> std::sync::Arc<crate::util::pool::ThreadPool> {
+        crate::util::pool::with_threads(self.threads)
     }
 }
 
@@ -137,7 +150,7 @@ mod tests {
         let opts = SolveOpts {
             tol: 1e-30,
             max_iters: 5,
-            record_history: true,
+            ..Default::default()
         };
         let r = pipecg::solve(&a, &b, &m, &opts);
         assert!(!r.converged);

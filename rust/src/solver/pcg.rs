@@ -8,8 +8,10 @@ use crate::sparse::Csr;
 
 use super::{is_bad, SolveOpts, SolveResult, StopReason};
 
-/// Solve `A x = b` with PCG from `x₀ = 0`.
+/// Solve `A x = b` with PCG from `x₀ = 0` on the pool selected by
+/// `opts.threads` (one parallel region per BLAS op — the library pattern).
 pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> SolveResult {
+    let pool = opts.pool();
     let n = a.n;
     assert_eq!(b.len(), n);
     let mut x = vec![0.0; n];
@@ -19,7 +21,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
     let mut u = vec![0.0; n];
     m.apply(&r, &mut u);
     // line 2: γ₀ = (u₀, r₀) ; norm₀ = √(u₀,u₀)
-    let mut gamma = blas::dot(&u, &r);
+    let mut gamma = blas::par_dot(&pool, &u, &r);
     let mut norm = blas::norm2(&u);
 
     let mut p = vec![0.0; n];
@@ -37,25 +39,25 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
         // lines 4–8: β
         let beta = if it > 0 { gamma / gamma_prev } else { 0.0 };
         // line 9: p = u + β p
-        blas::xpay(&u, beta, &mut p);
+        blas::par_xpay(&pool, &u, beta, &mut p);
         // line 10: s = A p
-        a.spmv_into(&p, &mut s);
+        a.par_spmv_into(&pool, &p, &mut s);
         // line 11: δ = (s, p)
-        let delta = blas::dot(&s, &p);
+        let delta = blas::par_dot(&pool, &s, &p);
         if is_bad(delta) {
             return done(x, it, norm, false, StopReason::Breakdown, history);
         }
         // line 12: α = γ / δ
         let alpha = gamma / delta;
         // line 13–14: x += α p ; r −= α s
-        blas::axpy(alpha, &p, &mut x);
-        blas::axpy(-alpha, &s, &mut r);
+        blas::par_axpy(&pool, alpha, &p, &mut x);
+        blas::par_axpy(&pool, -alpha, &s, &mut r);
         // line 15: u = M⁻¹ r
         m.apply(&r, &mut u);
         // lines 16–17: γ ; norm
         gamma_prev = gamma;
-        gamma = blas::dot(&u, &r);
-        norm = blas::norm2(&u);
+        gamma = blas::par_dot(&pool, &u, &r);
+        norm = blas::par_dot(&pool, &u, &u).sqrt();
         if opts.record_history {
             history.push(norm);
         }

@@ -13,8 +13,36 @@
 use crate::blas::{self, PipecgVectors};
 use crate::precond::Preconditioner;
 use crate::sparse::Csr;
+use crate::util::pool::{self, ThreadPool};
 
 use super::{is_bad, SolveOpts, SolveResult, StopReason};
+
+/// The Chronopoulos–Gear scalar update (Alg. 2 lines 5–9): `(α, β)` from
+/// the current and previous reductions, or `None` on breakdown (zero or
+/// non-finite denominator). This is the **single** implementation shared
+/// by [`PipecgState::scalars`], the three hybrid schedulers and the GPU
+/// baselines.
+pub fn scalars(
+    iteration: usize,
+    gamma: f64,
+    delta: f64,
+    gamma_prev: f64,
+    alpha_prev: f64,
+) -> Option<(f64, f64)> {
+    if iteration == 0 {
+        if is_bad(delta) {
+            return None;
+        }
+        Some((gamma / delta, 0.0))
+    } else {
+        let beta = gamma / gamma_prev;
+        let denom = delta - beta * gamma / alpha_prev;
+        if is_bad(denom) || !beta.is_finite() {
+            return None;
+        }
+        Some((gamma / denom, beta))
+    }
+}
 
 /// Full working set of PIPECG (Algorithm 2).
 #[derive(Debug, Clone)]
@@ -75,32 +103,33 @@ impl PipecgState {
     }
 
     /// Scalar update (Alg. 2 lines 5–9). Returns `(α, β)`, or `None` on
-    /// breakdown.
+    /// breakdown. Delegates to the module-level [`scalars`].
     pub fn scalars(&self) -> Option<(f64, f64)> {
-        if self.iteration > 0 {
-            let beta = self.gamma / self.gamma_prev;
-            let denom = self.delta - beta * self.gamma / self.alpha_prev;
-            if is_bad(denom) || !beta.is_finite() {
-                return None;
-            }
-            Some((self.gamma / denom, beta))
-        } else {
-            if is_bad(self.delta) {
-                return None;
-            }
-            Some((self.gamma / self.delta, 0.0))
-        }
+        scalars(
+            self.iteration,
+            self.gamma,
+            self.delta,
+            self.gamma_prev,
+            self.alpha_prev,
+        )
     }
 }
 
-/// One full PIPECG iteration (lines 5–22) on the sequential reference path.
-/// Returns `false` on breakdown.
-pub fn step<M: Preconditioner>(a: &Csr, pc: &M, st: &mut PipecgState) -> bool {
+/// One full PIPECG iteration (lines 5–22), with the merged VMA, fused
+/// dots and SPMV distributed over `pool`'s lanes. Returns `false` on
+/// breakdown.
+pub fn step_on<M: Preconditioner>(
+    pool: &ThreadPool,
+    a: &Csr,
+    pc: &M,
+    st: &mut PipecgState,
+) -> bool {
     let Some((alpha, beta)) = st.scalars() else {
         return false;
     };
     // lines 10–17: the eight merged VMAs (fused, §V-B.2)
-    blas::fused_pipecg_update(
+    blas::par_fused_pipecg_update(
+        pool,
         &st.n,
         &st.m,
         alpha,
@@ -116,8 +145,8 @@ pub fn step<M: Preconditioner>(a: &Csr, pc: &M, st: &mut PipecgState) -> bool {
             w: &mut st.w,
         },
     );
-    // lines 18–20: γ, δ, norm (fused)
-    let (g, d, nsq) = blas::fused_dots3(&st.r, &st.w, &st.u);
+    // lines 18–20: γ, δ, norm (fused, deterministic block reduction)
+    let (g, d, nsq) = blas::par_fused_dots3(pool, &st.r, &st.w, &st.u);
     st.gamma_prev = st.gamma;
     st.alpha_prev = alpha;
     st.gamma = g;
@@ -125,13 +154,21 @@ pub fn step<M: Preconditioner>(a: &Csr, pc: &M, st: &mut PipecgState) -> bool {
     st.norm = nsq.sqrt();
     // line 21: m = M⁻¹ w ; line 22: n = A m
     pc.apply(&st.w, &mut st.m);
-    a.spmv_into(&st.m, &mut st.n);
+    a.par_spmv_into(pool, &st.m, &mut st.n);
     st.iteration += 1;
     true
 }
 
-/// Solve `A x = b` with sequential PIPECG from `x₀ = 0`.
+/// Serial [`step_on`] (the single-lane pool), kept as the reference form
+/// the invariants tests drive.
+pub fn step<M: Preconditioner>(a: &Csr, pc: &M, st: &mut PipecgState) -> bool {
+    step_on(&pool::serial(), a, pc, st)
+}
+
+/// Solve `A x = b` with PIPECG from `x₀ = 0` on the pool selected by
+/// `opts.threads`.
 pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &SolveOpts) -> SolveResult {
+    let pool = opts.pool();
     let mut st = PipecgState::init(a, b, pc);
     let mut history = Vec::new();
     if opts.record_history {
@@ -148,7 +185,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &SolveOpts) ->
                 history,
             };
         }
-        if !step(a, pc, &mut st) {
+        if !step_on(&pool, a, pc, &mut st) {
             return SolveResult {
                 x: st.x,
                 iterations: it,

@@ -18,7 +18,7 @@
 use crate::precond::Preconditioner;
 use crate::sparse::Csr;
 
-use super::pipecg::{step, PipecgState};
+use super::pipecg::{step_on, PipecgState};
 use super::{SolveOpts, SolveResult, StopReason};
 
 /// Options for the residual-replacement variant.
@@ -57,8 +57,11 @@ pub fn replace_residuals<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, st: &mut
     st.norm = nn.sqrt();
 }
 
-/// Solve with PIPECG + residual replacement.
+/// Solve with PIPECG + residual replacement on the pool selected by
+/// `opts.base.threads` (replacements themselves are off the hot path and
+/// run serial).
 pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &RrOpts) -> SolveResult {
+    let pool = opts.base.pool();
     let mut st = PipecgState::init(a, b, pc);
     let mut history = Vec::new();
     if opts.base.record_history {
@@ -75,7 +78,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &RrOpts) -> So
                 history,
             };
         }
-        if !step(a, pc, &mut st) {
+        if !step_on(&pool, a, pc, &mut st) {
             return SolveResult {
                 x: st.x,
                 iterations: it,
@@ -114,6 +117,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &RrOpts) -> So
 
 #[cfg(test)]
 mod tests {
+    use super::super::pipecg::step;
     use super::*;
     use crate::precond::Jacobi;
     use crate::sparse::gen;
@@ -142,6 +146,7 @@ mod tests {
             tol: 1e-13,
             max_iters: 4000,
             record_history: false,
+            ..Default::default()
         };
         let plain = super::super::pipecg::solve(&a, &b, &pc, &tight);
         let rr = solve(

@@ -107,12 +107,7 @@ impl Coo {
             }
             row_ptr.push(cols.len());
         }
-        Ok(super::Csr {
-            n,
-            row_ptr,
-            cols,
-            vals,
-        })
+        Ok(super::Csr::new(n, row_ptr, cols, vals))
     }
 }
 

@@ -1,10 +1,18 @@
 //! Compressed Sparse Row matrix — the host-side working format (paper §V-A).
 
+use std::sync::Arc;
+
+use crate::decomp::{PartitionCache, RowPartition};
+use crate::util::pool::{self, SendPtr, ThreadPool};
 use crate::{Error, Result};
 
 /// A square sparse matrix in CSR form with `u32` column indices and `f64`
 /// values (the precision the paper's solvers require).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Carries a lazily built [`PartitionCache`] of nnz-balanced row
+/// partitions for the parallel SPMV ([`Csr::par_spmv_into`]); the cache is
+/// ignored by equality and reset on clone.
+#[derive(Debug, Clone)]
 pub struct Csr {
     /// Number of rows (== columns; all systems here are square).
     pub n: usize,
@@ -14,9 +22,32 @@ pub struct Csr {
     pub cols: Vec<u32>,
     /// Value per entry.
     pub vals: Vec<f64>,
+    /// Cached row partitions for the parallel kernels.
+    pub(crate) part_cache: PartitionCache,
+}
+
+impl PartialEq for Csr {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.row_ptr == other.row_ptr
+            && self.cols == other.cols
+            && self.vals == other.vals
+    }
 }
 
 impl Csr {
+    /// Assemble from raw CSR arrays (invariants checked by [`Csr::validate`],
+    /// not here).
+    pub fn new(n: usize, row_ptr: Vec<usize>, cols: Vec<u32>, vals: Vec<f64>) -> Csr {
+        Csr {
+            n,
+            row_ptr,
+            cols,
+            vals,
+            part_cache: PartitionCache::default(),
+        }
+    }
+
     /// Number of stored entries.
     pub fn nnz(&self) -> usize {
         self.vals.len()
@@ -100,6 +131,60 @@ impl Csr {
         }
     }
 
+    /// nnz-balanced partition of rows `[r0, r1)` into `blocks` blocks,
+    /// cached on the matrix (first use builds it; later parallel SPMVs hit
+    /// the cache).
+    pub fn row_partition_range(&self, r0: usize, r1: usize, blocks: usize) -> Arc<RowPartition> {
+        self.part_cache
+            .get(r0, r1, blocks, || {
+                RowPartition::by_nnz_range(&self.row_ptr, r0, r1, blocks)
+            })
+    }
+
+    /// Cached nnz-balanced partition of all rows.
+    pub fn row_partition(&self, blocks: usize) -> Arc<RowPartition> {
+        self.row_partition_range(0, self.n, blocks)
+    }
+
+    /// Parallel `y = A x` over the pool's lanes. Rows are distributed by
+    /// the cached nnz-balanced [`RowPartition`]; every row is computed by
+    /// the same serial loop as [`Csr::spmv_into`], so the result is
+    /// bit-identical to the serial SPMV for *any* thread count.
+    pub fn par_spmv_into(&self, pool: &ThreadPool, x: &[f64], y: &mut [f64]) {
+        self.par_spmv_rows_into(pool, 0, self.n, x, y);
+    }
+
+    /// Parallel [`Csr::spmv_rows_into`]: the row range `[r0, r1)` is split
+    /// nnz-balanced across the pool. Output has length `r1 - r0`.
+    pub fn par_spmv_rows_into(
+        &self,
+        pool: &ThreadPool,
+        r0: usize,
+        r1: usize,
+        x: &[f64],
+        y: &mut [f64],
+    ) {
+        assert!(r0 <= r1 && r1 <= self.n);
+        let range_nnz = self.row_ptr[r1] - self.row_ptr[r0];
+        // Block count scales with stored entries (the actual work), capped
+        // at one block per lane and one per row.
+        let blocks = pool::block_count(range_nnz, pool.threads()).min(r1 - r0);
+        if blocks <= 1 || range_nnz < pool::PAR_MIN_LEN {
+            return self.spmv_rows_into(r0, r1, x, y);
+        }
+        assert_eq!(y.len(), r1 - r0);
+        assert_eq!(x.len(), self.n);
+        let part = self.row_partition_range(r0, r1, blocks);
+        let yp = SendPtr::new(y);
+        pool.run(part.blocks(), |b| {
+            let (lo, hi) = part.range(b);
+            if lo < hi {
+                let yb = unsafe { yp.range_mut(lo - r0, hi - r0) };
+                self.spmv_rows_into(lo, hi, x, yb);
+            }
+        });
+    }
+
     /// The main diagonal (used by the Jacobi preconditioner).
     pub fn diagonal(&self) -> Vec<f64> {
         (0..self.n).map(|i| self.get(i, i)).collect()
@@ -171,12 +256,12 @@ impl Csr {
     pub fn row_panel(&self, r0: usize, r1: usize) -> Csr {
         assert!(r0 <= r1 && r1 <= self.n);
         let (s, e) = (self.row_ptr[r0], self.row_ptr[r1]);
-        Csr {
-            n: self.n, // column space unchanged; row index space is r1-r0
-            row_ptr: self.row_ptr[r0..=r1].iter().map(|p| p - s).collect(),
-            cols: self.cols[s..e].to_vec(),
-            vals: self.vals[s..e].to_vec(),
-        }
+        Csr::new(
+            self.n, // column space unchanged; row index space is r1-r0
+            self.row_ptr[r0..=r1].iter().map(|p| p - s).collect(),
+            self.cols[s..e].to_vec(),
+            self.vals[s..e].to_vec(),
+        )
     }
 }
 
@@ -253,12 +338,26 @@ mod tests {
 
     #[test]
     fn validate_catches_unsorted() {
-        let a = Csr {
-            n: 2,
-            row_ptr: vec![0, 2, 2],
-            cols: vec![1, 0],
-            vals: vec![1.0, 2.0],
-        };
+        let a = Csr::new(2, vec![0, 2, 2], vec![1, 0], vec![1.0, 2.0]);
         assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn par_spmv_is_bitwise_serial() {
+        use crate::util::pool;
+        let a = crate::sparse::gen::poisson2d_5pt(40, 37);
+        let x: Vec<f64> = (0..a.n).map(|i| ((i * 7919) % 23) as f64 - 11.0).collect();
+        let y_ser = a.spmv(&x);
+        for t in [1, 2, 4, 7] {
+            let pool = pool::with_threads(t);
+            let mut y_par = vec![0.0; a.n];
+            a.par_spmv_into(&pool, &x, &mut y_par);
+            assert_eq!(y_ser, y_par, "threads={t}");
+            // and the row-range form on a sub-panel
+            let (r0, r1) = (13, a.n - 29);
+            let mut yr = vec![0.0; r1 - r0];
+            a.par_spmv_rows_into(&pool, r0, r1, &x, &mut yr);
+            assert_eq!(&y_ser[r0..r1], &yr[..], "rows threads={t}");
+        }
     }
 }

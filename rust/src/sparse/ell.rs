@@ -6,12 +6,17 @@
 //! `0.0` and point at **their own row** so gathers stay in bounds and the
 //! padded SPMV is exact. Padded *rows* (bucketing `n` up) are identity rows.
 
+use crate::decomp::{PartitionCache, RowPartition};
+use crate::util::pool::{self, SendPtr, ThreadPool};
 use crate::{Error, Result};
 
 use super::Csr;
 
 /// ELLPACK matrix. Row-major layout: slot `s` of row `i` is at `i * k + s`.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Like [`Csr`], carries a lazily built partition cache for the parallel
+/// SPMV; ELL rows all hold `k` slots, so the partition is uniform.
+#[derive(Debug, Clone)]
 pub struct Ell {
     /// Logical number of rows (may include identity padding rows).
     pub n: usize,
@@ -23,6 +28,18 @@ pub struct Ell {
     pub vals: Vec<f64>,
     /// Rows of the original matrix (before row padding); `<= n`.
     pub n_orig: usize,
+    /// Cached row partitions for the parallel kernels.
+    pub(crate) part_cache: PartitionCache,
+}
+
+impl PartialEq for Ell {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.k == other.k
+            && self.cols == other.cols
+            && self.vals == other.vals
+            && self.n_orig == other.n_orig
+    }
 }
 
 impl Ell {
@@ -69,6 +86,7 @@ impl Ell {
             cols,
             vals,
             n_orig: a.n,
+            part_cache: PartitionCache::default(),
         })
     }
 
@@ -86,14 +104,49 @@ impl Ell {
     pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
-        for i in 0..self.n {
+        self.spmv_rows(0, self.n, x, y);
+    }
+
+    /// Rows `[lo, hi)` of the ELL SPMV into `y[0..hi-lo]`.
+    fn spmv_rows(&self, lo: usize, hi: usize, x: &[f64], y: &mut [f64]) {
+        for i in lo..hi {
             let base = i * self.k;
             let mut acc = 0.0;
             for s in 0..self.k {
                 acc += self.vals[base + s] * x[self.cols[base + s] as usize];
             }
-            y[i] = acc;
+            y[i - lo] = acc;
         }
+    }
+
+    /// Uniform row partition for the pool (every ELL row stores exactly
+    /// `k` slots, so uniform == nnz-balanced), cached on the matrix.
+    pub fn row_partition(&self, blocks: usize) -> std::sync::Arc<RowPartition> {
+        self.part_cache
+            .get(0, self.n, blocks, || RowPartition::uniform(self.n, blocks))
+    }
+
+    /// Parallel `y = A x` over the pool's lanes; bit-identical to
+    /// [`Ell::spmv_into`] for any thread count (rows are computed by the
+    /// same serial loop).
+    pub fn par_spmv_into(&self, pool: &ThreadPool, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        // Block count scales with stored slots (the actual work), capped
+        // at one block per lane and one per row.
+        let blocks = pool::block_count(self.nnz_slots(), pool.threads()).min(self.n.max(1));
+        if blocks <= 1 || self.nnz_slots() < pool::PAR_MIN_LEN {
+            return self.spmv_into(x, y);
+        }
+        let part = self.row_partition(blocks);
+        let yp = SendPtr::new(y);
+        pool.run(part.blocks(), |b| {
+            let (lo, hi) = part.range(b);
+            if lo < hi {
+                let yb = unsafe { yp.range_mut(lo, hi) };
+                self.spmv_rows(lo, hi, x, yb);
+            }
+        });
     }
 
     /// Back to CSR (drops padding rows and zero-valued padding slots).
@@ -115,12 +168,7 @@ impl Ell {
             }
             row_ptr.push(cols.len());
         }
-        Csr {
-            n: self.n_orig,
-            row_ptr,
-            cols,
-            vals,
-        }
+        Csr::new(self.n_orig, row_ptr, cols, vals)
     }
 
     /// Storage footprint in bytes (f64 values + u32 indices).
@@ -169,6 +217,22 @@ mod tests {
         assert!(crate::util::max_abs_diff(&y[..25], &y_ref) < 1e-12);
         // padding rows: identity * 0 input = 0 output
         assert!(y[25..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn par_spmv_is_bitwise_serial() {
+        use crate::util::pool;
+        let a = gen::poisson2d_5pt(33, 41); // nnz_slots > PAR_MIN_LEN
+        let e = Ell::from_csr(&a);
+        let mut rng = Rng::new(7);
+        let x: Vec<f64> = (0..e.n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let y_ser = e.spmv(&x);
+        for t in [1, 2, 4, 7] {
+            let pool = pool::with_threads(t);
+            let mut y_par = vec![0.0; e.n];
+            e.par_spmv_into(&pool, &x, &mut y_par);
+            assert_eq!(y_ser, y_par, "threads={t}");
+        }
     }
 
     #[test]

@@ -3,9 +3,11 @@
 //! This session's environment is fully offline (vendored crates only), so we
 //! hand-roll the pieces that would usually come from crates.io:
 //! a PRNG ([`prng`]), a JSON reader/writer ([`json`]), a property-testing
-//! driver ([`propcheck`]) and fixed-width ASCII tables ([`table`]).
+//! driver ([`propcheck`]), fixed-width ASCII tables ([`table`]) and the
+//! shared worker pool behind the parallel kernels ([`pool`]).
 
 pub mod json;
+pub mod pool;
 pub mod prng;
 pub mod propcheck;
 pub mod table;

@@ -1,0 +1,474 @@
+//! Shared worker pool for the host-side parallel kernels.
+//!
+//! A small std-only thread pool (no rayon/crossbeam in this offline
+//! environment): `threads - 1` parked workers plus the calling thread
+//! cooperatively drain an indexed task range. Pools are created once per
+//! distinct thread count and shared process-wide via [`with_threads`], so
+//! every kernel invocation reuses warm threads — the spawn cost is paid
+//! once, not per SPMV.
+//!
+//! Determinism contract: all block-partition helpers here and in `decomp`
+//! derive chunk boundaries solely from `(len, threads)`. Kernels that
+//! reduce (the fused dots) store one partial per block and reduce the
+//! partials in block order on the caller, so a fixed thread count always
+//! produces bit-identical results regardless of OS scheduling.
+//!
+//! Do **not** call [`ThreadPool::run`] from inside a task running on the
+//! same pool: dispatch is exclusive and the nested call would deadlock.
+//! The kernels in this crate never nest.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// Below this many elements (or stored entries, for SPMV) the parallel
+/// kernels fall back to their serial forms: fork/join latency would exceed
+/// the loop itself.
+pub const PAR_MIN_LEN: usize = 4096;
+
+/// Minimum elements (or stored entries) per parallel chunk. Kernels cap
+/// their block count at `work / PAR_CHUNK_MIN` so a many-core pool never
+/// dispatches chunks too small to amortize the fork/join — on a 32-lane
+/// pool a 5000-element axpy runs on 2 lanes, not 32.
+pub const PAR_CHUNK_MIN: usize = 2048;
+
+/// Block count for `work` total elements on `threads` lanes: enough blocks
+/// to use the pool, never so many that a chunk drops below
+/// [`PAR_CHUNK_MIN`]. Deterministic in `(work, threads)`.
+pub fn block_count(work: usize, threads: usize) -> usize {
+    threads.min(work / PAR_CHUNK_MIN).max(1)
+}
+
+/// Number of worker lanes to use when the caller passes `threads == 0`:
+/// `HYPIPE_THREADS` if set to a positive integer, else the machine's
+/// available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("HYPIPE_THREADS") {
+        if let Ok(t) = v.trim().parse::<usize>() {
+            if t >= 1 {
+                return t;
+            }
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Process-wide pool registry: one pool per distinct thread count, created
+/// lazily and kept alive for the process (bounded by the handful of
+/// distinct counts a run ever asks for).
+static POOLS: OnceLock<Mutex<Vec<Arc<ThreadPool>>>> = OnceLock::new();
+
+/// Get the shared pool with `threads` lanes (`0` = [`default_threads`]).
+pub fn with_threads(threads: usize) -> Arc<ThreadPool> {
+    let t = if threads == 0 { default_threads() } else { threads };
+    let pools = POOLS.get_or_init(|| Mutex::new(Vec::new()));
+    let mut guard = pools.lock().unwrap();
+    if let Some(p) = guard.iter().find(|p| p.threads() == t) {
+        return p.clone();
+    }
+    let p = Arc::new(ThreadPool::new(t));
+    guard.push(p.clone());
+    p
+}
+
+/// The single-lane pool: every `run` executes inline on the caller.
+pub fn serial() -> Arc<ThreadPool> {
+    with_threads(1)
+}
+
+/// Deterministic uniform chunk `b` of `len` items split into `blocks`
+/// contiguous ranges (the same formula everywhere: boundaries depend only
+/// on `(len, blocks)`).
+pub fn chunk(len: usize, blocks: usize, b: usize) -> (usize, usize) {
+    debug_assert!(b < blocks);
+    (len * b / blocks, len * (b + 1) / blocks)
+}
+
+/// A raw pointer + length pair that may cross thread boundaries. Used by
+/// the parallel kernels to hand each worker a *disjoint* sub-slice of an
+/// output buffer; the pool's fork/join structure guarantees the borrow
+/// outlives every task.
+pub struct SendPtr<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> SendPtr<T> {
+    pub fn new(s: &mut [T]) -> SendPtr<T> {
+        SendPtr {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+        }
+    }
+
+    /// Reborrow `[lo, hi)` as a mutable slice.
+    ///
+    /// # Safety
+    /// Concurrent callers must use pairwise-disjoint ranges, the range must
+    /// be in bounds, and the underlying borrow must outlive the use (true
+    /// inside [`ThreadPool::run`], which joins before returning).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut<'a>(&self, lo: usize, hi: usize) -> &'a mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr {
+            ptr: self.ptr,
+            len: self.len,
+        }
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: SendPtr is only a capability to *derive* disjoint sub-slices;
+// the disjointness obligation is on `range_mut` callers.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// One job broadcast to the workers: an erased `Fn(usize)` plus a shared
+/// task counter. Valid only while the dispatching `run` call is blocked in
+/// its join phase, which is exactly the workers' window of use.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    next: *const AtomicUsize,
+    /// Set when a worker's task panicked; the dispatcher re-raises after
+    /// the join so kernel assertions surface as ordinary panics.
+    poisoned: *const AtomicBool,
+    tasks: usize,
+}
+// SAFETY: the raw pointers target stack data of the `run` frame, which
+// cannot return before every worker has decremented `active` for this job.
+unsafe impl Send for Job {}
+
+struct State {
+    epoch: u64,
+    job: Option<Job>,
+    /// Participating workers that have not yet finished the current
+    /// epoch's job.
+    active: usize,
+    /// Remaining participation slots for the current epoch: a job with few
+    /// tasks only enlists (and joins on) that many workers, so small
+    /// dispatches on a many-lane pool don't wait for the whole pool.
+    slots: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work: Condvar,
+    done: Condvar,
+}
+
+/// Fork/join worker pool. `threads` counts the calling thread: a pool of
+/// size 1 spawns no workers and runs everything inline.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    threads: usize,
+    /// Serializes dispatch: one job in flight at a time.
+    dispatch: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `threads` lanes (min 1). Prefer [`with_threads`],
+    /// which shares pools process-wide.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                slots: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                thread::Builder::new()
+                    .name(format!("hypipe-pool-{i}"))
+                    .spawn(move || worker(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            handles,
+            threads,
+            dispatch: Mutex::new(()),
+        }
+    }
+
+    /// Total lanes, including the calling thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), …, f(tasks - 1)`, each exactly once, distributed
+    /// over the pool's lanes. Blocks until every task has finished. Task
+    /// *assignment* to lanes is nondeterministic; callers that reduce must
+    /// store per-task results and combine them in task order.
+    pub fn run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        if tasks == 0 {
+            return;
+        }
+        if self.handles.is_empty() || tasks == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        // A panic re-raised below unwinds with this guard held; recover
+        // from the resulting poison on the next dispatch instead of
+        // wedging the process-wide shared pool forever.
+        let _guard = self
+            .dispatch
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let next = AtomicUsize::new(0);
+        let poisoned = AtomicBool::new(false);
+        unsafe fn shim<F: Fn(usize)>(data: *const (), i: usize) {
+            (*(data as *const F))(i);
+        }
+        let job = Job {
+            data: &f as *const F as *const (),
+            call: shim::<F>,
+            next: &next as *const AtomicUsize,
+            poisoned: &poisoned as *const AtomicBool,
+            tasks,
+        };
+        // Enlist at most one worker per remaining task: the join then only
+        // waits for workers the job can actually use, so a 2-block job on
+        // a 64-lane pool joins 1 worker, not 63. (tasks >= 2 here, so at
+        // least one slot exists.)
+        let workers = self.handles.len().min(tasks - 1);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.slots = workers;
+            st.active = workers;
+            st.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        // The caller is a lane too. Catch panics so the join below always
+        // runs — workers must never outlive this frame's borrows.
+        let caller = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            f(i);
+        }));
+        // Join: wait for every enlisted worker to retire the epoch
+        // (non-enlisted workers wake, find no slot, and go straight back
+        // to sleep without touching the job).
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.active > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        if poisoned.load(Ordering::Acquire) {
+            panic!("ThreadPool::run: a pooled task panicked on a worker thread");
+        }
+    }
+
+    /// Split `len` contiguous elements into [`block_count`] chunks (at
+    /// most one per lane, each at least [`PAR_CHUNK_MIN`] long) and run
+    /// `f(lo, hi)` for each non-empty chunk. Boundaries come from
+    /// [`chunk`], so they are reproducible for a fixed thread count.
+    pub fn run_chunks<F: Fn(usize, usize) + Sync>(&self, len: usize, f: F) {
+        if len == 0 {
+            return;
+        }
+        let blocks = block_count(len, self.threads);
+        self.run(blocks, |b| {
+            let (lo, hi) = chunk(len, blocks, b);
+            if lo < hi {
+                f(lo, hi);
+            }
+        });
+    }
+
+    /// Evaluate `f(b)` for each block and collect results **in block
+    /// order** — the deterministic-reduction building block.
+    pub fn map_blocks<T, F>(&self, blocks: usize, f: F) -> Vec<T>
+    where
+        T: Default + Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<T> = Vec::with_capacity(blocks);
+        out.resize_with(blocks, T::default);
+        let slot = SendPtr::new(&mut out);
+        self.run(blocks, |b| {
+            let v = f(b);
+            unsafe { slot.range_mut(b, b + 1) }[0] = v;
+        });
+        out
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    // Mark the epoch observed whether or not we get a
+                    // slot; only slot holders touch the job and check in.
+                    seen = st.epoch;
+                    if st.slots > 0 {
+                        if let Some(job) = st.job {
+                            st.slots -= 1;
+                            break job;
+                        }
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the dispatching `run` frame is alive until we check in
+        // below, so the job's pointers are valid for the whole drain loop.
+        // Panics are caught and reported via the poison flag so the
+        // dispatcher can re-raise them after its join.
+        let drained = catch_unwind(AssertUnwindSafe(|| unsafe {
+            let next = &*job.next;
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= job.tasks {
+                    break;
+                }
+                (job.call)(job.data, i);
+            }
+        }));
+        if drained.is_err() {
+            unsafe { (*job.poisoned).store(true, Ordering::Release) };
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for threads in [1, 2, 3, 4, 7] {
+            let pool = with_threads(threads);
+            for tasks in [0, 1, 2, 5, 64, 1000] {
+                let hits: Vec<AtomicU64> = (0..tasks).map(|_| AtomicU64::new(0)).collect();
+                pool.run(tasks, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "threads={threads} tasks={tasks}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_dispatches() {
+        let pool = with_threads(4);
+        let total = AtomicU64::new(0);
+        for _ in 0..100 {
+            pool.run(16, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 1600);
+    }
+
+    #[test]
+    fn map_blocks_preserves_block_order() {
+        let pool = with_threads(4);
+        let v = pool.map_blocks(23, |b| b * b);
+        assert_eq!(v, (0..23).map(|b| b * b).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunks_cover_and_are_monotone() {
+        for len in [0usize, 1, 5, 17, 4096, 100_001] {
+            for blocks in [1usize, 2, 3, 7, 16] {
+                let mut expect = 0;
+                for b in 0..blocks {
+                    let (lo, hi) = chunk(len, blocks, b);
+                    assert_eq!(lo, expect);
+                    assert!(hi >= lo && hi <= len);
+                    expect = hi;
+                }
+                assert_eq!(expect, len);
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks_writes_disjoint_ranges() {
+        let pool = with_threads(7);
+        let mut out = vec![0u8; 10_000];
+        let ptr = SendPtr::new(&mut out);
+        pool.run_chunks(10_000, |lo, hi| {
+            for v in unsafe { ptr.range_mut(lo, hi) }.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert!(out.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn with_threads_caches_by_size() {
+        let a = with_threads(3);
+        let b = with_threads(3);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.threads(), 3);
+        assert!(with_threads(0).threads() >= 1);
+    }
+
+    #[test]
+    fn private_pool_drops_cleanly() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicU64::new(0);
+        pool.run(10, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        drop(pool);
+        assert_eq!(total.load(Ordering::Relaxed), 10);
+    }
+}

@@ -184,6 +184,7 @@ fn indefinite_system_breaks_down_gracefully() {
             tol: 1e-12,
             max_iters: 200,
             record_history: false,
+            ..Default::default()
         },
         ..Default::default()
     };

@@ -1,0 +1,268 @@
+//! Property tests for the parallel execution layer: every `par_*` kernel
+//! must match its serial form across thread counts {1, 2, 4, 7} and sizes
+//! that do not divide evenly, reductions must be bit-deterministic for a
+//! fixed thread count, and the solvers must converge identically with
+//! `threads > 1`.
+
+use hypipe::blas::{self, PipecgVectors};
+use hypipe::precond::Jacobi;
+use hypipe::solver::{pipecg, SolveOpts};
+use hypipe::sparse::{gen, Ell};
+use hypipe::util::pool;
+use hypipe::util::prng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+/// Sizes straddling the serial-fallback threshold (`pool::PAR_MIN_LEN`),
+/// none divisible by 7 and most not by 2 or 4 either.
+const SIZES: [usize; 6] = [1, 33, 1001, 4097, 10_001, 65_537];
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+}
+
+#[test]
+fn par_spmv_matches_serial_across_threads() {
+    let mut rng = Rng::new(11);
+    let mats = [
+        gen::poisson2d_5pt(3, 5),
+        gen::poisson2d_5pt(57, 31),
+        gen::banded_spd(5003, 14.0, 9),
+    ];
+    for a in &mats {
+        let x = randvec(&mut rng, a.n);
+        let y_ser = a.spmv(&x);
+        let e = Ell::from_csr(a);
+        let ye_ser = e.spmv(&x);
+        for t in THREADS {
+            let p = pool::with_threads(t);
+            let mut y = vec![0.0; a.n];
+            a.par_spmv_into(&p, &x, &mut y);
+            assert_eq!(y, y_ser, "CSR n={} threads={t}", a.n);
+            let mut ye = vec![0.0; e.n];
+            e.par_spmv_into(&p, &x, &mut ye);
+            assert_eq!(ye, ye_ser, "ELL n={} threads={t}", a.n);
+            // Row-range form over an awkward sub-panel.
+            if a.n > 10 {
+                let (r0, r1) = (3, a.n - 4);
+                let mut yr = vec![0.0; r1 - r0];
+                a.par_spmv_rows_into(&p, r0, r1, &x, &mut yr);
+                assert_eq!(&yr[..], &y_ser[r0..r1], "rows n={} threads={t}", a.n);
+            }
+        }
+    }
+}
+
+#[test]
+fn par_fused_update_matches_serial_across_threads() {
+    let mut rng = Rng::new(22);
+    for n in SIZES {
+        let nv = randvec(&mut rng, n);
+        let mv = randvec(&mut rng, n);
+        let (alpha, beta) = (rng.range_f64(0.1, 2.0), rng.range_f64(0.0, 1.5));
+        let init: Vec<Vec<f64>> = (0..8).map(|_| randvec(&mut rng, n)).collect();
+
+        let mut serial = init.clone();
+        {
+            let [z, q, s, p, x, r, u, w] = &mut serial[..] else {
+                unreachable!()
+            };
+            blas::fused_pipecg_update(
+                &nv,
+                &mv,
+                alpha,
+                beta,
+                &mut PipecgVectors { z, q, s, p, x, r, u, w },
+            );
+        }
+        for t in THREADS {
+            let pl = pool::with_threads(t);
+            let mut par = init.clone();
+            {
+                let [z, q, s, p, x, r, u, w] = &mut par[..] else {
+                    unreachable!()
+                };
+                blas::par_fused_pipecg_update(
+                    &pl,
+                    &nv,
+                    &mv,
+                    alpha,
+                    beta,
+                    &mut PipecgVectors { z, q, s, p, x, r, u, w },
+                );
+            }
+            // Elementwise kernel: bit-identical to serial for any t.
+            assert_eq!(par, serial, "n={n} threads={t}");
+        }
+    }
+}
+
+#[test]
+fn par_split_updates_match_serial_across_threads() {
+    let mut rng = Rng::new(33);
+    for n in [1001, 10_001] {
+        let mv = randvec(&mut rng, n);
+        let nv = randvec(&mut rng, n);
+        let w_ro = randvec(&mut rng, n);
+        let inv_diag: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+        let (alpha, beta) = (0.8, 0.3);
+        let init: Vec<Vec<f64>> = (0..8).map(|_| randvec(&mut rng, n)).collect();
+
+        // Serial references for all three split kernels.
+        let (mut q1, mut s1, mut r1, mut u1) =
+            (init[0].clone(), init[1].clone(), init[2].clone(), init[3].clone());
+        blas::fused_update_without_n(&mv, alpha, beta, &mut q1, &mut s1, &mut r1, &mut u1, &w_ro);
+        let (mut z1, mut w1, mut m1) = (init[4].clone(), init[5].clone(), vec![0.0; n]);
+        blas::fused_update_with_n(&nv, &inv_diag, alpha, beta, &mut z1, &mut w1, &mut m1);
+        let (mut hq, mut hs, mut hp) = (init[0].clone(), init[1].clone(), init[6].clone());
+        let (mut hx, mut hr, mut hu) = (init[7].clone(), init[2].clone(), init[3].clone());
+        blas::fused_h3_pre(
+            &mv, &w_ro, alpha, beta, &mut hq, &mut hs, &mut hp, &mut hx, &mut hr, &mut hu,
+        );
+
+        for t in THREADS {
+            let pl = pool::with_threads(t);
+            let (mut q2, mut s2, mut r2, mut u2) =
+                (init[0].clone(), init[1].clone(), init[2].clone(), init[3].clone());
+            blas::par_fused_update_without_n(
+                &pl, &mv, alpha, beta, &mut q2, &mut s2, &mut r2, &mut u2, &w_ro,
+            );
+            assert_eq!((&q1, &s1, &r1, &u1), (&q2, &s2, &r2, &u2), "without_n t={t}");
+
+            let (mut z2, mut w2, mut m2) = (init[4].clone(), init[5].clone(), vec![0.0; n]);
+            blas::par_fused_update_with_n(
+                &pl, &nv, &inv_diag, alpha, beta, &mut z2, &mut w2, &mut m2,
+            );
+            assert_eq!((&z1, &w1, &m1), (&z2, &w2, &m2), "with_n t={t}");
+
+            let (mut pq, mut ps, mut pp) = (init[0].clone(), init[1].clone(), init[6].clone());
+            let (mut px, mut pr, mut pu) = (init[7].clone(), init[2].clone(), init[3].clone());
+            blas::par_fused_h3_pre(
+                &pl, &mv, &w_ro, alpha, beta, &mut pq, &mut ps, &mut pp, &mut px, &mut pr,
+                &mut pu,
+            );
+            assert_eq!((&hq, &hs, &hp), (&pq, &ps, &pp), "h3_pre qsp t={t}");
+            assert_eq!((&hx, &hr, &hu), (&px, &pr, &pu), "h3_pre xru t={t}");
+        }
+    }
+}
+
+#[test]
+fn par_dots_match_serial_within_tolerance() {
+    let mut rng = Rng::new(44);
+    for n in SIZES {
+        let r = randvec(&mut rng, n);
+        let w = randvec(&mut rng, n);
+        let u = randvec(&mut rng, n);
+        let (gs, ds, ns) = blas::fused_dots3(&r, &w, &u);
+        let dot_s = blas::dot(&r, &w);
+        let scale = 1e-12 * (n as f64 + 1.0);
+        for t in THREADS {
+            let pl = pool::with_threads(t);
+            let (g, d, nn) = blas::par_fused_dots3(&pl, &r, &w, &u);
+            assert!((g - gs).abs() < scale, "gamma n={n} t={t}");
+            assert!((d - ds).abs() < scale, "delta n={n} t={t}");
+            assert!((nn - ns).abs() < scale, "norm n={n} t={t}");
+            assert!((blas::par_dot(&pl, &r, &w) - dot_s).abs() < scale, "dot n={n} t={t}");
+        }
+    }
+}
+
+/// Fixed thread count ⇒ identical bits, run after run: the reduction
+/// order is a pure function of (len, threads), never of scheduling.
+#[test]
+fn par_reductions_are_bit_deterministic_per_thread_count() {
+    let mut rng = Rng::new(55);
+    let n = 50_023;
+    let r = randvec(&mut rng, n);
+    let w = randvec(&mut rng, n);
+    let u = randvec(&mut rng, n);
+    for t in [2, 4, 7] {
+        let pl = pool::with_threads(t);
+        let first = blas::par_fused_dots3(&pl, &r, &w, &u);
+        let first_dot = blas::par_dot(&pl, &r, &u);
+        for rep in 0..20 {
+            let again = blas::par_fused_dots3(&pl, &r, &w, &u);
+            assert_eq!(first.0.to_bits(), again.0.to_bits(), "gamma t={t} rep={rep}");
+            assert_eq!(first.1.to_bits(), again.1.to_bits(), "delta t={t} rep={rep}");
+            assert_eq!(first.2.to_bits(), again.2.to_bits(), "norm t={t} rep={rep}");
+            let d = blas::par_dot(&pl, &r, &u);
+            assert_eq!(first_dot.to_bits(), d.to_bits(), "dot t={t} rep={rep}");
+        }
+    }
+}
+
+/// Whole-solver check: PIPECG with threads ∈ {2, 4, 7} must converge on
+/// the paper's test setup and agree with the serial solve; a repeat run at
+/// the same thread count must be bit-identical end to end.
+#[test]
+fn pipecg_solver_parallel_matches_serial() {
+    let a = gen::poisson2d_5pt(96, 96); // n = 9216 > PAR_MIN_LEN
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let serial = pipecg::solve(
+        &a,
+        &b,
+        &pc,
+        &SolveOpts {
+            threads: 1,
+            ..Default::default()
+        },
+    );
+    assert!(serial.converged);
+    for t in [2, 4, 7] {
+        let opts = SolveOpts {
+            threads: t,
+            ..Default::default()
+        };
+        let par = pipecg::solve(&a, &b, &pc, &opts);
+        assert!(par.converged, "threads={t} did not converge");
+        assert!(par.true_residual(&a, &b) < 1e-4, "threads={t}");
+        let iter_diff = (par.iterations as i64 - serial.iterations as i64).abs();
+        assert!(iter_diff <= 2, "threads={t}: {} vs {}", par.iterations, serial.iterations);
+        assert!(
+            hypipe::util::max_abs_diff(&par.x, &serial.x) < 1e-6,
+            "threads={t} solution drift"
+        );
+        // Determinism end to end.
+        let par2 = pipecg::solve(&a, &b, &pc, &opts);
+        assert_eq!(par.iterations, par2.iterations);
+        assert!(par.x.iter().zip(&par2.x).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}
+
+/// The hybrid schedulers' CPU sides run pooled kernels; with threads > 1
+/// all three must still match the sequential reference.
+#[test]
+fn hybrids_converge_with_parallel_host_kernels() {
+    use hypipe::device::native::NativeAccel;
+    use hypipe::hybrid::{self, HybridConfig};
+
+    let a = gen::banded_spd(6000, 12.0, 17); // big enough to engage the pool
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let cfg = HybridConfig {
+        opts: SolveOpts {
+            threads: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let r_ref = pipecg::solve(&a, &b, &pc, &cfg.opts);
+    assert!(r_ref.converged);
+
+    let mut acc1 = NativeAccel::with_matrix(&a, &pc.inv_diag);
+    let rep1 = hybrid::hybrid1::solve(&a, &b, &pc, &mut acc1, &cfg).unwrap();
+    let mut acc2 = NativeAccel::with_matrix(&a, &pc.inv_diag);
+    let rep2 = hybrid::hybrid2::solve(&a, &b, &pc, &mut acc2, &cfg).unwrap();
+    let plan = hybrid::hybrid3::plan(&a, &cfg, None, None);
+    let mut acc3 = NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag);
+    let rep3 = hybrid::hybrid3::solve(&a, &b, &pc, &mut acc3, &plan, &cfg).unwrap();
+    for rep in [&rep1, &rep2, &rep3] {
+        assert!(rep.result.converged, "{} diverged with threads=4", rep.method);
+        assert!(
+            hypipe::util::max_abs_diff(&rep.result.x, &r_ref.x) < 1e-4,
+            "{} solution mismatch with threads=4",
+            rep.method
+        );
+    }
+}

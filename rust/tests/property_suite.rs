@@ -96,6 +96,7 @@ fn prop_hybrid_methods_match_sequential_reference() {
                 tol: 1e-6,
                 max_iters: 2000,
                 record_history: false,
+                ..Default::default()
             },
             ..Default::default()
         };
