@@ -53,9 +53,11 @@ fn validate(name: &str, rep: &RunReport, reference: &hypipe::solver::SolveResult
     );
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hypipe::Result<()> {
     if !runtime::artifacts_available() {
-        anyhow::bail!("e2e_validation requires the AOT artifacts: run `make artifacts` first");
+        return Err(hypipe::Error::Config(
+            "e2e_validation requires the AOT artifacts: run `make artifacts` first".into(),
+        ));
     }
     let lib = std::rc::Rc::new(runtime::open_default()?);
     println!("artifact library: {} compiled graphs available", lib.names().len());
@@ -150,13 +152,13 @@ fn baseline_gpu(
     b: &[f64],
     eng: &mut dyn GpuCompute,
     cfg: &HybridConfig,
-) -> anyhow::Result<RunReport> {
-    Ok(hypipe::baselines::run_gpu(
+) -> hypipe::Result<RunReport> {
+    hypipe::baselines::run_gpu(
         a,
         b,
         hypipe::baselines::GpuFlavor::PetscPipecg,
         eng,
         &cfg.opts,
         &cfg.cm,
-    )?)
+    )
 }

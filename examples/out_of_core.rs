@@ -18,7 +18,7 @@ use hypipe::runtime;
 use hypipe::sparse::{gen, MatrixStats};
 use hypipe::util::{human_bytes, human_time};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hypipe::Result<()> {
     // A 125-pt Poisson system and a deliberately tiny simulated device
     // memory so the matrix does not fit (scaled image of the paper's
     // "larger than 5 GB" Table-II systems).
@@ -45,7 +45,11 @@ fn main() -> anyhow::Result<()> {
         let mut eng = GpuEngine::new(lib, params.clone());
         match eng.load_matrix(&a, &pc.inv_diag) {
             Err(e) => println!("Hybrid-1/2 + GPU libraries refuse as expected:\n  {e}"),
-            Ok(_) => anyhow::bail!("load_matrix should have failed"),
+            Ok(_) => {
+                return Err(hypipe::Error::Config(
+                    "load_matrix should have failed".into(),
+                ))
+            }
         }
     } else {
         println!("(artifacts absent: skipping the PJRT refusal demonstration)");

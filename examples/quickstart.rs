@@ -15,7 +15,7 @@ use hypipe::precond::Jacobi;
 use hypipe::runtime;
 use hypipe::sparse::{gen, MatrixStats};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hypipe::Result<()> {
     // A 12³ grid with the paper's 125-point stencil (Table II workload).
     let a = gen::poisson3d_125pt(12);
     let b = a.mul_ones(); // exact solution x = 1/√N (paper §VI setup)

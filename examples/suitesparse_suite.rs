@@ -19,7 +19,7 @@ use hypipe::precond::Jacobi;
 use hypipe::sparse::gen;
 use hypipe::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hypipe::Result<()> {
     let scale: usize = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())

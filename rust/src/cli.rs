@@ -7,7 +7,10 @@
 //! `table1:NAME[/SCALE]`.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
+use crate::dist::DistOpts;
+use crate::solver::SolveOpts;
 use crate::sparse::{gen, mm, Csr};
 use crate::{Error, Result};
 
@@ -67,6 +70,37 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+}
+
+/// Solver options from the common flags (`--tol`, `--max-iters`,
+/// `--threads`), shared by the binary and the benches.
+pub fn solve_opts(args: &Args) -> Result<SolveOpts> {
+    Ok(SolveOpts {
+        tol: args.flag_parse("tol", 1e-5)?,
+        max_iters: args.flag_parse("max-iters", 10_000)?,
+        record_history: true,
+        threads: args.flag_parse("threads", 0usize)?,
+    })
+}
+
+/// Distributed-solve options: [`solve_opts`] plus `--ranks` (0 = auto,
+/// `HYPIPE_RANKS` honored) and `--reduce-latency-us` (injected allreduce
+/// completion latency in microseconds).
+pub fn dist_opts(args: &Args) -> Result<DistOpts> {
+    let latency_us: f64 = args.flag_parse("reduce-latency-us", 0.0)?;
+    // Upper bound keeps Duration::from_secs_f64 from panicking on
+    // overflow; 1e15 µs (~32 years) is far beyond any sane latency.
+    if !latency_us.is_finite() || latency_us < 0.0 || latency_us > 1e15 {
+        return Err(Error::Config(format!(
+            "--reduce-latency-us: must be a non-negative number of microseconds \
+             (at most 1e15), got {latency_us}"
+        )));
+    }
+    Ok(DistOpts {
+        base: solve_opts(args)?,
+        ranks: args.flag_parse("ranks", 0usize)?,
+        reduce_latency: Duration::from_secs_f64(latency_us * 1e-6),
+    })
 }
 
 /// Build a matrix from a spec string (see module docs for the grammar).
@@ -148,6 +182,30 @@ mod tests {
         let a = Args::parse(argv("x --tol zzz")).unwrap();
         let e = a.flag_parse("tol", 1.0f64).unwrap_err();
         assert!(format!("{e}").contains("tol"));
+    }
+
+    #[test]
+    fn solve_and_dist_opts_from_flags() {
+        let a = Args::parse(argv(
+            "solve --tol 1e-7 --max-iters 50 --threads 2 --ranks 3 --reduce-latency-us 250",
+        ))
+        .unwrap();
+        let so = solve_opts(&a).unwrap();
+        assert_eq!(so.tol, 1e-7);
+        assert_eq!(so.max_iters, 50);
+        assert_eq!(so.threads, 2);
+        let d = dist_opts(&a).unwrap();
+        assert_eq!(d.ranks, 3);
+        assert!((d.reduce_latency.as_secs_f64() - 250e-6).abs() < 1e-12);
+        // defaults
+        let d = dist_opts(&Args::parse(argv("solve")).unwrap()).unwrap();
+        assert_eq!(d.ranks, 0);
+        assert_eq!(d.reduce_latency, Duration::ZERO);
+        // negative and Duration-overflowing latencies rejected
+        let bad = Args::parse(argv("solve --reduce-latency-us -5")).unwrap();
+        assert!(dist_opts(&bad).is_err());
+        let huge = Args::parse(argv("solve --reduce-latency-us 1e30")).unwrap();
+        assert!(dist_opts(&huge).is_err());
     }
 
     #[test]

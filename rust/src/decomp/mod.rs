@@ -89,6 +89,21 @@ impl RowPartition {
     pub fn end(&self) -> usize {
         *self.bounds.last().unwrap()
     }
+
+    /// Block that owns `row` (binary search over the bounds). With empty
+    /// blocks present, the *non-empty* block containing `row` is returned —
+    /// the property the distributed halo maps rely on. Panics if `row` is
+    /// outside the partitioned range.
+    pub fn owner_of(&self, row: usize) -> usize {
+        assert!(
+            row >= self.start() && row < self.end(),
+            "owner_of({row}): outside [{}, {})",
+            self.start(),
+            self.end()
+        );
+        // Last block whose lower bound is <= row.
+        self.bounds.partition_point(|&b| b <= row) - 1
+    }
 }
 
 /// Lazy per-matrix cache of [`RowPartition`]s, keyed by `(r0, r1, blocks)`.
@@ -313,6 +328,37 @@ mod tests {
                 assert_eq!(prev, a.n);
             }
         });
+    }
+
+    #[test]
+    fn owner_of_inverts_range() {
+        check("owner_of agrees with range()", 30, |rng| {
+            let n = rng.range(5, 300);
+            let a = gen::banded_spd(n, rng.range_f64(2.0, 16.0), rng.next_u64());
+            for blocks in [1, 2, 3, 4, 7, 16] {
+                let p = RowPartition::by_nnz(&a.row_ptr, blocks);
+                for b in 0..p.blocks() {
+                    let (lo, hi) = p.range(b);
+                    for row in [lo, (lo + hi) / 2, hi.saturating_sub(1)] {
+                        if row >= lo && row < hi {
+                            assert_eq!(p.owner_of(row), b, "row {row} blocks {blocks}");
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn owner_of_skips_empty_blocks() {
+        // uniform(2, 5) has empty blocks; every item still has an owner
+        // whose range contains it.
+        let p = RowPartition::uniform(2, 5);
+        for row in 0..2 {
+            let b = p.owner_of(row);
+            let (lo, hi) = p.range(b);
+            assert!(lo <= row && row < hi);
+        }
     }
 
     #[test]

@@ -27,14 +27,18 @@ pub enum Resource {
     Stream2,
     /// Scalar/bookkeeping work on the host (α/β computation, launches).
     Host,
+    /// Inter-rank fabric communication (halo exchanges, reduction waits)
+    /// charged by the distributed execution layer (`dist`).
+    Net,
 }
 
-pub const ALL_RESOURCES: [Resource; 5] = [
+pub const ALL_RESOURCES: [Resource; 6] = [
     Resource::CpuExec,
     Resource::GpuExec,
     Resource::Stream1,
     Resource::Stream2,
     Resource::Host,
+    Resource::Net,
 ];
 
 impl Resource {
@@ -45,6 +49,7 @@ impl Resource {
             Resource::Stream1 => 2,
             Resource::Stream2 => 3,
             Resource::Host => 4,
+            Resource::Net => 5,
         }
     }
     pub fn name(self) -> &'static str {
@@ -54,6 +59,7 @@ impl Resource {
             Resource::Stream1 => "stream1",
             Resource::Stream2 => "stream2",
             Resource::Host => "host",
+            Resource::Net => "net",
         }
     }
 }
@@ -73,8 +79,8 @@ pub type Finish = f64;
 /// The discrete-event timeline.
 #[derive(Debug, Clone)]
 pub struct Timeline {
-    free_at: [f64; 5],
-    busy: [f64; 5],
+    free_at: [f64; 6],
+    busy: [f64; 6],
     events: Vec<TraceEvent>,
     record: bool,
 }
@@ -88,8 +94,8 @@ impl Default for Timeline {
 impl Timeline {
     pub fn new(record_events: bool) -> Timeline {
         Timeline {
-            free_at: [0.0; 5],
-            busy: [0.0; 5],
+            free_at: [0.0; 6],
+            busy: [0.0; 6],
             events: Vec::new(),
             record: record_events,
         }
@@ -215,7 +221,7 @@ mod tests {
             let mut tl = Timeline::new(false);
             let mut finishes = vec![];
             for _ in 0..rng.range(1, 30) {
-                let res = ALL_RESOURCES[rng.below(5)];
+                let res = ALL_RESOURCES[rng.below(ALL_RESOURCES.len())];
                 let dur = rng.range_f64(0.0, 2.0);
                 let ndeps = rng.below(3.min(finishes.len() + 1));
                 let deps: Vec<f64> = (0..ndeps)

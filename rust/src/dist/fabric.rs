@@ -1,0 +1,508 @@
+//! The rank fabric: N ranks as threads connected by typed message
+//! channels — the in-process analogue of an MPI communicator.
+//!
+//! [`run`] spawns one OS thread per rank (scoped, so rank bodies may
+//! borrow the matrix and right-hand side from the caller) and hands each a
+//! [`RankCtx`] with:
+//!
+//! * **point-to-point** [`RankCtx::send`] / [`RankCtx::recv`] — tagged,
+//!   FIFO per (sender, tag) pair, with an MPI-style unexpected-message
+//!   queue so out-of-order arrivals are buffered, not lost;
+//! * a **barrier** over all ranks;
+//! * a **non-blocking allreduce** ([`RankCtx::iallreduce`]) whose
+//!   completion is *polled* ([`RankCtx::test`]) or awaited
+//!   ([`RankCtx::wait`]) — the distributed analogue of `MPI_Iallreduce`,
+//!   the primitive PIPECG hides behind the preconditioner and SPMV.
+//!
+//! ## Determinism contract
+//!
+//! The allreduce is an all-gather followed by a **rank-ordered sum**:
+//! every rank receives every contribution and accumulates them in rank
+//! order `0, 1, …, N−1`. All ranks therefore compute bit-identical sums,
+//! and a fixed rank count reproduces identical bits run after run
+//! regardless of OS scheduling — the same discipline as the block-ordered
+//! reductions in `util::pool`.
+//!
+//! ## Latency injection
+//!
+//! [`FabricCfg::reduce_latency`] delays every allreduce *completion* by a
+//! fixed interval (measured from the posting instant). In-process channels
+//! are far faster than a real interconnect; the injected latency restores
+//! the thing PIPECG exists to hide, so the `ablation_dist_overlap` bench
+//! can measure communication hiding for real. Single-rank reductions
+//! complete immediately (nothing crosses the fabric). A rank that overlaps
+//! `reduce_latency` worth of local work between `iallreduce` and `wait`
+//! pays nothing; a blocking caller pays the full latency.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use crate::metrics::RankMetrics;
+
+/// Fabric-wide configuration.
+#[derive(Debug, Clone, Default)]
+pub struct FabricCfg {
+    /// Injected completion latency for every multi-rank allreduce.
+    pub reduce_latency: Duration,
+}
+
+/// A message crossing the fabric.
+enum Packet {
+    /// Tagged point-to-point payload.
+    P2p {
+        from: usize,
+        tag: u64,
+        data: Vec<f64>,
+    },
+    /// One rank's contribution to allreduce number `seq`.
+    Reduce {
+        from: usize,
+        seq: u64,
+        data: Vec<f64>,
+        ready_at: Instant,
+    },
+}
+
+/// Contributions gathered so far for one allreduce sequence number.
+struct ReduceSlot {
+    parts: Vec<Option<Vec<f64>>>,
+    ready_at: Instant,
+}
+
+/// Handle to an in-flight non-blocking allreduce. Completed (and consumed)
+/// by [`RankCtx::wait`]; progress can be polled with [`RankCtx::test`].
+#[derive(Debug)]
+pub struct Allreduce {
+    seq: u64,
+    local: Vec<f64>,
+    posted: Instant,
+}
+
+/// One rank's endpoint of the fabric.
+pub struct RankCtx {
+    rank: usize,
+    ranks: usize,
+    cfg: FabricCfg,
+    tx: Vec<Sender<Packet>>,
+    rx: Receiver<Packet>,
+    barrier: Arc<Barrier>,
+    /// Unexpected-message queue, FIFO per (from, tag).
+    pend_p2p: Vec<(usize, u64, Vec<f64>)>,
+    pend_reduce: HashMap<u64, ReduceSlot>,
+    next_seq: u64,
+    /// Per-rank communication accounting, filled in as the fabric is used
+    /// (reduction waits here; halo timing by `part::RankBlock::exchange`).
+    pub stats: RankMetrics,
+}
+
+impl RankCtx {
+    /// This rank's index, `0 <= rank < ranks`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Total rank count.
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Block until every rank has reached the barrier.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// Post `data` to rank `to` under `tag`. Non-blocking (channels are
+    /// unbounded); sending to self is a bug.
+    pub fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
+        assert!(to != self.rank, "rank {to}: send to self");
+        assert!(to < self.ranks, "send: rank {to} out of range");
+        self.tx[to]
+            .send(Packet::P2p {
+                from: self.rank,
+                tag,
+                data,
+            })
+            .expect("fabric: peer rank hung up");
+    }
+
+    /// Receive the next message from rank `from` under `tag`, blocking
+    /// until it arrives. Messages from other (from, tag) pairs that arrive
+    /// meanwhile are buffered.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f64> {
+        if let Some(pos) = self
+            .pend_p2p
+            .iter()
+            .position(|(f, t, _)| *f == from && *t == tag)
+        {
+            return self.pend_p2p.remove(pos).2;
+        }
+        loop {
+            let pkt = self.rx.recv().expect("fabric: all peers hung up");
+            match pkt {
+                Packet::P2p {
+                    from: f,
+                    tag: t,
+                    data,
+                } => {
+                    if f == from && t == tag {
+                        return data;
+                    }
+                    self.pend_p2p.push((f, t, data));
+                }
+                pkt => self.stash_reduce(pkt),
+            }
+        }
+    }
+
+    /// Start a non-blocking allreduce (elementwise sum) of `vals` across
+    /// all ranks. Every rank must call this the same number of times with
+    /// the same length; calls are matched by sequence number.
+    pub fn iallreduce(&mut self, vals: &[f64]) -> Allreduce {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let posted = Instant::now();
+        let ready_at = posted + self.cfg.reduce_latency;
+        for p in 0..self.ranks {
+            if p != self.rank {
+                self.tx[p]
+                    .send(Packet::Reduce {
+                        from: self.rank,
+                        seq,
+                        data: vals.to_vec(),
+                        ready_at,
+                    })
+                    .expect("fabric: peer rank hung up");
+            }
+        }
+        self.stats.reduces += 1;
+        Allreduce {
+            seq,
+            local: vals.to_vec(),
+            posted,
+        }
+    }
+
+    /// Poll an in-flight allreduce: true once every contribution has
+    /// arrived and the injected latency has elapsed ([`RankCtx::wait`]
+    /// would return without blocking).
+    pub fn test(&mut self, h: &Allreduce) -> bool {
+        if self.ranks == 1 {
+            return true;
+        }
+        while let Ok(pkt) = self.rx.try_recv() {
+            match pkt {
+                Packet::P2p { from, tag, data } => self.pend_p2p.push((from, tag, data)),
+                pkt => self.stash_reduce(pkt),
+            }
+        }
+        match self.ready_time(h) {
+            Some(ready) => Instant::now() >= ready,
+            None => false,
+        }
+    }
+
+    /// Complete an allreduce: block until every contribution has arrived
+    /// and the injected latency has elapsed, then return the rank-ordered
+    /// sum (bit-identical on every rank). Time spent blocked is charged to
+    /// `stats.reduce_wait_s`.
+    pub fn wait(&mut self, h: Allreduce) -> Vec<f64> {
+        let t0 = Instant::now();
+        if self.ranks > 1 {
+            while !self.have_all_parts(h.seq) {
+                let pkt = self.rx.recv().expect("fabric: all peers hung up");
+                match pkt {
+                    Packet::P2p { from, tag, data } => self.pend_p2p.push((from, tag, data)),
+                    pkt => self.stash_reduce(pkt),
+                }
+            }
+            let ready = self.ready_time(&h).unwrap();
+            let now = Instant::now();
+            if ready > now {
+                std::thread::sleep(ready - now);
+            }
+        }
+        self.stats.reduce_wait_s += t0.elapsed().as_secs_f64();
+        let slot = self.pend_reduce.remove(&h.seq);
+        let mut out = vec![0.0; h.local.len()];
+        for p in 0..self.ranks {
+            let part: &[f64] = if p == self.rank {
+                &h.local
+            } else {
+                slot.as_ref().expect("multi-rank wait without slot").parts[p]
+                    .as_deref()
+                    .expect("missing contribution")
+            };
+            assert_eq!(part.len(), out.len(), "allreduce length mismatch");
+            for (o, v) in out.iter_mut().zip(part) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Blocking allreduce: [`RankCtx::iallreduce`] + [`RankCtx::wait`] in
+    /// one call (what the naive PCG baseline does at every sync point).
+    pub fn allreduce(&mut self, vals: &[f64]) -> Vec<f64> {
+        let h = self.iallreduce(vals);
+        self.wait(h)
+    }
+
+    fn stash_reduce(&mut self, pkt: Packet) {
+        let Packet::Reduce {
+            from,
+            seq,
+            data,
+            ready_at,
+        } = pkt
+        else {
+            unreachable!("stash_reduce: p2p packet")
+        };
+        let ranks = self.ranks;
+        let slot = self.pend_reduce.entry(seq).or_insert_with(|| ReduceSlot {
+            parts: vec![None; ranks],
+            ready_at,
+        });
+        if ready_at > slot.ready_at {
+            slot.ready_at = ready_at;
+        }
+        assert!(
+            slot.parts[from].replace(data).is_none(),
+            "duplicate allreduce contribution from rank {from} (seq {seq})"
+        );
+    }
+
+    fn have_all_parts(&self, seq: u64) -> bool {
+        match self.pend_reduce.get(&seq) {
+            Some(slot) => slot
+                .parts
+                .iter()
+                .enumerate()
+                .all(|(p, v)| p == self.rank || v.is_some()),
+            None => false,
+        }
+    }
+
+    /// Earliest completion instant, once all contributions are in.
+    fn ready_time(&self, h: &Allreduce) -> Option<Instant> {
+        if !self.have_all_parts(h.seq) {
+            return None;
+        }
+        let own = h.posted + self.cfg.reduce_latency;
+        Some(self.pend_reduce[&h.seq].ready_at.max(own))
+    }
+}
+
+/// Spawn `ranks` threads, run `f` on each with its [`RankCtx`], and return
+/// the per-rank results in rank order. Scoped: `f` may borrow from the
+/// caller. A panicking rank propagates its panic out of `run` (the rank
+/// bodies in this crate run in lockstep, so panics are symmetric).
+pub fn run<R, F>(ranks: usize, cfg: &FabricCfg, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(&mut RankCtx) -> R + Sync,
+{
+    assert!(ranks >= 1, "fabric: need at least one rank");
+    let mut txs = Vec::with_capacity(ranks);
+    let mut rxs = Vec::with_capacity(ranks);
+    for _ in 0..ranks {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let barrier = Arc::new(Barrier::new(ranks));
+    let fref = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(rank, rx)| {
+                let mut tx = txs.clone();
+                // Replace the rank's own sender with a disconnected dummy:
+                // sending to self is asserted against, and without a live
+                // self-sender a rank whose peers have all exited (or
+                // panicked) gets a channel error from recv()/wait() instead
+                // of blocking forever.
+                tx[rank] = channel().0;
+                let barrier = barrier.clone();
+                let cfg = cfg.clone();
+                s.spawn(move || {
+                    let mut ctx = RankCtx {
+                        rank,
+                        ranks,
+                        cfg,
+                        tx,
+                        rx,
+                        barrier,
+                        pend_p2p: Vec::new(),
+                        pend_reduce: HashMap::new(),
+                        next_seq: 0,
+                        stats: RankMetrics {
+                            rank,
+                            ..Default::default()
+                        },
+                    };
+                    fref(&mut ctx)
+                })
+            })
+            .collect();
+        // Drop the parent's sender clones: once a rank's peers are gone,
+        // its receiver must disconnect (the self-sender above is a dummy),
+        // so a rank blocked in recv()/wait() after an asymmetric peer
+        // panic aborts via the channel error instead of hanging forever.
+        drop(txs);
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("fabric: rank panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_roundtrip_and_result_order() {
+        let out = run(3, &FabricCfg::default(), |ctx| {
+            let next = (ctx.rank() + 1) % ctx.ranks();
+            let prev = (ctx.rank() + ctx.ranks() - 1) % ctx.ranks();
+            ctx.send(next, 7, vec![ctx.rank() as f64]);
+            let got = ctx.recv(prev, 7);
+            assert_eq!(got, vec![prev as f64]);
+            ctx.rank()
+        });
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn recv_matches_tags_out_of_order() {
+        run(2, &FabricCfg::default(), |ctx| {
+            if ctx.rank() == 0 {
+                // Send tag 2 first, then tag 1 twice: receiver asks for
+                // tag 1 first and must get the sends in FIFO order.
+                ctx.send(1, 2, vec![20.0]);
+                ctx.send(1, 1, vec![11.0]);
+                ctx.send(1, 1, vec![12.0]);
+            } else {
+                assert_eq!(ctx.recv(0, 1), vec![11.0]);
+                assert_eq!(ctx.recv(0, 2), vec![20.0]);
+                assert_eq!(ctx.recv(0, 1), vec![12.0]);
+            }
+        });
+    }
+
+    #[test]
+    fn allreduce_is_rank_ordered_sum_on_every_rank() {
+        for ranks in [1, 2, 3, 4, 7] {
+            let sums = run(ranks, &FabricCfg::default(), |ctx| {
+                let v = [ctx.rank() as f64 + 0.25, -(ctx.rank() as f64) * 3.0];
+                ctx.allreduce(&v)
+            });
+            // Reference: sum in rank order (the contract).
+            let mut expect = vec![0.0; 2];
+            for r in 0..ranks {
+                expect[0] += r as f64 + 0.25;
+                expect[1] += -(r as f64) * 3.0;
+            }
+            for s in &sums {
+                assert_eq!(s[0].to_bits(), expect[0].to_bits(), "ranks={ranks}");
+                assert_eq!(s[1].to_bits(), expect[1].to_bits(), "ranks={ranks}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlapping_allreduces_match_by_sequence() {
+        let out = run(4, &FabricCfg::default(), |ctx| {
+            // Two reductions in flight at once; completed in reverse order.
+            let h1 = ctx.iallreduce(&[1.0]);
+            let h2 = ctx.iallreduce(&[10.0]);
+            let s2 = ctx.wait(h2);
+            let s1 = ctx.wait(h1);
+            (s1[0], s2[0])
+        });
+        for (s1, s2) in out {
+            assert_eq!(s1, 4.0);
+            assert_eq!(s2, 40.0);
+        }
+    }
+
+    #[test]
+    fn injected_latency_delays_blocking_wait() {
+        let cfg = FabricCfg {
+            reduce_latency: Duration::from_millis(30),
+        };
+        let waits = run(2, &cfg, |ctx| {
+            let t0 = Instant::now();
+            let s = ctx.allreduce(&[1.0]);
+            assert_eq!(s, vec![2.0]);
+            t0.elapsed()
+        });
+        for w in waits {
+            assert!(w >= Duration::from_millis(25), "wait {w:?} too short");
+        }
+    }
+
+    #[test]
+    fn overlapped_work_hides_injected_latency() {
+        let cfg = FabricCfg {
+            reduce_latency: Duration::from_millis(20),
+        };
+        let waits = run(2, &cfg, |ctx| {
+            ctx.barrier(); // align the ranks so spawn skew cannot bleed in
+            let h = ctx.iallreduce(&[1.0]);
+            std::thread::sleep(Duration::from_millis(40)); // "local work"
+            let t0 = Instant::now();
+            let s = ctx.wait(h);
+            assert_eq!(s, vec![2.0]);
+            t0.elapsed()
+        });
+        for w in waits {
+            // Latency already elapsed during the local work: the wait is
+            // (nearly) free.
+            assert!(w < Duration::from_millis(15), "wait {w:?} not hidden");
+        }
+    }
+
+    #[test]
+    fn single_rank_reduction_completes_immediately() {
+        let cfg = FabricCfg {
+            reduce_latency: Duration::from_secs(3600),
+        };
+        let out = run(1, &cfg, |ctx| {
+            let h = ctx.iallreduce(&[5.0, 6.0]);
+            assert!(ctx.test(&h));
+            ctx.wait(h)
+        });
+        assert_eq!(out[0], vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn test_polls_to_completion() {
+        let out = run(3, &FabricCfg::default(), |ctx| {
+            let h = ctx.iallreduce(&[1.0]);
+            let mut polls = 0u64;
+            while !ctx.test(&h) {
+                polls += 1;
+                std::thread::yield_now();
+            }
+            (ctx.wait(h), polls)
+        });
+        for (s, _polls) in out {
+            assert_eq!(s, vec![3.0]);
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let arrived = AtomicUsize::new(0);
+        run(4, &FabricCfg::default(), |ctx| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            ctx.barrier();
+            assert_eq!(arrived.load(Ordering::SeqCst), 4);
+        });
+    }
+}

@@ -1,0 +1,253 @@
+//! Distributed multi-rank execution subsystem.
+//!
+//! PIPECG's reason to exist (PAPER.md §II–III) is overlapping the *global
+//! reduction* — a latency-bound inter-node operation at scale — with the
+//! preconditioner and SPMV. The single-process solvers exercise that
+//! overlap only inside one address space; this module makes the hidden
+//! latency real:
+//!
+//! * [`fabric`] — N ranks as threads joined by typed message channels:
+//!   point-to-point send/recv, barrier, and a **non-blocking allreduce**
+//!   whose completion is polled (the `MPI_Iallreduce` analogue), with
+//!   optional injected reduction latency standing in for a cluster
+//!   interconnect.
+//! * [`part`] — nnz-balanced 1-D row-block domain decomposition extending
+//!   [`decomp::RowPartition`](crate::decomp::RowPartition) with per-rank
+//!   local CSR blocks, halo maps, and a packed halo exchange run before
+//!   each local SPMV.
+//! * [`pipecg`] — distributed PIPECG: each rank starts the allreduce of
+//!   its partial dots, performs its local preconditioner + halo exchange +
+//!   SPMV, and only then completes the reduction — one (hidden) sync point
+//!   per iteration.
+//! * [`pcg`] — the naive baseline that blocks on every reduction — two
+//!   exposed sync points per iteration. `cargo bench --bench
+//!   ablation_dist_overlap` measures the difference.
+//!
+//! ## Determinism contract
+//!
+//! Reductions sum contributions in **rank order** (`fabric`), the
+//! decomposition is a pure function of the sparsity structure and the rank
+//! count (`part`), and the local SPMV accumulates each row exactly as the
+//! serial [`Csr::spmv`](crate::sparse::Csr::spmv) does. Consequences:
+//!
+//! * a fixed rank count reproduces **bit-identical** solutions run after
+//!   run, for any injected latency;
+//! * the distributed SPMV is bit-identical to serial for *any* rank count;
+//! * `ranks = 1` reproduces the single-process serial solver bit for bit;
+//! * across rank counts, solutions agree to reduction rounding (the same
+//!   contract `util::pool` gives across thread counts).
+//!
+//! Rank-local kernels run serially: in a distributed run the parallelism
+//! *is* the rank count ([`SolveOpts::threads`] applies to the
+//! single-process methods and is ignored here — one OS thread per rank).
+
+pub mod fabric;
+pub mod part;
+pub mod pcg;
+pub mod pipecg;
+
+use std::time::{Duration, Instant};
+
+use crate::solver::{SolveOpts, StopReason};
+
+use self::fabric::{FabricCfg, RankCtx};
+use self::part::{DistPlan, RankBlock};
+
+/// Configuration of a distributed solve: the usual [`SolveOpts`] plus the
+/// rank count and the injected reduction latency.
+#[derive(Debug, Clone, Default)]
+pub struct DistOpts {
+    pub base: SolveOpts,
+    /// Rank count. `0` (default) = `HYPIPE_RANKS` if set, else the
+    /// machine's available parallelism; always clamped to one rank per
+    /// matrix row.
+    pub ranks: usize,
+    /// Injected allreduce completion latency (default zero) — the
+    /// interconnect stand-in for overlap experiments.
+    pub reduce_latency: Duration,
+}
+
+impl DistOpts {
+    /// Convenience constructor for a fixed rank count.
+    pub fn with_ranks(ranks: usize) -> DistOpts {
+        DistOpts {
+            ranks,
+            ..Default::default()
+        }
+    }
+}
+
+/// What one rank hands back to the driver: its slice of the solution,
+/// the (identical-on-every-rank) convergence data, and its comm/compute
+/// accounting.
+pub(crate) struct RankOut {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub final_norm: f64,
+    pub converged: bool,
+    pub stop: StopReason,
+    pub history: Vec<f64>,
+    pub metrics: crate::metrics::RankMetrics,
+}
+
+/// End state of one rank's iteration loop, as handed to [`finish_rank`].
+pub(crate) struct RankSolve {
+    pub x: Vec<f64>,
+    pub history: Vec<f64>,
+    pub norm: f64,
+    /// `Some((iterations, converged, stop))` if the loop broke early
+    /// (convergence or breakdown); `None` if it ran to `max_iters`.
+    pub outcome: Option<(usize, bool, StopReason)>,
+}
+
+/// Shared rank epilogue: resolve the ran-to-max-iters case, finalize the
+/// comm/compute accounting (compute = wall − halo − reduce wait) and build
+/// the [`RankOut`]. Used by both distributed solvers.
+pub(crate) fn finish_rank(
+    ctx: &mut RankCtx,
+    blk: &RankBlock,
+    started: Instant,
+    opts: &SolveOpts,
+    s: RankSolve,
+) -> RankOut {
+    let (iterations, converged, stop) = s.outcome.unwrap_or_else(|| {
+        let converged = s.norm < opts.tol;
+        let stop = if converged {
+            StopReason::Converged
+        } else {
+            StopReason::MaxIterations
+        };
+        (opts.max_iters, converged, stop)
+    });
+    let mut metrics = std::mem::take(&mut ctx.stats);
+    metrics.rows = blk.nloc();
+    metrics.nnz = blk.panel.nnz();
+    metrics.compute_s =
+        (started.elapsed().as_secs_f64() - metrics.halo_s - metrics.reduce_wait_s).max(0.0);
+    RankOut {
+        x: s.x,
+        iterations,
+        final_norm: s.norm,
+        converged,
+        stop,
+        history: s.history,
+        metrics,
+    }
+}
+
+/// Shared driver: decompose, spin up the fabric, run `rank_fn` on every
+/// rank, and assemble the report. Both distributed solvers are this with a
+/// different rank body.
+pub(crate) fn drive(
+    method: &str,
+    a: &crate::sparse::Csr,
+    b: &[f64],
+    opts: &DistOpts,
+    rank_fn: impl Fn(&mut RankCtx, &RankBlock) -> RankOut + Sync,
+) -> crate::metrics::DistReport {
+    assert_eq!(b.len(), a.n);
+    let ranks = resolve_ranks(opts.ranks, a.n);
+    let plan = DistPlan::build(a, ranks);
+    let cfg = FabricCfg {
+        reduce_latency: opts.reduce_latency,
+    };
+    let wall = Instant::now();
+    let outs = fabric::run(plan.ranks, &cfg, |ctx| {
+        rank_fn(ctx, &plan.blocks[ctx.rank()])
+    });
+    assemble(
+        method,
+        a,
+        b,
+        outs,
+        wall.elapsed().as_secs_f64(),
+        opts.reduce_latency,
+    )
+}
+
+/// Concatenate the per-rank outputs (rank order — the blocks are
+/// contiguous ascending row ranges) into one [`DistReport`]. The scalar
+/// trajectory is bit-identical on every rank (rank-ordered reductions), so
+/// rank 0's convergence data speaks for all; debug builds verify that.
+pub(crate) fn assemble(
+    method: &str,
+    a: &crate::sparse::Csr,
+    b: &[f64],
+    outs: Vec<RankOut>,
+    wall_seconds: f64,
+    reduce_latency: Duration,
+) -> crate::metrics::DistReport {
+    debug_assert!(outs
+        .iter()
+        .all(|o| o.iterations == outs[0].iterations && o.stop == outs[0].stop));
+    let ranks = outs.len();
+    let mut x = Vec::with_capacity(a.n);
+    let mut per_rank = Vec::with_capacity(ranks);
+    let mut head = None;
+    for o in outs {
+        if head.is_none() {
+            head = Some((o.iterations, o.final_norm, o.converged, o.stop, o.history));
+        }
+        x.extend_from_slice(&o.x);
+        per_rank.push(o.metrics);
+    }
+    let (iterations, final_norm, converged, stop, history) = head.expect("at least one rank");
+    let result = crate::solver::SolveResult {
+        x,
+        iterations,
+        final_norm,
+        converged,
+        stop,
+        history,
+    };
+    let true_residual = result.true_residual(a, b);
+    crate::metrics::DistReport {
+        method: method.to_string(),
+        ranks,
+        n: a.n,
+        nnz: a.nnz(),
+        result,
+        true_residual,
+        wall_seconds,
+        reduce_latency_s: reduce_latency.as_secs_f64(),
+        per_rank,
+    }
+}
+
+/// Rank count to use when the caller passes `ranks == 0`: `HYPIPE_RANKS`
+/// if set to a positive integer, else the machine's available parallelism.
+pub fn default_ranks() -> usize {
+    if let Ok(v) = std::env::var("HYPIPE_RANKS") {
+        if let Ok(r) = v.trim().parse::<usize>() {
+            if r >= 1 {
+                return r;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a requested rank count against a system of `rows` rows.
+pub fn resolve_ranks(requested: usize, rows: usize) -> usize {
+    let r = if requested == 0 {
+        default_ranks()
+    } else {
+        requested
+    };
+    r.clamp(1, rows.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_clamps() {
+        assert_eq!(resolve_ranks(4, 100), 4);
+        assert_eq!(resolve_ranks(4, 2), 2);
+        assert_eq!(resolve_ranks(3, 0), 1);
+        assert!(resolve_ranks(0, 1_000_000) >= 1);
+    }
+}

@@ -1,0 +1,267 @@
+//! 1-D row-block domain decomposition and halo exchange.
+//!
+//! [`DistPlan::build`] extends the intra-device nnz-balanced
+//! [`RowPartition`](crate::decomp::RowPartition) from thread lanes to
+//! fabric ranks: rank `r` owns the contiguous row block `[r0, r1)` chosen
+//! so every rank holds roughly `nnz / ranks` stored entries, and gets
+//!
+//! * a **local CSR block** — its row panel of the matrix (its own copy of
+//!   the rows' entries, global column space), and
+//! * a **halo map** — for every remote rank, the sorted list of vector
+//!   entries this rank needs from it (`recv`) and must ship to it
+//!   (`send`), derived once from the sparsity structure.
+//!
+//! [`RankBlock::exchange`] then performs one packed halo exchange: owned
+//! entries needed remotely are gathered into per-destination messages,
+//! sent point-to-point, and scattered into the ghost buffer on arrival.
+//!
+//! ## Ghost buffers and bit-compatibility
+//!
+//! Each rank keeps a full-length ghost buffer for SPMV inputs and the
+//! panel keeps *global* column indices, so the local SPMV accumulates each
+//! row's terms in exactly the order the single-process
+//! [`Csr::spmv`] does — making the distributed SPMV **bit-identical to
+//! serial for any rank count** (and the halo exchange still moves only the
+//! packed entries actually needed). Compact column renumbering (O(local +
+//! halo) buffers) is a planned follow-on; it trades this bit-compatibility
+//! for memory scalability (see ROADMAP).
+
+use std::time::Instant;
+
+use crate::decomp::RowPartition;
+use crate::sparse::Csr;
+
+use super::fabric::RankCtx;
+
+/// Message tag used by halo exchanges (FIFO per sender keeps successive
+/// exchanges between the same pair correctly ordered).
+pub const TAG_HALO: u64 = 0x48414C4F; // "HALO"
+
+/// One rank's share of the decomposed system.
+#[derive(Debug, Clone)]
+pub struct RankBlock {
+    pub rank: usize,
+    /// Owned row range `[r0, r1)` of the global matrix.
+    pub r0: usize,
+    pub r1: usize,
+    /// Local CSR block: rows `[r0, r1)`, global column space.
+    pub panel: Csr,
+    /// `send[p]`: sorted global indices (all within `[r0, r1)`) whose
+    /// values rank `p` needs from us.
+    pub send: Vec<Vec<usize>>,
+    /// `recv[p]`: sorted global indices we need from rank `p`.
+    pub recv: Vec<Vec<usize>>,
+}
+
+impl RankBlock {
+    /// Number of owned rows.
+    pub fn nloc(&self) -> usize {
+        self.r1 - self.r0
+    }
+
+    /// Total entries this rank ships per exchange.
+    pub fn send_count(&self) -> usize {
+        self.send.iter().map(|s| s.len()).sum()
+    }
+
+    /// Total entries this rank receives per exchange (its halo size).
+    pub fn halo_count(&self) -> usize {
+        self.recv.iter().map(|r| r.len()).sum()
+    }
+
+    /// One packed halo exchange of the distributed vector behind `xbuf`
+    /// (full-length ghost buffer whose own segment `[r0, r1)` is current).
+    /// On return every halo slot this rank's rows read is current too.
+    /// Time and volume are charged to the rank's comm stats.
+    pub fn exchange(&self, ctx: &mut RankCtx, xbuf: &mut [f64]) {
+        let t0 = Instant::now();
+        // Post all sends first (non-blocking), then drain receives: no
+        // ordering constraints between ranks, so no deadlock.
+        for p in 0..ctx.ranks() {
+            if p == self.rank || self.send[p].is_empty() {
+                continue;
+            }
+            let data: Vec<f64> = self.send[p].iter().map(|&g| xbuf[g]).collect();
+            ctx.stats.halo_doubles_sent += data.len() as u64;
+            ctx.send(p, TAG_HALO, data);
+        }
+        for p in 0..ctx.ranks() {
+            if p == self.rank || self.recv[p].is_empty() {
+                continue;
+            }
+            let data = ctx.recv(p, TAG_HALO);
+            assert_eq!(data.len(), self.recv[p].len(), "halo length mismatch");
+            for (&g, v) in self.recv[p].iter().zip(data) {
+                xbuf[g] = v;
+            }
+        }
+        ctx.stats.halo_s += t0.elapsed().as_secs_f64();
+    }
+
+    /// Local SPMV: `y = (A x)[r0..r1]` from the ghost buffer (which must
+    /// have been [`exchange`](RankBlock::exchange)d since `x` changed).
+    pub fn spmv(&self, xbuf: &[f64], y: &mut [f64]) {
+        self.panel.spmv_rows_into(0, self.nloc(), xbuf, y);
+    }
+}
+
+/// The full decomposition: one [`RankBlock`] per rank plus the partition
+/// that produced them. Built once per (matrix, rank count) on the driver,
+/// shared read-only by all rank threads.
+#[derive(Debug, Clone)]
+pub struct DistPlan {
+    pub n: usize,
+    pub ranks: usize,
+    pub part: RowPartition,
+    pub blocks: Vec<RankBlock>,
+}
+
+impl DistPlan {
+    /// nnz-balanced 1-D row-block decomposition of `a` over `ranks` ranks
+    /// (clamped to at most one rank per row). Pure function of the
+    /// sparsity structure and the rank count — the determinism anchor for
+    /// everything downstream.
+    pub fn build(a: &Csr, ranks: usize) -> DistPlan {
+        let ranks = ranks.clamp(1, a.n.max(1));
+        let part = RowPartition::by_nnz(&a.row_ptr, ranks);
+        // Per-rank needed-column sets, grouped by owner, ascending.
+        let mut recv_of: Vec<Vec<Vec<usize>>> = Vec::with_capacity(ranks);
+        for rank in 0..ranks {
+            let (r0, r1) = part.range(rank);
+            let mut need = vec![false; a.n];
+            for j in a.row_ptr[r0]..a.row_ptr[r1] {
+                let c = a.cols[j] as usize;
+                if c < r0 || c >= r1 {
+                    need[c] = true;
+                }
+            }
+            let mut recv = vec![Vec::new(); ranks];
+            for (g, _) in need.iter().enumerate().filter(|(_, &n)| n) {
+                recv[part.owner_of(g)].push(g);
+            }
+            debug_assert!(recv[rank].is_empty(), "own columns are not halo");
+            recv_of.push(recv);
+        }
+        // Send lists are the transpose of the recv lists (built in full
+        // before the recv lists are moved into the blocks).
+        let send_of: Vec<Vec<Vec<usize>>> = (0..ranks)
+            .map(|rank| (0..ranks).map(|p| recv_of[p][rank].clone()).collect())
+            .collect();
+        let blocks = recv_of
+            .into_iter()
+            .zip(send_of)
+            .enumerate()
+            .map(|(rank, (recv, send))| {
+                let (r0, r1) = part.range(rank);
+                RankBlock {
+                    rank,
+                    r0,
+                    r1,
+                    panel: a.row_panel(r0, r1),
+                    send,
+                    recv,
+                }
+            })
+            .collect();
+        DistPlan {
+            n: a.n,
+            ranks,
+            part,
+            blocks,
+        }
+    }
+
+    /// Total halo entries moved per exchange, over all ranks.
+    pub fn halo_total(&self) -> usize {
+        self.blocks.iter().map(|b| b.halo_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::fabric::{self, FabricCfg};
+    use crate::sparse::gen;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn plan_covers_rows_and_transposes_halo() {
+        check("DistPlan halo maps are consistent", 20, |rng| {
+            let n = rng.range(5, 200);
+            let a = gen::banded_spd(n, rng.range_f64(2.0, 12.0), rng.next_u64());
+            for ranks in [1, 2, 3, 4, 7] {
+                let plan = DistPlan::build(&a, ranks);
+                let ranks = plan.ranks;
+                let mut rows = 0;
+                for b in &plan.blocks {
+                    rows += b.nloc();
+                    for (p, list) in b.recv.iter().enumerate() {
+                        // sorted, remote-owned, and mirrored by p's send list
+                        assert!(list.windows(2).all(|w| w[0] < w[1]));
+                        for &g in list {
+                            assert!(g < b.r0 || g >= b.r1);
+                            assert_eq!(plan.part.owner_of(g), p);
+                        }
+                        assert_eq!(list, &plan.blocks[p].send[b.rank]);
+                    }
+                    // every halo column some row of the panel actually reads
+                    let halo: std::collections::BTreeSet<usize> =
+                        b.recv.iter().flatten().copied().collect();
+                    for &col in &b.panel.cols {
+                        let c = col as usize;
+                        assert!(
+                            (c >= b.r0 && c < b.r1) || halo.contains(&c),
+                            "column {c} neither owned nor halo"
+                        );
+                    }
+                }
+                assert_eq!(rows, a.n, "ranks={ranks}");
+            }
+        });
+    }
+
+    #[test]
+    fn single_rank_has_no_halo() {
+        let a = gen::poisson2d_5pt(8, 8);
+        let plan = DistPlan::build(&a, 1);
+        assert_eq!(plan.halo_total(), 0);
+        assert_eq!(plan.blocks[0].nloc(), a.n);
+    }
+
+    #[test]
+    fn ranks_clamped_to_rows() {
+        let a = gen::poisson2d_5pt(2, 2); // n = 4
+        let plan = DistPlan::build(&a, 64);
+        assert_eq!(plan.ranks, 4);
+        assert_eq!(plan.blocks.len(), 4);
+    }
+
+    #[test]
+    fn exchange_fills_exactly_the_halo() {
+        let a = gen::poisson2d_5pt(13, 9);
+        let plan = DistPlan::build(&a, 3);
+        let x: Vec<f64> = (0..a.n).map(|i| (i as f64).sin()).collect();
+        let got = fabric::run(plan.ranks, &FabricCfg::default(), |ctx| {
+            let blk = &plan.blocks[ctx.rank()];
+            let mut xbuf = vec![f64::NAN; a.n];
+            xbuf[blk.r0..blk.r1].copy_from_slice(&x[blk.r0..blk.r1]);
+            blk.exchange(ctx, &mut xbuf);
+            // Owned + halo slots are exact; everything else untouched.
+            for p in 0..ctx.ranks() {
+                for &g in &blk.recv[p] {
+                    assert_eq!(xbuf[g].to_bits(), x[g].to_bits());
+                }
+            }
+            let halo: std::collections::BTreeSet<usize> =
+                blk.recv.iter().flatten().copied().collect();
+            for (g, v) in xbuf.iter().enumerate() {
+                if (g < blk.r0 || g >= blk.r1) && !halo.contains(&g) {
+                    assert!(v.is_nan());
+                }
+            }
+            ctx.stats.halo_doubles_sent
+        });
+        let sent: u64 = got.iter().sum();
+        assert_eq!(sent as usize, plan.halo_total());
+    }
+}

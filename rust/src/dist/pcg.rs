@@ -1,0 +1,148 @@
+//! Distributed PCG — the naive baseline that **blocks on every
+//! reduction** (paper Alg. 1 executed per rank, library-style).
+//!
+//! Two exposed sync points per iteration: `δ = (s, p)` right after the
+//! SPMV, and `(γ, ‖u‖²)` right after the preconditioner — each a blocking
+//! allreduce with no local work left to hide it behind. Under injected
+//! reduction latency every iteration pays ~2× the latency in full; the
+//! overlapped [`pipecg`](super::pipecg) pays only the non-hidden
+//! remainder of one. `cargo bench --bench ablation_dist_overlap` measures
+//! exactly this gap.
+
+use std::time::Instant;
+
+use crate::blas;
+use crate::precond::{Jacobi, Preconditioner};
+use crate::solver::{is_bad, SolveOpts, StopReason};
+use crate::sparse::Csr;
+
+use super::fabric::RankCtx;
+use super::part::RankBlock;
+use super::{drive, finish_rank, DistOpts, RankOut, RankSolve};
+
+/// Solve `A x = b` with distributed blocking PCG from `x₀ = 0` over
+/// `opts.ranks` fabric ranks. Bit-identical to the serial `solver::pcg`
+/// at `ranks = 1` (with `threads = 1`) and bit-reproducible for any fixed
+/// rank count.
+pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &DistOpts) -> crate::metrics::DistReport {
+    drive("Dist-PCG", a, b, opts, |ctx, blk| {
+        solve_rank(ctx, blk, b, pc, &opts.base)
+    })
+}
+
+/// One rank's solve; mirrors `solver::pcg` operation for operation on the
+/// local row block.
+fn solve_rank(
+    ctx: &mut RankCtx,
+    blk: &RankBlock,
+    b: &[f64],
+    pc: &Jacobi,
+    opts: &SolveOpts,
+) -> RankOut {
+    let t_all = Instant::now();
+    let nl = blk.nloc();
+    let pcl = pc.restrict(blk.r0, blk.r1);
+    let mut xbuf = vec![0.0; b.len()];
+
+    // line 1: r₀ = b ; u₀ = M⁻¹ r₀
+    let mut x = vec![0.0; nl];
+    let mut r = b[blk.r0..blk.r1].to_vec();
+    let mut u = vec![0.0; nl];
+    pcl.apply(&r, &mut u);
+    // line 2: γ₀ = (u₀, r₀) ; norm₀ = ‖u₀‖ — one blocking reduction.
+    let red = ctx.allreduce(&[blas::dot(&u, &r), blas::dot(&u, &u)]);
+    let (mut gamma, mut norm) = (red[0], red[1].sqrt());
+
+    let mut p = vec![0.0; nl];
+    let mut s = vec![0.0; nl];
+    let mut gamma_prev = 0.0f64;
+    let mut history = Vec::new();
+    if opts.record_history {
+        history.push(norm);
+    }
+
+    let mut outcome = None;
+    for it in 0..opts.max_iters {
+        if norm < opts.tol {
+            outcome = Some((it, true, StopReason::Converged));
+            break;
+        }
+        // lines 4–8: β ; line 9: p = u + β p
+        let beta = if it > 0 { gamma / gamma_prev } else { 0.0 };
+        blas::xpay(&u, beta, &mut p);
+        // line 10: s = A p (halo exchange + local SPMV)
+        xbuf[blk.r0..blk.r1].copy_from_slice(&p);
+        blk.exchange(ctx, &mut xbuf);
+        blk.spmv(&xbuf, &mut s);
+        // line 11: δ = (s, p) — BLOCKING sync point 1.
+        let delta = ctx.allreduce(&[blas::dot(&s, &p)])[0];
+        if is_bad(delta) {
+            outcome = Some((it, false, StopReason::Breakdown));
+            break;
+        }
+        // line 12: α ; lines 13–14: x += α p ; r −= α s
+        let alpha = gamma / delta;
+        blas::axpy(alpha, &p, &mut x);
+        blas::axpy(-alpha, &s, &mut r);
+        // line 15: u = M⁻¹ r
+        pcl.apply(&r, &mut u);
+        // lines 16–17: γ ; norm — BLOCKING sync point 2.
+        gamma_prev = gamma;
+        let red = ctx.allreduce(&[blas::dot(&u, &r), blas::dot(&u, &u)]);
+        gamma = red[0];
+        norm = red[1].sqrt();
+        if opts.record_history {
+            history.push(norm);
+        }
+    }
+    finish_rank(
+        ctx,
+        blk,
+        t_all,
+        opts,
+        RankSolve {
+            x,
+            history,
+            norm,
+            outcome,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn converges_across_rank_counts() {
+        let a = gen::poisson2d_5pt(14, 14);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        for ranks in [1, 2, 4] {
+            let rep = solve(&a, &b, &pc, &DistOpts::with_ranks(ranks));
+            assert!(rep.result.converged, "ranks={ranks}");
+            assert!(rep.true_residual < 1e-4, "ranks={ranks}");
+        }
+    }
+
+    #[test]
+    fn two_reductions_per_iteration_plus_init() {
+        let a = gen::banded_spd(200, 6.0, 1);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let rep = solve(&a, &b, &pc, &DistOpts::with_ranks(2));
+        assert!(rep.result.converged);
+        let expect = 1 + 2 * rep.result.iterations as u64;
+        for m in &rep.per_rank {
+            assert_eq!(m.reduces, expect, "rank {}", m.rank);
+        }
+        // PIPECG on the same system: one init reduction + one per iteration.
+        let pipe = super::super::pipecg::solve(&a, &b, &pc, &DistOpts::with_ranks(2));
+        assert!(pipe.result.converged);
+        let expect = 1 + pipe.result.iterations as u64;
+        for m in &pipe.per_rank {
+            assert_eq!(m.reduces, expect, "pipecg rank {}", m.rank);
+        }
+    }
+}

@@ -43,6 +43,19 @@
 //! --bench ablation_parallel_cpu` measures the real serial-vs-parallel
 //! speedup; the virtual totals are unaffected by the thread count.
 //!
+//! ## Distributed execution
+//!
+//! The [`dist`] module scales the same solve across **fabric ranks** —
+//! threads joined by typed message channels with point-to-point send/recv,
+//! a barrier, and a non-blocking, rank-order-deterministic allreduce (the
+//! `MPI_Iallreduce` analogue). A 1-D nnz-balanced row-block decomposition
+//! gives each rank a local CSR block plus halo maps; `dist::pipecg`
+//! overlaps the global reduction with the local PC + halo exchange + SPMV,
+//! while `dist::pcg` blocks on every reduction — `cargo bench --bench
+//! ablation_dist_overlap` measures the communication hiding under
+//! injected reduction latency. `SolveOpts::threads` governs the
+//! single-process methods; `--ranks` governs the distributed ones.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -63,6 +76,7 @@ pub mod blas;
 pub mod cli;
 pub mod decomp;
 pub mod device;
+pub mod dist;
 pub mod hybrid;
 pub mod metrics;
 pub mod perfmodel;

@@ -10,14 +10,13 @@
 //! Run `hypipe help` for flags.
 
 use hypipe::baselines::{self, CpuFlavor, GpuFlavor};
-use hypipe::cli::{build_matrix, Args};
+use hypipe::cli::{build_matrix, dist_opts, solve_opts, Args};
 use hypipe::device::costmodel::CostModel;
 use hypipe::device::native::{GpuCompute, NativeAccel};
 use hypipe::device::{DeviceParams, GpuEngine};
 use hypipe::hybrid::{self, select::Method, HybridConfig};
 use hypipe::metrics::RunReport;
 use hypipe::precond::Jacobi;
-use hypipe::solver::SolveOpts;
 use hypipe::sparse::MatrixStats;
 use hypipe::util::human_bytes;
 use hypipe::{runtime, Result};
@@ -40,12 +39,18 @@ COMMON FLAGS
                     | banded:N,ROWNNZ[,SEED] | mtx:PATH | table1:NAME[/SCALE]
   --method M        auto | h1 | h2 | h3 | pipecg-cpu | pcg-cpu-paralution
                     | pcg-cpu-petsc | pcg-gpu-paralution | pcg-gpu-petsc
-                    | pipecg-rr | pipecg-gpu-petsc  (default: auto)
+                    | pipecg-rr | pipecg-gpu-petsc
+                    | dist-pipecg | dist-pcg         (default: auto)
   --backend B       native | pjrt               (default: pjrt if artifacts exist)
   --tol T           absolute tolerance on the preconditioned residual (1e-5)
   --max-iters N     iteration cap (10000)
   --threads T       host worker threads for the parallel CPU kernels
                     (default 0 = all cores; HYPIPE_THREADS also honored)
+  --ranks R         fabric ranks for the dist-* methods (default 0 = all
+                    cores; HYPIPE_RANKS also honored)
+  --reduce-latency-us L
+                    injected allreduce completion latency in µs for the
+                    dist-* methods (default 0; models an interconnect)
   --gpu-mem BYTES   simulated device memory capacity (default 5 GiB)
   --trace PATH      write a chrome-trace of the run
   --json            print the report as JSON
@@ -53,6 +58,8 @@ COMMON FLAGS
 EXAMPLES
   hypipe solve --matrix poisson125:12 --method auto
   hypipe solve --matrix table1:gyro --method h1 --backend native
+  hypipe solve --matrix poisson2d:256x256 --method dist-pipecg --ranks 4 \\
+               --reduce-latency-us 200
   hypipe perfmodel --matrix banded:100000,50
 ";
 
@@ -91,15 +98,6 @@ fn run(args: Args) -> Result<()> {
             std::process::exit(2);
         }
     }
-}
-
-fn solve_opts(args: &Args) -> Result<SolveOpts> {
-    Ok(SolveOpts {
-        tol: args.flag_parse("tol", 1e-5)?,
-        max_iters: args.flag_parse("max-iters", 10_000)?,
-        record_history: true,
-        threads: args.flag_parse("threads", 0usize)?,
-    })
 }
 
 fn gpu_params(args: &Args) -> Result<DeviceParams> {
@@ -172,6 +170,50 @@ fn print_report(args: &Args, rep: &RunReport) -> Result<()> {
     Ok(())
 }
 
+fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<()> {
+    if args.has("json") {
+        println!("{}", rep.to_json().to_pretty());
+    } else {
+        println!("method          : {} [{} ranks]", rep.method, rep.ranks);
+        println!("system          : n={} nnz={}", rep.n, rep.nnz);
+        println!(
+            "converged       : {} in {} iterations (norm {:.3e}, true residual {:.3e})",
+            rep.result.converged, rep.result.iterations, rep.result.final_norm, rep.true_residual
+        );
+        println!(
+            "wall time       : {} total, {} per iteration (injected reduce latency {})",
+            hypipe::util::human_time(rep.wall_seconds),
+            hypipe::util::human_time(rep.per_iter()),
+            hypipe::util::human_time(rep.reduce_latency_s)
+        );
+        println!(
+            "comm fraction   : {:.1}% (worst rank)",
+            100.0 * rep.comm_fraction()
+        );
+        let mut t = hypipe::util::table::Table::new(
+            "per-rank comm/compute",
+            &["rank", "rows", "nnz", "compute", "halo", "reduce wait", "halo sent"],
+        );
+        for m in &rep.per_rank {
+            t.row(vec![
+                m.rank.to_string(),
+                m.rows.to_string(),
+                m.nnz.to_string(),
+                hypipe::util::human_time(m.compute_s),
+                hypipe::util::human_time(m.halo_s),
+                hypipe::util::human_time(m.reduce_wait_s),
+                format!("{} f64", m.halo_doubles_sent),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    if let Some(path) = args.flag("trace") {
+        std::fs::write(path, rep.to_timeline().to_chrome_trace().to_pretty())?;
+        eprintln!("trace written to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_solve(args: &Args) -> Result<()> {
     let spec = args.flag_or("matrix", "poisson2d:64x64");
     let a = build_matrix(&spec)?;
@@ -196,6 +238,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
         .unwrap_or(true);
 
     let method = args.flag_or("method", "auto");
+    if matches!(method.as_str(), "dist-pipecg" | "dist-pcg") {
+        let dopts = dist_opts(args)?;
+        let rep = if method == "dist-pipecg" {
+            hypipe::dist::pipecg::solve(&a, &b, &pc, &dopts)
+        } else {
+            hypipe::dist::pcg::solve(&a, &b, &pc, &dopts)
+        };
+        return print_dist_report(args, &rep);
+    }
     let rep = match method.as_str() {
         "auto" | "h1" | "h2" | "h3" => {
             let chosen = match method.as_str() {

@@ -140,6 +140,123 @@ impl ReportSet {
     }
 }
 
+/// Per-rank communication/computation accounting of one distributed solve
+/// (`dist`). Filled in by the rank fabric (reduction waits), the halo
+/// exchange (volume + time) and the distributed solvers (compute).
+#[derive(Debug, Clone, Default)]
+pub struct RankMetrics {
+    pub rank: usize,
+    /// Owned rows / stored entries of this rank's block.
+    pub rows: usize,
+    pub nnz: usize,
+    /// Wall seconds in local kernels and scalar bookkeeping
+    /// (total − halo − reduce wait).
+    pub compute_s: f64,
+    /// Wall seconds in halo exchanges (pack, send, recv, unpack).
+    pub halo_s: f64,
+    /// Wall seconds blocked completing allreduces. With the overlapped
+    /// PIPECG this is only the *non-hidden* remainder of the reduction
+    /// latency; the blocking PCG baseline pays it in full.
+    pub reduce_wait_s: f64,
+    /// Allreduces started.
+    pub reduces: u64,
+    /// Halo f64 entries shipped by this rank over the whole solve.
+    pub halo_doubles_sent: u64,
+}
+
+impl RankMetrics {
+    /// Seconds spent communicating (halo + reduction waits).
+    pub fn comm_s(&self) -> f64 {
+        self.halo_s + self.reduce_wait_s
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("rank", n(self.rank as f64)),
+            ("rows", n(self.rows as f64)),
+            ("nnz", n(self.nnz as f64)),
+            ("compute_s", n(self.compute_s)),
+            ("halo_s", n(self.halo_s)),
+            ("reduce_wait_s", n(self.reduce_wait_s)),
+            ("reduces", n(self.reduces as f64)),
+            ("halo_doubles_sent", n(self.halo_doubles_sent as f64)),
+        ])
+    }
+}
+
+/// Outcome of one distributed solve: convergence data plus the per-rank
+/// comm/compute split (the distributed analogue of [`RunReport`]).
+#[derive(Debug, Clone)]
+pub struct DistReport {
+    /// Method label, e.g. "Dist-PIPECG" or "Dist-PCG".
+    pub method: String,
+    pub ranks: usize,
+    pub n: usize,
+    pub nnz: usize,
+    pub result: SolveResult,
+    /// ‖b − A x‖ recomputed on the assembled solution.
+    pub true_residual: f64,
+    /// Wall seconds of the whole distributed execution.
+    pub wall_seconds: f64,
+    /// Injected reduction latency (seconds) the run was configured with.
+    pub reduce_latency_s: f64,
+    /// One entry per rank, rank order.
+    pub per_rank: Vec<RankMetrics>,
+}
+
+impl DistReport {
+    /// Largest per-rank communication fraction of the wall time — the
+    /// headline number of the overlap ablation.
+    pub fn comm_fraction(&self) -> f64 {
+        let wall = self.wall_seconds.max(1e-30);
+        self.per_rank
+            .iter()
+            .map(|r| r.comm_s() / wall)
+            .fold(0.0, f64::max)
+    }
+
+    /// Wall seconds per iteration.
+    pub fn per_iter(&self) -> f64 {
+        self.wall_seconds / self.result.iterations.max(1) as f64
+    }
+
+    /// Charge the measured rank-0 comm/compute split to a [`Timeline`]
+    /// (compute on `CpuExec`, fabric traffic on `Net`) so the standard
+    /// report/trace tooling can render a distributed run. Aggregate spans,
+    /// not per-iteration events: overlap shows up as `Net` busy time
+    /// hidden under the `CpuExec` span.
+    pub fn to_timeline(&self) -> Timeline {
+        let mut tl = Timeline::default();
+        if let Some(r0) = self.per_rank.first() {
+            tl.run(Resource::CpuExec, "dist local compute (rank 0)", r0.compute_s, &[]);
+            tl.run(Resource::Net, "halo exchange (rank 0)", r0.halo_s, &[]);
+            tl.run(Resource::Net, "reduction wait (rank 0)", r0.reduce_wait_s, &[]);
+        }
+        tl
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("method", s(&self.method)),
+            ("ranks", n(self.ranks as f64)),
+            ("n", n(self.n as f64)),
+            ("nnz", n(self.nnz as f64)),
+            ("iterations", n(self.result.iterations as f64)),
+            ("converged", Json::Bool(self.result.converged)),
+            ("final_norm", n(self.result.final_norm)),
+            ("true_residual", n(self.true_residual)),
+            ("wall_s", n(self.wall_seconds)),
+            ("wall_per_iter_s", n(self.per_iter())),
+            ("reduce_latency_s", n(self.reduce_latency_s)),
+            ("comm_fraction", n(self.comm_fraction())),
+            (
+                "per_rank",
+                arr(self.per_rank.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
 /// Write a chrome-trace file for a report that kept its timeline.
 pub fn write_chrome_trace(report: &RunReport, path: &std::path::Path) -> crate::Result<()> {
     let tl = report
@@ -192,6 +309,46 @@ mod tests {
         let sp = set.speedups_vs("slow");
         assert_eq!(sp[0].1, 1.0);
         assert_eq!(sp[1].1, 4.0);
+    }
+
+    #[test]
+    fn dist_report_math_and_json() {
+        let rep = DistReport {
+            method: "Dist-PIPECG".into(),
+            ranks: 2,
+            n: 100,
+            nnz: 500,
+            result: dummy_result(),
+            true_residual: 1e-7,
+            wall_seconds: 2.0,
+            reduce_latency_s: 1e-4,
+            per_rank: vec![
+                RankMetrics {
+                    rank: 0,
+                    rows: 50,
+                    nnz: 250,
+                    compute_s: 1.4,
+                    halo_s: 0.1,
+                    reduce_wait_s: 0.5,
+                    reduces: 10,
+                    halo_doubles_sent: 40,
+                },
+                RankMetrics {
+                    rank: 1,
+                    compute_s: 1.9,
+                    halo_s: 0.05,
+                    reduce_wait_s: 0.05,
+                    ..Default::default()
+                },
+            ],
+        };
+        assert!((rep.comm_fraction() - 0.3).abs() < 1e-12);
+        assert!((rep.per_iter() - 0.2).abs() < 1e-12);
+        let tl = rep.to_timeline();
+        assert!((tl.busy(Resource::Net) - 0.6).abs() < 1e-12);
+        assert!((tl.busy(Resource::CpuExec) - 1.4).abs() < 1e-12);
+        let txt = rep.to_json().to_string();
+        assert!(crate::util::json::parse(&txt).is_ok());
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! MatrixMarket I/O (coordinate format, `real`/`integer` fields,
-//! `general`/`symmetric` symmetry). Lets users bring their own SuiteSparse
-//! downloads when the environment has them.
+//! MatrixMarket I/O (coordinate format, `real`/`integer`/`pattern`
+//! fields, `general`/`symmetric` symmetry). Lets users bring their own
+//! SuiteSparse downloads when the environment has them. `pattern` files
+//! (common for SuiteSparse graph matrices) store structure only; every
+//! entry gets value 1.0, with symmetric expansion unchanged. `complex`
+//! and `skew-symmetric` remain rejected.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
@@ -27,10 +30,18 @@ pub fn read_mm_from<R: BufRead>(r: R) -> Result<Csr> {
             "unsupported MatrixMarket header: {header}"
         )));
     }
-    if h.contains("complex") || h.contains("pattern") {
-        return Err(Error::Sparse("complex/pattern matrices unsupported".into()));
+    if h.contains("complex") || h.contains("hermitian") {
+        return Err(Error::Sparse("complex matrices unsupported".into()));
+    }
+    if h.contains("skew-symmetric") {
+        // `contains("symmetric")` below would match it and mirror entries
+        // with the wrong sign.
+        return Err(Error::Sparse("skew-symmetric matrices unsupported".into()));
     }
     let symmetric = h.contains("symmetric");
+    // `pattern` entry lines carry no value field: every entry gets 1.0.
+    // Non-pattern fields require a parseable value.
+    let pattern = h.contains("pattern");
 
     // Skip comments, read size line.
     let mut size_line = None;
@@ -75,7 +86,13 @@ pub fn read_mm_from<R: BufRead>(r: R) -> Result<Csr> {
             .next()
             .and_then(|v| v.parse().ok())
             .ok_or_else(|| Error::Sparse(format!("bad entry line: {t}")))?;
-        let v: f64 = it.next().and_then(|v| v.parse().ok()).unwrap_or(1.0);
+        let v: f64 = if pattern {
+            1.0
+        } else {
+            it.next()
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| Error::Sparse(format!("bad entry line: {t}")))?
+        };
         if r == 0 || c == 0 || r > rows || c > cols {
             return Err(Error::Sparse(format!("entry ({r},{c}) out of bounds")));
         }
@@ -127,6 +144,62 @@ mod tests {
         assert_eq!(a.get(0, 1), 1.0); // expanded
         assert_eq!(a.get(1, 0), 1.0);
         assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn parse_pattern_general() {
+        let src = "%%MatrixMarket matrix coordinate pattern general\n\
+                   3 3 3\n\
+                   1 2\n\
+                   2 2\n\
+                   3 1\n";
+        let a = read_mm_from(src.as_bytes()).unwrap();
+        assert_eq!(a.n, 3);
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.get(0, 1), 1.0);
+        assert_eq!(a.get(1, 1), 1.0);
+        assert_eq!(a.get(2, 0), 1.0);
+        assert_eq!(a.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn parse_pattern_symmetric_expands() {
+        let src = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                   3 3 3\n\
+                   1 1\n\
+                   2 1\n\
+                   3 3\n";
+        let a = read_mm_from(src.as_bytes()).unwrap();
+        assert_eq!(a.nnz(), 4); // off-diagonal (2,1) expanded to (1,2)
+        assert_eq!(a.get(0, 1), 1.0);
+        assert_eq!(a.get(1, 0), 1.0);
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn rejects_complex_and_skew_symmetric() {
+        let src = "%%MatrixMarket matrix coordinate complex general\n\
+                   1 1 1\n\
+                   1 1 1.0 0.0\n";
+        assert!(read_mm_from(src.as_bytes()).is_err());
+        let src = "%%MatrixMarket matrix coordinate real skew-symmetric\n\
+                   2 2 1\n\
+                   2 1 3.0\n";
+        assert!(read_mm_from(src.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn real_files_require_a_value() {
+        // A truncated/malformed value in a `real` file must error, not
+        // silently load as 1.0 (only `pattern` files default values).
+        let truncated = "%%MatrixMarket matrix coordinate real general\n\
+                         2 2 1\n\
+                         1 2\n";
+        assert!(read_mm_from(truncated.as_bytes()).is_err());
+        let garbage = "%%MatrixMarket matrix coordinate real general\n\
+                       2 2 1\n\
+                       1 2 1,5\n";
+        assert!(read_mm_from(garbage.as_bytes()).is_err());
     }
 
     #[test]

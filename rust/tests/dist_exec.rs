@@ -1,0 +1,212 @@
+//! Property and equivalence tests for the distributed execution layer:
+//! the partition + halo-exchange SPMV must equal the serial `Csr::spmv`
+//! bit for bit across rank counts, the distributed solvers must match the
+//! single-process references (bit-identically at `ranks = 1`, within
+//! rounding otherwise), and a fixed rank count must reproduce identical
+//! bits run after run — with or without injected reduction latency.
+
+use std::time::Duration;
+
+use hypipe::dist::fabric::{self, FabricCfg};
+use hypipe::dist::part::DistPlan;
+use hypipe::dist::{self, DistOpts};
+use hypipe::precond::Jacobi;
+use hypipe::solver::{self, SolveOpts};
+use hypipe::sparse::{gen, Csr};
+use hypipe::util::propcheck::check;
+use hypipe::util::prng::Rng;
+
+const RANKS: [usize; 5] = [1, 2, 3, 4, 7];
+
+fn serial_opts() -> SolveOpts {
+    SolveOpts {
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+/// Distributed SPMV through the halo exchange, assembled in rank order.
+fn dist_spmv(a: &Csr, x: &[f64], ranks: usize) -> Vec<f64> {
+    let plan = DistPlan::build(a, ranks);
+    let parts = fabric::run(plan.ranks, &FabricCfg::default(), |ctx| {
+        let blk = &plan.blocks[ctx.rank()];
+        let mut xbuf = vec![0.0; a.n];
+        xbuf[blk.r0..blk.r1].copy_from_slice(&x[blk.r0..blk.r1]);
+        blk.exchange(ctx, &mut xbuf);
+        let mut y = vec![0.0; blk.nloc()];
+        blk.spmv(&xbuf, &mut y);
+        y
+    });
+    parts.concat()
+}
+
+#[test]
+fn halo_exchange_spmv_is_bitwise_serial_spmv() {
+    check("dist SPMV == serial SPMV (bitwise)", 15, |rng| {
+        let n = rng.range(5, 400);
+        let a = gen::banded_spd(n, rng.range_f64(2.0, 16.0), rng.next_u64());
+        let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+        let y_ser = a.spmv(&x);
+        for ranks in RANKS {
+            let y = dist_spmv(&a, &x, ranks);
+            assert_eq!(y.len(), y_ser.len());
+            for i in 0..n {
+                assert_eq!(
+                    y[i].to_bits(),
+                    y_ser[i].to_bits(),
+                    "row {i}, ranks {ranks}, n {n}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn halo_exchange_spmv_on_structured_grids() {
+    let mats = [gen::poisson2d_5pt(23, 17), gen::poisson3d_7pt(7)];
+    let mut rng = Rng::new(7);
+    for a in &mats {
+        let x: Vec<f64> = (0..a.n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let y_ser = a.spmv(&x);
+        for ranks in RANKS {
+            assert_eq!(dist_spmv(a, &x, ranks), y_ser, "ranks={ranks}");
+        }
+    }
+}
+
+#[test]
+fn dist_pipecg_matches_reference_solver() {
+    let systems = [gen::poisson2d_5pt(24, 24), gen::banded_spd(400, 12.0, 5)];
+    for a in &systems {
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(a);
+        let reference = solver::pipecg::solve(a, &b, &pc, &serial_opts());
+        assert!(reference.converged);
+        for ranks in [1usize, 2, 4] {
+            let opts = DistOpts {
+                base: serial_opts(),
+                ranks,
+                ..Default::default()
+            };
+            let rep = dist::pipecg::solve(a, &b, &pc, &opts);
+            assert!(rep.result.converged, "ranks={ranks}");
+            let di = (rep.result.iterations as i64 - reference.iterations as i64).abs();
+            assert!(
+                di <= 2,
+                "ranks={ranks}: {} vs reference {}",
+                rep.result.iterations,
+                reference.iterations
+            );
+            let dx = hypipe::util::max_abs_diff(&rep.result.x, &reference.x);
+            assert!(dx < 1e-10, "ranks={ranks}: solution differs by {dx}");
+            if ranks == 1 {
+                // Single rank reproduces the serial solver bit for bit.
+                assert_eq!(rep.result.iterations, reference.iterations);
+                for (xd, xr) in rep.result.x.iter().zip(&reference.x) {
+                    assert_eq!(xd.to_bits(), xr.to_bits());
+                }
+                for (hd, hr) in rep.result.history.iter().zip(&reference.history) {
+                    assert_eq!(hd.to_bits(), hr.to_bits());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_pcg_matches_reference_solver() {
+    let a = gen::poisson2d_5pt(20, 20);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let reference = solver::pcg::solve(&a, &b, &pc, &serial_opts());
+    assert!(reference.converged);
+    for ranks in [1usize, 2, 4] {
+        let opts = DistOpts {
+            base: serial_opts(),
+            ranks,
+            ..Default::default()
+        };
+        let rep = dist::pcg::solve(&a, &b, &pc, &opts);
+        assert!(rep.result.converged, "ranks={ranks}");
+        let di = (rep.result.iterations as i64 - reference.iterations as i64).abs();
+        assert!(di <= 2, "ranks={ranks}");
+        let dx = hypipe::util::max_abs_diff(&rep.result.x, &reference.x);
+        assert!(dx < 1e-10, "ranks={ranks}: {dx}");
+        if ranks == 1 {
+            for (xd, xr) in rep.result.x.iter().zip(&reference.x) {
+                assert_eq!(xd.to_bits(), xr.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn fixed_rank_count_is_bit_reproducible() {
+    let a = gen::banded_spd(350, 10.0, 21);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    for ranks in [2usize, 3, 4] {
+        let opts = DistOpts {
+            base: serial_opts(),
+            ranks,
+            ..Default::default()
+        };
+        let r1 = dist::pipecg::solve(&a, &b, &pc, &opts);
+        let r2 = dist::pipecg::solve(&a, &b, &pc, &opts);
+        assert_eq!(r1.result.iterations, r2.result.iterations, "ranks={ranks}");
+        for (x1, x2) in r1.result.x.iter().zip(&r2.result.x) {
+            assert_eq!(x1.to_bits(), x2.to_bits(), "ranks={ranks}");
+        }
+        for (h1, h2) in r1.result.history.iter().zip(&r2.result.history) {
+            assert_eq!(h1.to_bits(), h2.to_bits(), "ranks={ranks}");
+        }
+    }
+}
+
+#[test]
+fn injected_latency_changes_timing_not_bits() {
+    let a = gen::poisson2d_5pt(16, 16);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let fast = dist::pipecg::solve(&a, &b, &pc, &DistOpts::with_ranks(2));
+    let slow = dist::pipecg::solve(
+        &a,
+        &b,
+        &pc,
+        &DistOpts {
+            base: SolveOpts {
+                max_iters: fast.result.iterations,
+                ..serial_opts()
+            },
+            ranks: 2,
+            reduce_latency: Duration::from_micros(200),
+        },
+    );
+    assert_eq!(slow.result.iterations, fast.result.iterations);
+    for (xs, xf) in slow.result.x.iter().zip(&fast.result.x) {
+        assert_eq!(xs.to_bits(), xf.to_bits());
+    }
+}
+
+#[test]
+fn per_rank_metrics_account_for_the_whole_system() {
+    let a = gen::poisson2d_5pt(30, 30);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let rep = dist::pipecg::solve(&a, &b, &pc, &DistOpts::with_ranks(4));
+    assert!(rep.result.converged);
+    assert_eq!(rep.per_rank.len(), 4);
+    assert_eq!(rep.per_rank.iter().map(|m| m.rows).sum::<usize>(), a.n);
+    assert_eq!(rep.per_rank.iter().map(|m| m.nnz).sum::<usize>(), a.nnz());
+    for m in &rep.per_rank {
+        // one init reduction + one per iteration
+        assert_eq!(m.reduces, 1 + rep.result.iterations as u64);
+        // interior ranks of a 1-D grid decomposition ship a halo each
+        // exchange; every solve did at least init's two exchanges
+        assert!(m.compute_s >= 0.0 && m.halo_s >= 0.0 && m.reduce_wait_s >= 0.0);
+    }
+    let sent: u64 = rep.per_rank.iter().map(|m| m.halo_doubles_sent).sum();
+    let plan = DistPlan::build(&a, 4);
+    let exchanges = 2 + rep.result.iterations as u64; // init u, init m, one per iter
+    assert_eq!(sent, plan.halo_total() as u64 * exchanges);
+}
