@@ -1,0 +1,149 @@
+//! Ablation: deep pipelines — reduction latency hidden across `l` iterations.
+//!
+//! Sweeps injected allreduce latency × pipeline depth on the rank fabric:
+//! blocking Dist-PCG (2 exposed reductions/iter), Dist-PIPECG (1 reduction
+//! hidden behind one iteration of local work) and Dist-PIPECG-L at depths
+//! `l ∈ {2, 3, 4}` (each reduction hidden behind `l` iterations). The
+//! headline claim: as the latency grows to several times the per-iteration
+//! local work, per-iteration time stays flat for the depth whose window
+//! covers the latency while shallower pipelines degrade linearly.
+//!
+//! Per-iteration times, overlap efficiencies and the flatness verdicts are
+//! printed and also written as `BENCH_ablation_deep_pipeline.json`
+//! (`HYPIPE_BENCH_JSON_DIR` controls the output directory).
+//!
+//! `HYPIPE_BENCH_ITERS` caps the iteration budget, `HYPIPE_RANKS` the
+//! default rank count.
+
+use std::time::Duration;
+
+use hypipe::bench;
+use hypipe::dist::{self, DistOpts};
+use hypipe::precond::Jacobi;
+use hypipe::solver::SolveOpts;
+use hypipe::sparse::gen;
+use hypipe::util::json;
+use hypipe::util::table::Table;
+
+const DEPTHS: [usize; 3] = [2, 3, 4];
+const LATENCIES_US: [u64; 4] = [0, 100, 300, 1000];
+
+fn main() {
+    let ranks = dist::resolve_ranks(0, usize::MAX).clamp(2, 4);
+    bench::header(
+        "Ablation — deep-pipelined PIPECG(l) vs PIPECG vs blocking PCG",
+        &format!(
+            "128x128 Poisson (n=16384), {ranks} ranks, fixed iteration budget; \
+             sweeping injected allreduce latency × pipeline depth"
+        ),
+    );
+    let iters = bench::bench_iters(40);
+    let a = gen::poisson2d_5pt(128, 128);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+
+    let base = |l: usize| SolveOpts {
+        tol: 1e-30, // run the full iteration budget
+        max_iters: iters,
+        record_history: false,
+        threads: 1,
+        pipeline_depth: l,
+    };
+    // methods[m] = (label, per-iter time per latency, overlap eff per latency)
+    let labels: Vec<String> = std::iter::once("Dist-PCG".to_string())
+        .chain(std::iter::once("Dist-PIPECG".to_string()))
+        .chain(DEPTHS.iter().map(|l| format!("Dist-PIPECG-L{l}")))
+        .collect();
+    let mut per_iter = vec![Vec::new(); labels.len()];
+    let mut overlap = vec![Vec::new(); labels.len()];
+
+    let mut col_strings = vec!["reduce latency".to_string()];
+    col_strings.extend(labels.iter().map(|l| format!("{l}/iter")));
+    let cols: Vec<&str> = col_strings.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("per-iteration wall time over {iters} iterations ({ranks} ranks)"),
+        &cols,
+    );
+    for &latency_us in &LATENCIES_US {
+        let reduce_latency = Duration::from_micros(latency_us);
+        let mut row = vec![hypipe::util::human_time(latency_us as f64 * 1e-6)];
+        for (m, label) in labels.iter().enumerate() {
+            let l = label
+                .strip_prefix("Dist-PIPECG-L")
+                .and_then(|d| d.parse().ok())
+                .unwrap_or(1);
+            let opts = DistOpts {
+                base: base(l),
+                ranks,
+                reduce_latency,
+            };
+            let rep = match m {
+                0 => dist::pcg::solve(&a, &b, &pc, &opts),
+                1 => dist::pipecg::solve(&a, &b, &pc, &opts),
+                _ => dist::pipecg_l::solve(&a, &b, &pc, &opts),
+            };
+            assert_eq!(rep.result.iterations, iters, "{label}");
+            per_iter[m].push(rep.per_iter());
+            overlap[m].push(rep.overlap_efficiency());
+            row.push(hypipe::util::human_time(rep.per_iter()));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+
+    // Flatness verdicts: per-iteration time at the top of the sweep vs the
+    // zero-latency floor. A depth whose window (~l iterations of local
+    // work) covers the injected latency should stay within ~10%.
+    let mut sweep_json = Vec::new();
+    for (m, label) in labels.iter().enumerate() {
+        let floor = per_iter[m][0].max(1e-12);
+        let worst = per_iter[m].last().copied().unwrap_or(floor);
+        let growth = worst / floor - 1.0;
+        println!(
+            "{label:16} per-iter growth over sweep: {:+.1}%  (overlap eff at top: {:.1}%){}",
+            100.0 * growth,
+            100.0 * overlap[m].last().copied().unwrap_or(0.0),
+            if growth.abs() <= 0.10 { "  [flat]" } else { "" }
+        );
+        let cells = LATENCIES_US
+            .iter()
+            .enumerate()
+            .map(|(i, &us)| {
+                json::obj(vec![
+                    ("reduce_latency_us", json::n(us as f64)),
+                    ("per_iter_s", json::n(per_iter[m][i])),
+                    ("overlap_efficiency", json::n(overlap[m][i])),
+                ])
+            })
+            .collect();
+        sweep_json.push(json::obj(vec![
+            ("method", json::s(label)),
+            ("growth_over_sweep", json::n(growth)),
+            ("cells", json::arr(cells)),
+        ]));
+    }
+    println!(
+        "\ninterpretation: PCG pays ~2 latencies/iter, PIPECG hides one latency \
+         behind one iteration of local work, PIPECG-L{} hides each behind up to \
+         {} iterations — raise HYPIPE_BENCH_ITERS or the latency ceiling if the \
+         local work on this box dwarfs 1 ms",
+        DEPTHS[DEPTHS.len() - 1],
+        DEPTHS[DEPTHS.len() - 1]
+    );
+    bench::write_json(
+        "ablation_deep_pipeline",
+        &json::obj(vec![
+            ("bench", json::s("ablation_deep_pipeline")),
+            ("matrix", json::s("poisson2d:128x128")),
+            ("n", json::n(a.n as f64)),
+            ("nnz", json::n(a.nnz() as f64)),
+            ("ranks", json::n(ranks as f64)),
+            ("iters", json::n(iters as f64)),
+            (
+                "latencies_us",
+                json::arr(LATENCIES_US.iter().map(|&u| json::n(u as f64)).collect()),
+            ),
+            ("methods", json::arr(sweep_json)),
+        ]),
+    );
+}

@@ -19,6 +19,7 @@ use hypipe::dist::{self, DistOpts};
 use hypipe::precond::Jacobi;
 use hypipe::solver::SolveOpts;
 use hypipe::sparse::gen;
+use hypipe::util::json;
 use hypipe::util::table::Table;
 
 fn main() {
@@ -47,6 +48,7 @@ fn main() {
         ],
     );
     let mut hidden_demonstrated = false;
+    let mut sweep = Vec::new();
     for latency_us in [0u64, 50, 200, 1000] {
         let opts = DistOpts {
             base: SolveOpts {
@@ -54,6 +56,7 @@ fn main() {
                 max_iters: iters,
                 record_history: false,
                 threads: 1,
+                pipeline_depth: 1,
             },
             ranks,
             reduce_latency: Duration::from_micros(latency_us),
@@ -74,8 +77,28 @@ fn main() {
             format!("{:.1}%", 100.0 * pipe.comm_fraction()),
             format!("{speedup:.2}x"),
         ]);
+        sweep.push(json::obj(vec![
+            ("reduce_latency_us", json::n(latency_us as f64)),
+            ("pcg_per_iter_s", json::n(pcg.per_iter())),
+            ("pipecg_per_iter_s", json::n(pipe.per_iter())),
+            ("pcg_comm_fraction", json::n(pcg.comm_fraction())),
+            ("pipecg_comm_fraction", json::n(pipe.comm_fraction())),
+            ("pipecg_speedup", json::n(speedup)),
+        ]));
     }
     println!("{}", t.render());
+    bench::write_json(
+        "ablation_dist_overlap",
+        &json::obj(vec![
+            ("bench", json::s("ablation_dist_overlap")),
+            ("matrix", json::s("poisson2d:256x256")),
+            ("n", json::n(a.n as f64)),
+            ("nnz", json::n(a.nnz() as f64)),
+            ("ranks", json::n(ranks as f64)),
+            ("iters", json::n(iters as f64)),
+            ("sweep", json::arr(sweep)),
+        ]),
+    );
     println!(
         "overlap {}: once the injected latency dominates the local work, the \
          blocking baseline pays ~2 latencies per iteration while PIPECG hides \

@@ -11,6 +11,7 @@ use hypipe::blas::{self, PipecgVectors};
 use hypipe::precond::Jacobi;
 use hypipe::solver::{pipecg, SolveOpts};
 use hypipe::sparse::{gen, Ell};
+use hypipe::util::json;
 use hypipe::util::pool;
 use hypipe::util::prng::Rng;
 
@@ -31,6 +32,15 @@ fn main() {
 
     let mut threads: Vec<usize> = [1usize, 2, 4, all].into_iter().filter(|&t| t <= all).collect();
     threads.dedup();
+    let mut json_rows: Vec<json::Json> = Vec::new();
+    let json_row = |kernel: &str, t: usize, mean: f64, base: f64| {
+        json::obj(vec![
+            ("kernel", json::s(kernel)),
+            ("threads", json::n(t as f64)),
+            ("mean_s", json::n(mean)),
+            ("speedup_vs_serial", json::n(base / mean)),
+        ])
+    };
 
     let mut spmv_base = 0.0;
     for &t in &threads {
@@ -42,6 +52,7 @@ fn main() {
             spmv_base = s.mean;
         }
         println!("  {}  ({:.2}x vs serial)", s.report(), spmv_base / s.mean);
+        json_rows.push(json_row("spmv_csr", t, s.mean, spmv_base));
     }
     let mut ell_base = 0.0;
     for &t in &threads {
@@ -53,6 +64,7 @@ fn main() {
             ell_base = s.mean;
         }
         println!("  {}  ({:.2}x vs serial)", s.report(), ell_base / s.mean);
+        json_rows.push(json_row("spmv_ell", t, s.mean, ell_base));
     }
 
     // Merged VMA (10 vectors) and fused dots.
@@ -79,6 +91,7 @@ fn main() {
             vma_base = s.mean;
         }
         println!("  {}  ({:.2}x vs serial)", s.report(), vma_base / s.mean);
+        json_rows.push(json_row("fused_vma", t, s.mean, vma_base));
     }
     let (r, w, u) = (rv(&mut rng), rv(&mut rng), rv(&mut rng));
     let mut dots_base = 0.0;
@@ -91,6 +104,7 @@ fn main() {
             dots_base = s.mean;
         }
         println!("  {}  ({:.2}x vs serial)", s.report(), dots_base / s.mean);
+        json_rows.push(json_row("fused_dots3", t, s.mean, dots_base));
     }
 
     // End-to-end: a capped-iteration PIPECG solve, serial vs all-cores.
@@ -105,6 +119,7 @@ fn main() {
             max_iters: iters,
             record_history: false,
             threads: t,
+            pipeline_depth: 1,
         };
         let s = bench::time(
             &format!("pipecg solve 512^2 x{iters} iters (t={t})"),
@@ -118,6 +133,19 @@ fn main() {
             solve_base = s.mean;
         }
         println!("  {}  ({:.2}x vs serial)", s.report(), solve_base / s.mean);
+        json_rows.push(json_row("pipecg_solve", t, s.mean, solve_base));
     }
     println!("\n(virtual-timeline totals are thread-count independent by design; see lib.rs docs)");
+    bench::write_json(
+        "ablation_parallel_cpu",
+        &json::obj(vec![
+            ("bench", json::s("ablation_parallel_cpu")),
+            ("matrix", json::s("poisson2d:512x512")),
+            ("n", json::n(n as f64)),
+            ("nnz", json::n(a.nnz() as f64)),
+            ("samples", json::n(samples as f64)),
+            ("solve_iters", json::n(iters as f64)),
+            ("rows", json::arr(json_rows)),
+        ]),
+    );
 }

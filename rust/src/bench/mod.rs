@@ -80,6 +80,20 @@ pub fn bench_iters(default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Write a machine-readable bench result as `BENCH_<name>.json` in the
+/// current directory (or `HYPIPE_BENCH_JSON_DIR` if set). Ablation benches
+/// call this after printing their tables so sweeps can be post-processed
+/// without scraping stdout. Failures are reported, never fatal — a bench
+/// run should not die on a read-only working directory.
+pub fn write_json(name: &str, value: &crate::util::json::Json) {
+    let dir = std::env::var("HYPIPE_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
+    match std::fs::write(&path, value.to_pretty()) {
+        Ok(()) => eprintln!("bench json written to {}", path.display()),
+        Err(e) => eprintln!("bench json NOT written ({}: {e})", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +107,21 @@ mod tests {
         assert_eq!(s.samples, 5);
         assert!(s.min <= s.mean && s.mean <= s.max + 1e-12);
         assert!(s.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn write_json_emits_file() {
+        use crate::util::json;
+        let dir = std::env::temp_dir().join(format!("hypipe_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("HYPIPE_BENCH_JSON_DIR", &dir);
+        let v = json::obj(vec![("answer", json::n(42.0))]);
+        write_json("unit_test", &v);
+        std::env::remove_var("HYPIPE_BENCH_JSON_DIR");
+        let path = dir.join("BENCH_unit_test.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("answer"));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 }

@@ -547,6 +547,186 @@ pub fn par_fused_h3_pre(
     });
 }
 
+/// Fused weighted multi-dot for the deep pipeline (p(l)-CG): in one pass
+/// over `zc`, compute `out[k] = Σ_i w[i]·zc[i]·ys[k][i]` — the M-inner
+/// products `⟨z_c, y_k⟩_M` of one new auxiliary vector against the whole
+/// band of basis/auxiliary vectors it must be orthogonalised against.
+pub fn fused_wdots(w: &[f64], zc: &[f64], ys: &[&[f64]], out: &mut [f64]) {
+    let len = zc.len();
+    assert_eq!(w.len(), len);
+    assert_eq!(ys.len(), out.len());
+    for y in ys {
+        assert_eq!(y.len(), len);
+    }
+    out.fill(0.0);
+    for i in 0..len {
+        let wz = w[i] * zc[i];
+        for (k, y) in ys.iter().enumerate() {
+            out[k] += wz * y[i];
+        }
+    }
+}
+
+/// Parallel [`fused_wdots`]: one partial vector per block, reduced in
+/// block order — bit-reproducible for a fixed thread count.
+pub fn par_fused_wdots(pool: &ThreadPool, w: &[f64], zc: &[f64], ys: &[&[f64]], out: &mut [f64]) {
+    let len = zc.len();
+    let blocks = par_blocks(pool, len);
+    if blocks <= 1 {
+        return fused_wdots(w, zc, ys, out);
+    }
+    let parts = pool.map_blocks(blocks, |b| {
+        let (lo, hi) = pool::chunk(len, blocks, b);
+        let ys_blk: Vec<&[f64]> = ys.iter().map(|y| &y[lo..hi]).collect();
+        let mut p = vec![0.0; ys.len()];
+        fused_wdots(&w[lo..hi], &zc[lo..hi], &ys_blk, &mut p);
+        p
+    });
+    out.fill(0.0);
+    for p in parts {
+        for (o, v) in out.iter_mut().zip(&p) {
+            *o += v;
+        }
+    }
+}
+
+/// Fused auxiliary-basis step of the deep pipeline: apply the
+/// preconditioner to a fresh SpMV result and shift by the recurrence
+/// coefficients in one pass:
+/// `out = (d .* az − γ·z − δ₋·z_prev) · inv_delta`.
+/// The startup phase (`j < l`, no Lanczos coefficients recovered yet) is
+/// the same kernel with `γ = σ_j`, `δ₋ = 0`, `inv_delta = 1`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_zstep(
+    az: &[f64],
+    inv_diag: &[f64],
+    z: &[f64],
+    z_prev: &[f64],
+    gamma: f64,
+    delta_prev: f64,
+    inv_delta: f64,
+    out: &mut [f64],
+) {
+    let len = az.len();
+    assert!(
+        inv_diag.len() == len && z.len() == len && z_prev.len() == len && out.len() == len,
+        "fused_zstep: length mismatch"
+    );
+    for i in 0..len {
+        out[i] = (inv_diag[i] * az[i] - gamma * z[i] - delta_prev * z_prev[i]) * inv_delta;
+    }
+}
+
+/// Parallel [`fused_zstep`]; bit-identical to serial.
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_zstep(
+    pool: &ThreadPool,
+    az: &[f64],
+    inv_diag: &[f64],
+    z: &[f64],
+    z_prev: &[f64],
+    gamma: f64,
+    delta_prev: f64,
+    inv_delta: f64,
+    out: &mut [f64],
+) {
+    let len = az.len();
+    if par_blocks(pool, len) <= 1 {
+        return fused_zstep(az, inv_diag, z, z_prev, gamma, delta_prev, inv_delta, out);
+    }
+    assert!(
+        inv_diag.len() == len && z.len() == len && z_prev.len() == len && out.len() == len,
+        "par_fused_zstep: length mismatch"
+    );
+    let op = SendPtr::new(out);
+    pool.run_chunks(len, |lo, hi| unsafe {
+        fused_zstep(
+            &az[lo..hi],
+            &inv_diag[lo..hi],
+            &z[lo..hi],
+            &z_prev[lo..hi],
+            gamma,
+            delta_prev,
+            inv_delta,
+            op.range_mut(lo, hi),
+        );
+    });
+}
+
+/// Fused basis recovery for the deep pipeline: orthogonalise the head
+/// auxiliary vector against the banded history and normalise, in one pass:
+/// `out = (zc − Σ_k coeffs[k]·vs[k]) · scale`.
+pub fn fused_basis_recover(zc: &[f64], vs: &[&[f64]], coeffs: &[f64], scale: f64, out: &mut [f64]) {
+    let len = zc.len();
+    assert_eq!(vs.len(), coeffs.len());
+    assert_eq!(out.len(), len);
+    for v in vs {
+        assert_eq!(v.len(), len);
+    }
+    for i in 0..len {
+        let mut acc = zc[i];
+        for (k, v) in vs.iter().enumerate() {
+            acc -= coeffs[k] * v[i];
+        }
+        out[i] = acc * scale;
+    }
+}
+
+/// Parallel [`fused_basis_recover`]; bit-identical to serial.
+pub fn par_fused_basis_recover(
+    pool: &ThreadPool,
+    zc: &[f64],
+    vs: &[&[f64]],
+    coeffs: &[f64],
+    scale: f64,
+    out: &mut [f64],
+) {
+    let len = zc.len();
+    if par_blocks(pool, len) <= 1 {
+        return fused_basis_recover(zc, vs, coeffs, scale, out);
+    }
+    assert_eq!(vs.len(), coeffs.len());
+    assert_eq!(out.len(), len);
+    let op = SendPtr::new(out);
+    pool.run_chunks(len, |lo, hi| unsafe {
+        let vs_blk: Vec<&[f64]> = vs.iter().map(|v| &v[lo..hi]).collect();
+        fused_basis_recover(&zc[lo..hi], &vs_blk, coeffs, scale, op.range_mut(lo, hi));
+    });
+}
+
+/// Fused tail update of the deep pipeline's lagged CG recurrence:
+/// `p = v − λ·p; x += ζ·p` in one pass (with `λ = 0` this is the very
+/// first search direction `p₀ = v₀`).
+pub fn fused_px_update(v: &[f64], lambda: f64, zeta: f64, p: &mut [f64], x: &mut [f64]) {
+    let len = v.len();
+    assert!(p.len() == len && x.len() == len, "fused_px_update: length mismatch");
+    for i in 0..len {
+        let pi = v[i] - lambda * p[i];
+        p[i] = pi;
+        x[i] += zeta * pi;
+    }
+}
+
+/// Parallel [`fused_px_update`]; bit-identical to serial.
+pub fn par_fused_px_update(
+    pool: &ThreadPool,
+    v: &[f64],
+    lambda: f64,
+    zeta: f64,
+    p: &mut [f64],
+    x: &mut [f64],
+) {
+    let len = v.len();
+    if par_blocks(pool, len) <= 1 {
+        return fused_px_update(v, lambda, zeta, p, x);
+    }
+    assert!(p.len() == len && x.len() == len, "par_fused_px_update: length mismatch");
+    let (pp, xp) = (SendPtr::new(p), SendPtr::new(x));
+    pool.run_chunks(len, |lo, hi| unsafe {
+        fused_px_update(&v[lo..hi], lambda, zeta, pp.range_mut(lo, hi), xp.range_mut(lo, hi));
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -767,5 +947,57 @@ mod tests {
         let mut out = vec![0.0; 3];
         hadamard(&[2.0, 3.0, 4.0], &[1.0, -1.0, 0.5], &mut out);
         assert_eq!(out, vec![2.0, -3.0, 2.0]);
+    }
+
+    #[test]
+    fn deep_pipeline_kernels_match_naive() {
+        let mut rng = Rng::new(77);
+        let n = 257;
+        let w = randvec(&mut rng, n);
+        let zc = randvec(&mut rng, n);
+        let y0 = randvec(&mut rng, n);
+        let y1 = randvec(&mut rng, n);
+        let y2 = randvec(&mut rng, n);
+
+        // fused_wdots == separate weighted dots
+        let mut out = vec![0.0; 3];
+        fused_wdots(&w, &zc, &[&y0, &y1, &y2], &mut out);
+        for (k, y) in [&y0, &y1, &y2].iter().enumerate() {
+            let naive: f64 = (0..n).map(|i| w[i] * zc[i] * y[i]).sum();
+            assert!((out[k] - naive).abs() < 1e-12 * n as f64, "wdot {k}");
+        }
+
+        // fused_zstep == unfused arithmetic
+        let az = randvec(&mut rng, n);
+        let inv_diag: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+        let (g, dp, inv_d) = (0.8, 0.3, 1.7);
+        let mut z_out = vec![0.0; n];
+        fused_zstep(&az, &inv_diag, &y0, &y1, g, dp, inv_d, &mut z_out);
+        for i in 0..n {
+            let want = (inv_diag[i] * az[i] - g * y0[i] - dp * y1[i]) * inv_d;
+            assert_eq!(z_out[i].to_bits(), want.to_bits(), "zstep row {i}");
+        }
+
+        // fused_basis_recover == unfused arithmetic
+        let coeffs = [0.4, -0.9];
+        let mut v_out = vec![0.0; n];
+        fused_basis_recover(&zc, &[&y0, &y1], &coeffs, 2.5, &mut v_out);
+        for i in 0..n {
+            let want = (zc[i] - coeffs[0] * y0[i] - coeffs[1] * y1[i]) * 2.5;
+            assert_eq!(v_out[i].to_bits(), want.to_bits(), "recover row {i}");
+        }
+
+        // fused_px_update == unfused arithmetic; λ = 0 copies v into p.
+        let (mut p, mut x) = (y0.clone(), y1.clone());
+        fused_px_update(&zc, 0.6, -0.2, &mut p, &mut x);
+        for i in 0..n {
+            let pi = zc[i] - 0.6 * y0[i];
+            assert_eq!(p[i].to_bits(), pi.to_bits(), "p row {i}");
+            assert_eq!(x[i].to_bits(), (y1[i] + -0.2 * pi).to_bits(), "x row {i}");
+        }
+        let (mut p0, mut x0) = (randvec(&mut rng, n), vec![0.0; n]);
+        fused_px_update(&zc, 0.0, 1.0, &mut p0, &mut x0);
+        assert_eq!(p0, zc);
+        assert_eq!(x0, zc);
     }
 }

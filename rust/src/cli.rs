@@ -73,13 +73,28 @@ impl Args {
 }
 
 /// Solver options from the common flags (`--tol`, `--max-iters`,
-/// `--threads`), shared by the binary and the benches.
+/// `--threads`, `--pipeline-depth`), shared by the binary and the benches.
 pub fn solve_opts(args: &Args) -> Result<SolveOpts> {
+    let max_iters = args.flag_parse("max-iters", 10_000)?;
+    let pipeline_depth: usize = args.flag_parse("pipeline-depth", 1)?;
+    if pipeline_depth == 0 {
+        return Err(Error::Config(
+            "--pipeline-depth: must be >= 1 (depth 0 would never complete a reduction)".into(),
+        ));
+    }
+    if args.flag("pipeline-depth").is_some() && pipeline_depth > max_iters {
+        return Err(Error::Config(format!(
+            "--pipeline-depth: depth {pipeline_depth} exceeds the iteration budget \
+             ({max_iters}); a deep pipeline needs at least l iterations to complete \
+             its first reduction — lower the depth or raise --max-iters"
+        )));
+    }
     Ok(SolveOpts {
         tol: args.flag_parse("tol", 1e-5)?,
-        max_iters: args.flag_parse("max-iters", 10_000)?,
+        max_iters,
         record_history: true,
         threads: args.flag_parse("threads", 0usize)?,
+        pipeline_depth,
     })
 }
 
@@ -96,9 +111,15 @@ pub fn dist_opts(args: &Args) -> Result<DistOpts> {
              (at most 1e15), got {latency_us}"
         )));
     }
+    let ranks: usize = args.flag_parse("ranks", 0usize)?;
+    if args.flag("ranks").is_some() && ranks == 0 {
+        return Err(Error::Config(
+            "--ranks: must be >= 1 (omit the flag or set HYPIPE_RANKS for auto)".into(),
+        ));
+    }
     Ok(DistOpts {
         base: solve_opts(args)?,
-        ranks: args.flag_parse("ranks", 0usize)?,
+        ranks,
         reduce_latency: Duration::from_secs_f64(latency_us * 1e-6),
     })
 }
@@ -206,6 +227,30 @@ mod tests {
         assert!(dist_opts(&bad).is_err());
         let huge = Args::parse(argv("solve --reduce-latency-us 1e30")).unwrap();
         assert!(dist_opts(&huge).is_err());
+    }
+
+    #[test]
+    fn pipeline_depth_and_ranks_validation() {
+        // valid explicit depth
+        let a = Args::parse(argv("solve --pipeline-depth 3 --max-iters 50")).unwrap();
+        assert_eq!(solve_opts(&a).unwrap().pipeline_depth, 3);
+        // default depth 1 when the flag is omitted
+        let a = Args::parse(argv("solve")).unwrap();
+        assert_eq!(solve_opts(&a).unwrap().pipeline_depth, 1);
+        // depth 0 rejected
+        let a = Args::parse(argv("solve --pipeline-depth 0")).unwrap();
+        let e = format!("{}", solve_opts(&a).unwrap_err());
+        assert!(e.contains("pipeline-depth"), "{e}");
+        // depth beyond the iteration budget rejected
+        let a = Args::parse(argv("solve --pipeline-depth 60 --max-iters 50")).unwrap();
+        let e = format!("{}", solve_opts(&a).unwrap_err());
+        assert!(e.contains("iteration budget"), "{e}");
+        // explicit --ranks 0 rejected; omitted flag still means auto (0)
+        let a = Args::parse(argv("solve --ranks 0")).unwrap();
+        let e = format!("{}", dist_opts(&a).unwrap_err());
+        assert!(e.contains("ranks"), "{e}");
+        let a = Args::parse(argv("solve")).unwrap();
+        assert_eq!(dist_opts(&a).unwrap().ranks, 0);
     }
 
     #[test]

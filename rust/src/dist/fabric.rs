@@ -206,7 +206,9 @@ impl RankCtx {
     /// Complete an allreduce: block until every contribution has arrived
     /// and the injected latency has elapsed, then return the rank-ordered
     /// sum (bit-identical on every rank). Time spent blocked is charged to
-    /// `stats.reduce_wait_s`.
+    /// `stats.reduce_wait_s` (the *exposed* slice); the full post→complete
+    /// interval is charged to `stats.reduce_inflight_s`, so
+    /// `inflight − wait` is the latency the solver managed to hide.
     pub fn wait(&mut self, h: Allreduce) -> Vec<f64> {
         let t0 = Instant::now();
         if self.ranks > 1 {
@@ -224,6 +226,7 @@ impl RankCtx {
             }
         }
         self.stats.reduce_wait_s += t0.elapsed().as_secs_f64();
+        self.stats.reduce_inflight_s += h.posted.elapsed().as_secs_f64();
         let slot = self.pend_reduce.remove(&h.seq);
         let mut out = vec![0.0; h.local.len()];
         for p in 0..self.ranks {
@@ -426,6 +429,70 @@ mod tests {
         for (s1, s2) in out {
             assert_eq!(s1, 4.0);
             assert_eq!(s2, 40.0);
+        }
+    }
+
+    /// The invariant `dist::pipecg_l` leans on: many reductions in flight
+    /// at once (a depth-l pipeline keeps l), completed in an arbitrary
+    /// order, with varying vector lengths, across ≥ 3 ranks — every
+    /// handle must still resolve to its own rank-ordered sum.
+    #[test]
+    fn deep_pipeline_of_allreduces_completes_out_of_order() {
+        const DEPTH: usize = 6;
+        for ranks in [3usize, 4, 7] {
+            let out = run(ranks, &FabricCfg::default(), |ctx| {
+                // Post six reductions before completing any; reduction k
+                // carries k+1 values so lengths differ per sequence.
+                let mut handles: Vec<Option<Allreduce>> = (0..DEPTH)
+                    .map(|k| {
+                        let vals: Vec<f64> =
+                            (0..=k).map(|i| (k * 10 + i) as f64 + ctx.rank() as f64).collect();
+                        Some(ctx.iallreduce(&vals))
+                    })
+                    .collect();
+                // Poll the youngest while all six are pending, then
+                // complete in a scrambled order.
+                let _ = ctx.test(handles[DEPTH - 1].as_ref().unwrap());
+                let order = [5usize, 2, 0, 4, 1, 3];
+                let mut sums: Vec<Option<Vec<f64>>> = vec![None; DEPTH];
+                for k in order {
+                    let h = handles[k].take().unwrap();
+                    sums[k] = Some(ctx.wait(h));
+                }
+                sums
+            });
+            let rank_sum: f64 = (0..ranks).map(|r| r as f64).sum();
+            for sums in out {
+                for (k, s) in sums.into_iter().enumerate() {
+                    let s = s.unwrap();
+                    assert_eq!(s.len(), k + 1, "ranks={ranks} seq={k}");
+                    for (i, v) in s.iter().enumerate() {
+                        let expect = ranks as f64 * (k * 10 + i) as f64 + rank_sum;
+                        assert_eq!(*v, expect, "ranks={ranks} seq={k} elem={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wait_accounts_inflight_time_of_hidden_reductions() {
+        let cfg = FabricCfg {
+            reduce_latency: Duration::from_millis(20),
+        };
+        let stats = run(2, &cfg, |ctx| {
+            ctx.barrier();
+            let h = ctx.iallreduce(&[1.0]);
+            std::thread::sleep(Duration::from_millis(40)); // hides the latency
+            ctx.wait(h);
+            ctx.stats.clone()
+        });
+        for s in stats {
+            // The reduction was in flight for the whole 40 ms of local
+            // work but exposed (blocking) for almost none of it.
+            assert!(s.reduce_inflight_s >= 0.035, "inflight {}", s.reduce_inflight_s);
+            assert!(s.reduce_wait_s <= 0.015, "exposed {}", s.reduce_wait_s);
+            assert!(s.reduce_inflight_s >= s.reduce_wait_s);
         }
     }
 

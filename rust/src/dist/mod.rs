@@ -19,6 +19,10 @@
 //!   its partial dots, performs its local preconditioner + halo exchange +
 //!   SPMV, and only then completes the reduction — one (hidden) sync point
 //!   per iteration.
+//! * [`pipecg_l`] — deep-pipelined p(l)-CG: the iteration-`j` reduction
+//!   completes only at iteration `j + l`, keeping `l` allreduces in
+//!   flight and hiding latencies up to ~`l×` the per-iteration local
+//!   work (`cargo bench --bench ablation_deep_pipeline`).
 //! * [`pcg`] — the naive baseline that blocks on every reduction — two
 //!   exposed sync points per iteration. `cargo bench --bench
 //!   ablation_dist_overlap` measures the difference.
@@ -45,6 +49,7 @@ pub mod fabric;
 pub mod part;
 pub mod pcg;
 pub mod pipecg;
+pub mod pipecg_l;
 
 use std::time::{Duration, Instant};
 

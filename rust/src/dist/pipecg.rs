@@ -39,8 +39,9 @@ pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &DistOpts) -> crate::metrics
 
 /// One rank's solve. Mirrors `solver::pipecg` operation for operation on
 /// the local row block (the bit-compatibility anchor); only the dots cross
-/// the fabric.
-fn solve_rank(
+/// the fabric. Shared with `dist::pipecg_l`, whose depth-1 configuration
+/// *is* this solver.
+pub(crate) fn solve_rank(
     ctx: &mut RankCtx,
     blk: &RankBlock,
     b: &[f64],

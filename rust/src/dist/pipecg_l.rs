@@ -1,0 +1,294 @@
+//! Distributed deep-pipelined CG — p(l)-CG over the rank fabric.
+//!
+//! [`solver::pipecg_l`](crate::solver::pipecg_l) holds its reduction
+//! results in a local queue; this driver makes the queue real: the banded
+//! dot block for column `j + 1` is **posted** as a non-blocking allreduce
+//! at iteration `j` and only **completed** at iteration `j + l`, so `l`
+//! reductions are in flight over the fabric at any moment. Each
+//! reduction therefore hides behind ~`l` iterations of local work
+//! (SpMV + PC + the recurrence kernels) instead of PIPECG's one — the
+//! regime where injected latencies of several times the per-iteration
+//! local work still leave per-iteration time flat
+//! (`cargo bench --bench ablation_deep_pipeline`).
+//!
+//! Depth `l = 1` *is* [`dist::pipecg`](super::pipecg): the same rank body
+//! runs, so the bitwise anchors (`ranks = 1` ≡ serial, fixed config
+//! reproducible) carry over unchanged. For `l ≥ 2` the rank body mirrors
+//! the serial deep solver operation for operation on the local row block;
+//! only the banded dot blocks cross the fabric, rank-order summed as
+//! always, so every rank takes bit-identical decisions in lockstep.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::blas;
+use crate::precond::{Jacobi, Preconditioner};
+use crate::solver::pipecg_l::{dot_band, ColumnStep, DeepScalars, Ring};
+use crate::solver::{is_bad, SolveOpts, StopReason};
+use crate::sparse::Csr;
+
+use super::fabric::{Allreduce, RankCtx};
+use super::part::RankBlock;
+use super::{drive, finish_rank, DistOpts, RankOut, RankSolve};
+
+/// Solve `A x = b` with distributed p(l)-CG from `x₀ = 0`, keeping
+/// `opts.base.pipeline_depth` allreduces in flight. Depth 1 runs the
+/// plain distributed PIPECG rank body under this method's label.
+pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &DistOpts) -> crate::metrics::DistReport {
+    let l = opts.base.pipeline_depth;
+    assert!(l >= 1, "pipeline_depth must be >= 1");
+    let method = format!("Dist-PIPECG-L{l}");
+    if l == 1 {
+        return drive(&method, a, b, opts, |ctx, blk| {
+            super::pipecg::solve_rank(ctx, blk, b, pc, &opts.base)
+        });
+    }
+    drive(&method, a, b, opts, |ctx, blk| {
+        solve_rank_deep(ctx, blk, b, pc, &opts.base, l)
+    })
+}
+
+/// One rank's deep solve. Same schedule as the serial solver, with the
+/// SpMV of the already-known `z_j` hoisted *before* the wait on the
+/// oldest reduction so the in-flight window spans a full `l` iterations
+/// of local work.
+fn solve_rank_deep(
+    ctx: &mut RankCtx,
+    blk: &RankBlock,
+    b: &[f64],
+    pc: &Jacobi,
+    opts: &SolveOpts,
+    l: usize,
+) -> RankOut {
+    let t_all = Instant::now();
+    let nl = blk.nloc();
+    let pcl = pc.restrict(blk.r0, blk.r1);
+    let weight: Vec<f64> = pcl.inv_diag.iter().map(|d| 1.0 / d).collect();
+    let mut xbuf = vec![0.0; b.len()];
+
+    // β = ‖M⁻¹b‖_M — the one blocking init reduction.
+    let r = b[blk.r0..blk.r1].to_vec();
+    let mut u = vec![0.0; nl];
+    pcl.apply(&r, &mut u);
+    let mut b2 = [0.0];
+    blas::fused_wdots(&weight, &u, &[u.as_slice()], &mut b2);
+    let red = ctx.allreduce(&[b2[0]]);
+    let beta = red[0].sqrt();
+    let mut history = Vec::new();
+    if opts.record_history {
+        history.push(beta);
+    }
+    if beta < opts.tol || opts.max_iters == 0 || !beta.is_finite() {
+        let converged = beta < opts.tol;
+        let stop = if converged {
+            StopReason::Converged
+        } else if beta.is_finite() {
+            StopReason::MaxIterations
+        } else {
+            StopReason::Breakdown
+        };
+        return finish_rank(
+            ctx,
+            blk,
+            t_all,
+            opts,
+            RankSolve {
+                x: vec![0.0; nl],
+                history,
+                norm: beta,
+                outcome: Some((0, converged, stop)),
+            },
+        );
+    }
+    let mut v0 = u;
+    blas::scale(1.0 / beta, &mut v0);
+
+    let mut vring = Ring::new(2 * l + 1, nl);
+    let mut zring = Ring::new(l + 1, nl);
+    vring.put(0, v0.clone());
+    zring.put(0, v0);
+    let mut p = vec![0.0; nl];
+    let mut x = vec![0.0; nl];
+    let mut az = vec![0.0; nl];
+    let mut st = DeepScalars::new(l, beta);
+    let mut inflight: VecDeque<Allreduce> = VecDeque::new();
+    let mut norm = beta;
+    let outcome;
+    let mut j = 0usize;
+    loop {
+        // (1) Local SpMV of the already-known z_j — the bulk of the work
+        // the in-flight reductions hide behind.
+        xbuf[blk.r0..blk.r1].copy_from_slice(zring.get(j));
+        blk.exchange(ctx, &mut xbuf);
+        blk.spmv(&xbuf, &mut az);
+        // (2) Complete the reduction posted l iterations ago → column c.
+        if j >= l {
+            let c = j + 1 - l;
+            let h = inflight.pop_front().expect("reduction queue underflow");
+            let dots = ctx.wait(h);
+            match st.process_column(c, &dots) {
+                ColumnStep::Breakdown => {
+                    outcome = Some((c - 1, false, StopReason::Breakdown));
+                    break;
+                }
+                ColumnStep::Ok(co) => {
+                    blas::fused_px_update(vring.get(c - 1), co.lambda, co.zeta, &mut p, &mut x);
+                    norm = co.norm;
+                    if opts.record_history {
+                        history.push(norm);
+                    }
+                    if norm < opts.tol {
+                        outcome = Some((c, true, StopReason::Converged));
+                        break;
+                    }
+                    if co.gcc_zero || is_bad(st.delta(c - 1)) {
+                        outcome = Some((c, false, StopReason::Breakdown));
+                        break;
+                    }
+                    let mut vc = vring.take(c);
+                    {
+                        let vs: Vec<&[f64]> = (co.glo..c).map(|k| vring.get(k)).collect();
+                        blas::fused_basis_recover(zring.get(c), &vs, &co.vcoeffs, co.inv_gcc, &mut vc);
+                    }
+                    vring.put(c, vc);
+                    if c == opts.max_iters {
+                        outcome = Some((c, false, StopReason::MaxIterations));
+                        break;
+                    }
+                }
+            }
+        }
+        // (3) Advance the auxiliary basis: z_{j+1}.
+        let (g, dp, inv_d) = st.zstep_coeffs(j);
+        let mut znew = zring.take(j + 1);
+        blas::fused_zstep(
+            &az,
+            &pcl.inv_diag,
+            zring.get(j),
+            zring.get(j.saturating_sub(1)),
+            g,
+            dp,
+            inv_d,
+            &mut znew,
+        );
+        zring.put(j + 1, znew);
+        // (4) Post the banded dot block for column j+1 — completed at
+        // iteration j+1+l, with l−1 younger siblings in flight behind it.
+        let (lo, m) = dot_band(j + 1, l);
+        let mut dots = vec![0.0; j + 1 - lo + 1];
+        {
+            let mut ys: Vec<&[f64]> = Vec::with_capacity(dots.len());
+            for k in lo..=m {
+                ys.push(vring.get(k));
+            }
+            for i in (m + 1)..=(j + 1) {
+                ys.push(zring.get(i));
+            }
+            blas::fused_wdots(&weight, zring.get(j + 1), &ys, &mut dots);
+        }
+        inflight.push_back(ctx.iallreduce(&dots));
+        j += 1;
+    }
+    // Reductions still in flight are abandoned: every rank breaks at the
+    // same iteration (bit-identical scalar trajectory), so nobody blocks
+    // on the orphaned sequence numbers.
+    finish_rank(
+        ctx,
+        blk,
+        t_all,
+        opts,
+        RankSolve {
+            x,
+            history,
+            norm,
+            outcome,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver;
+    use crate::sparse::gen;
+
+    #[test]
+    fn converges_across_rank_counts_and_depths() {
+        let a = gen::poisson2d_5pt(16, 16);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        for l in [1usize, 2, 3] {
+            for ranks in [1usize, 2, 3, 4] {
+                let opts = DistOpts {
+                    base: SolveOpts {
+                        threads: 1,
+                        pipeline_depth: l,
+                        ..Default::default()
+                    },
+                    ranks,
+                    ..Default::default()
+                };
+                let rep = solve(&a, &b, &pc, &opts);
+                assert!(rep.result.converged, "l={l} ranks={ranks}");
+                assert!(rep.true_residual < 1e-3, "l={l} ranks={ranks}");
+                assert_eq!(rep.method, format!("Dist-PIPECG-L{l}"));
+                assert_eq!(rep.per_rank.len(), ranks);
+            }
+        }
+    }
+
+    #[test]
+    fn rank1_is_bitwise_serial_deep_solver() {
+        let a = gen::banded_spd(300, 8.0, 3);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        for l in [2usize, 3] {
+            let base = SolveOpts {
+                threads: 1,
+                pipeline_depth: l,
+                ..Default::default()
+            };
+            let serial = solver::pipecg_l::solve(&a, &b, &pc, &base);
+            let rep = solve(
+                &a,
+                &b,
+                &pc,
+                &DistOpts {
+                    base,
+                    ranks: 1,
+                    ..Default::default()
+                },
+            );
+            assert!(serial.converged, "l={l}");
+            assert_eq!(rep.result.iterations, serial.iterations, "l={l}");
+            for (xd, xs) in rep.result.x.iter().zip(&serial.x) {
+                assert_eq!(xd.to_bits(), xs.to_bits(), "l={l}");
+            }
+            for (hd, hs) in rep.result.history.iter().zip(&serial.history) {
+                assert_eq!(hd.to_bits(), hs.to_bits(), "l={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn deep_max_iters_respected() {
+        let a = gen::poisson2d_5pt(20, 20);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let opts = DistOpts {
+            base: SolveOpts {
+                tol: 1e-30,
+                max_iters: 5,
+                pipeline_depth: 2,
+                ..Default::default()
+            },
+            ranks: 3,
+            ..Default::default()
+        };
+        let rep = solve(&a, &b, &pc, &opts);
+        assert!(!rep.result.converged);
+        assert_eq!(rep.result.stop, StopReason::MaxIterations);
+        assert_eq!(rep.result.iterations, 5);
+        assert_eq!(rep.result.history.len(), 6);
+    }
+}

@@ -40,7 +40,7 @@ COMMON FLAGS
   --method M        auto | h1 | h2 | h3 | pipecg-cpu | pcg-cpu-paralution
                     | pcg-cpu-petsc | pcg-gpu-paralution | pcg-gpu-petsc
                     | pipecg-rr | pipecg-gpu-petsc
-                    | dist-pipecg | dist-pcg         (default: auto)
+                    | dist-pipecg | dist-pipecg-l | dist-pcg   (default: auto)
   --backend B       native | pjrt               (default: pjrt if artifacts exist)
   --tol T           absolute tolerance on the preconditioned residual (1e-5)
   --max-iters N     iteration cap (10000)
@@ -48,6 +48,9 @@ COMMON FLAGS
                     (default 0 = all cores; HYPIPE_THREADS also honored)
   --ranks R         fabric ranks for the dist-* methods (default 0 = all
                     cores; HYPIPE_RANKS also honored)
+  --pipeline-depth L
+                    reduction pipeline depth l for dist-pipecg-l (default 1;
+                    depth l keeps l allreduces in flight)
   --reduce-latency-us L
                     injected allreduce completion latency in µs for the
                     dist-* methods (default 0; models an interconnect)
@@ -60,6 +63,8 @@ EXAMPLES
   hypipe solve --matrix table1:gyro --method h1 --backend native
   hypipe solve --matrix poisson2d:256x256 --method dist-pipecg --ranks 4 \\
                --reduce-latency-us 200
+  hypipe solve --matrix poisson2d:256x256 --method dist-pipecg-l \\
+               --pipeline-depth 3 --ranks 4 --reduce-latency-us 1000
   hypipe perfmodel --matrix banded:100000,50
 ";
 
@@ -190,9 +195,16 @@ fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<(
             "comm fraction   : {:.1}% (worst rank)",
             100.0 * rep.comm_fraction()
         );
+        let (exposed, hidden) = rep.comm_per_iter();
+        println!(
+            "reduce overlap  : {:.1}% hidden ({} exposed, {} hidden per iteration)",
+            100.0 * rep.overlap_efficiency(),
+            hypipe::util::human_time(exposed),
+            hypipe::util::human_time(hidden)
+        );
         let mut t = hypipe::util::table::Table::new(
             "per-rank comm/compute",
-            &["rank", "rows", "nnz", "compute", "halo", "reduce wait", "halo sent"],
+            &["rank", "rows", "nnz", "compute", "halo", "reduce wait", "reduce hidden", "halo sent"],
         );
         for m in &rep.per_rank {
             t.row(vec![
@@ -202,6 +214,7 @@ fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<(
                 hypipe::util::human_time(m.compute_s),
                 hypipe::util::human_time(m.halo_s),
                 hypipe::util::human_time(m.reduce_wait_s),
+                hypipe::util::human_time(m.reduce_hidden_s()),
                 format!("{} f64", m.halo_doubles_sent),
             ]);
         }
@@ -238,12 +251,12 @@ fn cmd_solve(args: &Args) -> Result<()> {
         .unwrap_or(true);
 
     let method = args.flag_or("method", "auto");
-    if matches!(method.as_str(), "dist-pipecg" | "dist-pcg") {
+    if matches!(method.as_str(), "dist-pipecg" | "dist-pipecg-l" | "dist-pcg") {
         let dopts = dist_opts(args)?;
-        let rep = if method == "dist-pipecg" {
-            hypipe::dist::pipecg::solve(&a, &b, &pc, &dopts)
-        } else {
-            hypipe::dist::pcg::solve(&a, &b, &pc, &dopts)
+        let rep = match method.as_str() {
+            "dist-pipecg" => hypipe::dist::pipecg::solve(&a, &b, &pc, &dopts),
+            "dist-pipecg-l" => hypipe::dist::pipecg_l::solve(&a, &b, &pc, &dopts),
+            _ => hypipe::dist::pcg::solve(&a, &b, &pc, &dopts),
         };
         return print_dist_report(args, &rep);
     }

@@ -158,6 +158,11 @@ pub struct RankMetrics {
     /// PIPECG this is only the *non-hidden* remainder of the reduction
     /// latency; the blocking PCG baseline pays it in full.
     pub reduce_wait_s: f64,
+    /// Total post→complete wall seconds the rank's allreduces spent in
+    /// flight (summed per reduction, so deep pipelines with several
+    /// reductions in flight can exceed wall time). `reduce_inflight_s −
+    /// reduce_wait_s` is the communication the solver actually hid.
+    pub reduce_inflight_s: f64,
     /// Allreduces started.
     pub reduces: u64,
     /// Halo f64 entries shipped by this rank over the whole solve.
@@ -170,6 +175,12 @@ impl RankMetrics {
         self.halo_s + self.reduce_wait_s
     }
 
+    /// Reduction seconds hidden behind local work (in flight but not
+    /// blocked on).
+    pub fn reduce_hidden_s(&self) -> f64 {
+        (self.reduce_inflight_s - self.reduce_wait_s).max(0.0)
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("rank", n(self.rank as f64)),
@@ -178,6 +189,8 @@ impl RankMetrics {
             ("compute_s", n(self.compute_s)),
             ("halo_s", n(self.halo_s)),
             ("reduce_wait_s", n(self.reduce_wait_s)),
+            ("reduce_inflight_s", n(self.reduce_inflight_s)),
+            ("reduce_hidden_s", n(self.reduce_hidden_s())),
             ("reduces", n(self.reduces as f64)),
             ("halo_doubles_sent", n(self.halo_doubles_sent as f64)),
         ])
@@ -220,6 +233,31 @@ impl DistReport {
         self.wall_seconds / self.result.iterations.max(1) as f64
     }
 
+    /// Overlap efficiency of the reductions, summed over ranks:
+    /// `1 − exposed/in-flight` — `1.0` means every in-flight second was
+    /// hidden behind local work, `0.0` means fully blocking. Reports with
+    /// no reduction time (single rank, zero latency) count as fully
+    /// overlapped.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let inflight: f64 = self.per_rank.iter().map(|r| r.reduce_inflight_s).sum();
+        let exposed: f64 = self.per_rank.iter().map(|r| r.reduce_wait_s).sum();
+        if inflight <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - exposed / inflight).clamp(0.0, 1.0)
+    }
+
+    /// Mean per-iteration `(exposed, hidden)` reduction seconds across
+    /// ranks — the per-iteration communication split the deep-pipeline
+    /// ablation plots.
+    pub fn comm_per_iter(&self) -> (f64, f64) {
+        let ranks = self.per_rank.len().max(1) as f64;
+        let iters = self.result.iterations.max(1) as f64;
+        let exposed: f64 = self.per_rank.iter().map(|r| r.reduce_wait_s).sum();
+        let hidden: f64 = self.per_rank.iter().map(|r| r.reduce_hidden_s()).sum();
+        (exposed / ranks / iters, hidden / ranks / iters)
+    }
+
     /// Charge the measured rank-0 comm/compute split to a [`Timeline`]
     /// (compute on `CpuExec`, fabric traffic on `Net`) so the standard
     /// report/trace tooling can render a distributed run. Aggregate spans,
@@ -249,6 +287,9 @@ impl DistReport {
             ("wall_per_iter_s", n(self.per_iter())),
             ("reduce_latency_s", n(self.reduce_latency_s)),
             ("comm_fraction", n(self.comm_fraction())),
+            ("overlap_efficiency", n(self.overlap_efficiency())),
+            ("exposed_comm_per_iter_s", n(self.comm_per_iter().0)),
+            ("hidden_comm_per_iter_s", n(self.comm_per_iter().1)),
             (
                 "per_rank",
                 arr(self.per_rank.iter().map(|r| r.to_json()).collect()),
@@ -330,6 +371,7 @@ mod tests {
                     compute_s: 1.4,
                     halo_s: 0.1,
                     reduce_wait_s: 0.5,
+                    reduce_inflight_s: 2.0,
                     reduces: 10,
                     halo_doubles_sent: 40,
                 },
@@ -338,12 +380,19 @@ mod tests {
                     compute_s: 1.9,
                     halo_s: 0.05,
                     reduce_wait_s: 0.05,
+                    reduce_inflight_s: 2.0,
                     ..Default::default()
                 },
             ],
         };
         assert!((rep.comm_fraction() - 0.3).abs() < 1e-12);
         assert!((rep.per_iter() - 0.2).abs() < 1e-12);
+        // exposed 0.55 of 4.0 in flight → 86.25 % overlapped.
+        assert!((rep.overlap_efficiency() - (1.0 - 0.55 / 4.0)).abs() < 1e-12);
+        let (exposed, hidden) = rep.comm_per_iter();
+        assert!((exposed - 0.55 / 2.0 / 10.0).abs() < 1e-12);
+        assert!((hidden - (1.5 + 1.95) / 2.0 / 10.0).abs() < 1e-12);
+        assert!((rep.per_rank[0].reduce_hidden_s() - 1.5).abs() < 1e-12);
         let tl = rep.to_timeline();
         assert!((tl.busy(Resource::Net) - 0.6).abs() < 1e-12);
         assert!((tl.busy(Resource::CpuExec) - 1.4).abs() < 1e-12);

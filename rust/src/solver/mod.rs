@@ -9,6 +9,7 @@ pub mod cg;
 pub mod chrono_gear;
 pub mod pcg;
 pub mod pipecg;
+pub mod pipecg_l;
 pub mod pipecg_rr;
 
 /// Stopping configuration shared by all solvers. Matches the paper's setup:
@@ -27,6 +28,13 @@ pub struct SolveOpts {
     /// `1` forces the serial kernels. Results are bit-reproducible for a
     /// fixed thread count (see `util::pool`).
     pub threads: usize,
+    /// Pipeline depth `l` for the deep-pipelined solvers
+    /// ([`pipecg_l`], `dist::pipecg_l`): how many global reductions are
+    /// kept in flight at once. `1` (the default) is the paper's PIPECG;
+    /// larger values hide proportionally larger reduction latencies at
+    /// the cost of extra local work and rounding (see the README's
+    /// "Deep pipelines" section). Ignored by the other solvers.
+    pub pipeline_depth: usize,
 }
 
 impl Default for SolveOpts {
@@ -36,6 +44,7 @@ impl Default for SolveOpts {
             max_iters: 10_000,
             record_history: true,
             threads: 0,
+            pipeline_depth: 1,
         }
     }
 }

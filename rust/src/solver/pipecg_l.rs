@@ -1,0 +1,499 @@
+//! Deep-pipelined PCG — p(l)-CG (Cornelis, Cools & Vanroose,
+//! arXiv 1801.04728).
+//!
+//! PIPECG (paper Alg. 2) hides **one** global reduction behind one
+//! iteration's PC + SpMV; once the reduction latency exceeds the local
+//! work per iteration, per-iteration time grows linearly with latency
+//! again. p(l)-CG generalises the overlap to depth `l`: the reduction
+//! posted at iteration `j` is only completed at iteration `j + l`, so `l`
+//! reductions are in flight at once and latencies up to ~`l×` the local
+//! work stay hidden.
+//!
+//! # Formulation
+//!
+//! Let `M = diag(A)` (the [`Jacobi`] preconditioner) and `B = M⁻¹A`,
+//! self-adjoint in the M-inner product `⟨x,y⟩_M = Σᵢ xᵢ dᵢ yᵢ`. The solver
+//! builds the M-orthonormal Lanczos basis
+//!
+//! ```text
+//! δⱼ v_{j+1} = B vⱼ − γⱼ vⱼ − δ_{j−1} v_{j−1}
+//! ```
+//!
+//! but runs the SpMV/PC recurrence on *auxiliary* vectors `zⱼ` that lead
+//! the basis by `l` steps (`zⱼ = Pₗ(B) v_{j−l}` with `Pₗ(t) = tˡ`, i.e.
+//! all auxiliary shifts `σₖ = 0`). The only global communication per
+//! iteration is one banded block of M-inner products of the newest `z`
+//! against at most `2l + 1` earlier basis/auxiliary vectors; its result is
+//! not needed until `l` iterations later, when the corresponding Gram
+//! column `g_{·,c}` is recovered by a tiny banded Cholesky, the basis
+//! vector `v_c` is reconstructed, and the Lanczos coefficients
+//! `γ_{c−1}, δ_{c−1}` follow from shifting the `z` recurrence back onto
+//! the `v`s. The solution is updated through the incremental `LDLᵀ`
+//! factorisation of the tridiagonal `T` (pivots `η`, multipliers `λ`).
+//!
+//! # Semantics vs PIPECG
+//!
+//! * `l = 1` dispatches to [`pipecg`] itself — p(1)-CG is *not*
+//!   operation-for-operation the Ghysels–Vanroose recurrence, so the only
+//!   way to honour the "`l = 1` is bit-identical to `solver::pipecg`"
+//!   anchor is structurally: same code path, same bits, any thread count.
+//! * For `l ≥ 2` the monitored residual norm is the M-norm
+//!   `‖M⁻¹r‖_M = √(rᵀM⁻¹r)` (the norm in which the Lanczos basis is
+//!   orthonormal) rather than PIPECG's Euclidean `‖M⁻¹r‖₂`; for Jacobi the
+//!   two differ by at most the square root of the diagonal spread, so
+//!   iteration counts are comparable but not identical.
+//! * Convergence is *detected* `l` iterations after it happens — the norm
+//!   for CG iteration `c` becomes available when its Gram column does —
+//!   so a deep solve runs up to `l` extra SpMVs past the crossing point.
+//! * The Gram diagonal is a square root of a difference of accumulated
+//!   dots; with `σₖ = 0` the cancellation grows with `l` and with the
+//!   conditioning of `B`, which is p(l)-CG's rounding caveat — raise `l`
+//!   only while reduction latency, not local work, dominates.
+//!
+//! [`Jacobi`]: crate::precond::Jacobi
+//! [`pipecg`]: crate::solver::pipecg
+
+use std::collections::VecDeque;
+
+use super::{is_bad, pipecg, SolveOpts, SolveResult, StopReason};
+use crate::blas;
+use crate::precond::{Jacobi, Preconditioner};
+use crate::sparse::Csr;
+
+/// Fixed-capacity ring of n-vectors indexed by *absolute* iteration
+/// number; slot reuse is safe because the recurrences only ever reach
+/// back a bounded number of steps.
+pub(crate) struct Ring {
+    cap: usize,
+    slots: Vec<Vec<f64>>,
+}
+
+impl Ring {
+    pub(crate) fn new(cap: usize, n: usize) -> Ring {
+        Ring {
+            cap,
+            slots: vec![vec![0.0; n]; cap],
+        }
+    }
+
+    pub(crate) fn get(&self, idx: usize) -> &[f64] {
+        &self.slots[idx % self.cap]
+    }
+
+    /// Move the vector for `idx` out (for in-place overwrite without
+    /// aliasing the immutable neighbours); pair with [`Ring::put`].
+    pub(crate) fn take(&mut self, idx: usize) -> Vec<f64> {
+        std::mem::take(&mut self.slots[idx % self.cap])
+    }
+
+    pub(crate) fn put(&mut self, idx: usize, v: Vec<f64>) {
+        self.slots[idx % self.cap] = v;
+    }
+}
+
+/// Band of the reduction block posted for column `c`: direct basis dots
+/// cover rows `lo..=m`, auxiliary–auxiliary dots cover `m+1..=c`.
+pub(crate) fn dot_band(c: usize, l: usize) -> (usize, usize) {
+    (c.saturating_sub(2 * l), c.saturating_sub(l))
+}
+
+/// Everything scalar in the deep pipeline: the banded Gram columns, the
+/// recovered tridiagonal, and the incremental `LDLᵀ` tail. Shared
+/// verbatim by the serial and distributed drivers so `ranks = 1`
+/// reproduces the serial solver bit for bit.
+pub(crate) struct DeepScalars {
+    l: usize,
+    beta: f64,
+    /// `gcols[j]` holds column `j` of `G` on its band `lo_j..=j`,
+    /// `lo_j = max(0, j − 2l)`.
+    gcols: Vec<Vec<f64>>,
+    gammas: Vec<f64>,
+    deltas: Vec<f64>,
+    etas: Vec<f64>,
+    qs: Vec<f64>,
+}
+
+/// Per-column coefficients the drivers need for the vector updates.
+pub(crate) struct ColumnCoeffs {
+    /// Band start of column `c` (row index of `vcoeffs[0]`).
+    pub glo: usize,
+    /// `g_{lo..c−1, c}` — the basis-recovery combination.
+    pub vcoeffs: Vec<f64>,
+    /// `1 / g_{c,c}` (unused when `gcc_zero`).
+    pub inv_gcc: f64,
+    /// The Gram diagonal vanished: a (possibly lucky) breakdown — skip
+    /// the basis recovery and let the driver decide via the norm.
+    pub gcc_zero: bool,
+    /// `λ_{c−1}` for `p = v − λ p`.
+    pub lambda: f64,
+    /// `ζ_{c−1} = q_{c−1}/η_{c−1}` for `x += ζ p`.
+    pub zeta: f64,
+    /// `‖r̃_c‖_M` — available only now, `l` iterations after the fact.
+    pub norm: f64,
+}
+
+pub(crate) enum ColumnStep {
+    Ok(ColumnCoeffs),
+    Breakdown,
+}
+
+impl DeepScalars {
+    pub(crate) fn new(l: usize, beta: f64) -> DeepScalars {
+        DeepScalars {
+            l,
+            beta,
+            gcols: vec![vec![1.0]],
+            gammas: Vec::new(),
+            deltas: Vec::new(),
+            etas: Vec::new(),
+            qs: Vec::new(),
+        }
+    }
+
+    /// `(γ, δ₋, 1/δ)` for the auxiliary step `z_{j+1}` at iteration `j`:
+    /// startup (`j < l`, coefficients not recovered yet) runs the bare
+    /// power recurrence `z_{j+1} = B zⱼ` (all shifts zero).
+    pub(crate) fn zstep_coeffs(&self, j: usize) -> (f64, f64, f64) {
+        if j < self.l {
+            (0.0, 0.0, 1.0)
+        } else {
+            let t = j - self.l;
+            let dp = if t == 0 { 0.0 } else { self.deltas[t - 1] };
+            (self.gammas[t], dp, 1.0 / self.deltas[t])
+        }
+    }
+
+    /// `δ_t`, for the driver's breakdown check after the tolerance test.
+    pub(crate) fn delta(&self, t: usize) -> f64 {
+        self.deltas[t]
+    }
+
+    /// Fold the completed reduction for column `c ≥ 1` into the Gram
+    /// band, recover `γ_{c−1}, δ_{c−1}`, and advance the `LDLᵀ` tail.
+    pub(crate) fn process_column(&mut self, c: usize, dots: &[f64]) -> ColumnStep {
+        let l = self.l;
+        let (lo, m) = dot_band(c, l);
+        debug_assert_eq!(dots.len(), c - lo + 1);
+        let nv = m - lo + 1;
+        let mut col = vec![0.0; c - lo + 1];
+        // Rows lo..=m are direct basis dots ⟨v_i, z_c⟩ = g_{i,c}.
+        col[..nv].copy_from_slice(&dots[..nv]);
+        // Rows m+1..c−1 come from auxiliary dots ⟨z_i, z_c⟩ = Σ_k g_{k,i} g_{k,c}:
+        // peel off the already-known part of the sum (banded forward solve).
+        for i in (m + 1)..c {
+            let lo_i = i.saturating_sub(2 * l);
+            let gi = &self.gcols[i];
+            let mut acc = dots[nv + (i - m - 1)];
+            for k in lo_i..i {
+                if k >= lo {
+                    acc -= gi[k - lo_i] * col[k - lo];
+                }
+            }
+            col[i - lo] = acc / gi[i - lo_i];
+        }
+        // Gram diagonal: the p(l)-CG square root.
+        let mut acc = *dots.last().unwrap();
+        for k in lo..c {
+            acc -= col[k - lo] * col[k - lo];
+        }
+        if !acc.is_finite() {
+            return ColumnStep::Breakdown;
+        }
+        let gcc_zero = acc <= 0.0;
+        let gcc = if gcc_zero { 0.0 } else { acc.sqrt() };
+        col[c - lo] = gcc;
+
+        // Lanczos coefficients for t = c−1, by shifting the z recurrence
+        // back onto the basis: B z_t = ca·z_{t+1} + cb·z_t (+ a z_{t−1}
+        // term that meets only structurally-zero Gram entries here).
+        let t = c - 1;
+        let (ca, cb) = if t < l {
+            (1.0, 0.0)
+        } else {
+            (self.deltas[t - l], self.gammas[t - l])
+        };
+        let lo_t = t.saturating_sub(2 * l);
+        let g_tt = self.gcols[t][t - lo_t];
+        let g_tc = col[t - lo];
+        let off = if t == 0 {
+            0.0
+        } else {
+            self.deltas[t - 1] * self.gcols[t][t - 1 - lo_t]
+        };
+        let gamma_t = (ca * g_tc + cb * g_tt - off) / g_tt;
+        let delta_t = ca * gcc / g_tt;
+        if is_bad(gamma_t) || !delta_t.is_finite() {
+            return ColumnStep::Breakdown;
+        }
+        self.gammas.push(gamma_t);
+        self.deltas.push(delta_t);
+
+        // Incremental LDLᵀ of T and the lagged CG tail.
+        let (lambda, eta, q) = if t == 0 {
+            (0.0, gamma_t, self.beta)
+        } else {
+            let lam = self.deltas[t - 1] / self.etas[t - 1];
+            (lam, gamma_t - lam * self.deltas[t - 1], -lam * self.qs[t - 1])
+        };
+        if !(eta.is_finite() && eta > 0.0) {
+            return ColumnStep::Breakdown;
+        }
+        self.etas.push(eta);
+        self.qs.push(q);
+        let zeta = q / eta;
+        let norm = delta_t * q.abs() / eta;
+        let vcoeffs = col[..c - lo].to_vec();
+        self.gcols.push(col);
+        ColumnStep::Ok(ColumnCoeffs {
+            glo: lo,
+            vcoeffs,
+            inv_gcc: if gcc_zero { 0.0 } else { 1.0 / gcc },
+            gcc_zero,
+            lambda,
+            zeta,
+            norm,
+        })
+    }
+}
+
+/// Depth-`l` pipelined CG. `opts.pipeline_depth = 1` dispatches to
+/// [`pipecg::solve`] (bit-identical for any thread count); `l ≥ 2` runs
+/// the p(l)-CG recurrences above with `l` reduction blocks in flight
+/// (queued locally here; posted as non-blocking allreduces in
+/// `dist::pipecg_l`).
+pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &SolveOpts) -> SolveResult {
+    let l = opts.pipeline_depth;
+    assert!(l >= 1, "pipeline_depth must be >= 1");
+    if l == 1 {
+        return pipecg::solve(a, b, pc, opts);
+    }
+    let pool = opts.pool();
+    let n = a.n;
+    assert_eq!(b.len(), n);
+
+    // Weight of the M-inner product: M = diag(A).
+    let weight: Vec<f64> = pc.inv_diag.iter().map(|d| 1.0 / d).collect();
+    // r̃₀ = M⁻¹ b (x₀ = 0); β = ‖r̃₀‖_M.
+    let u0 = pc.apply_alloc(b);
+    let mut beta2 = [0.0];
+    blas::par_fused_wdots(&pool, &weight, &u0, &[u0.as_slice()], &mut beta2);
+    let beta = beta2[0].sqrt();
+    let mut history = Vec::new();
+    if opts.record_history {
+        history.push(beta);
+    }
+    if beta < opts.tol || opts.max_iters == 0 || !beta.is_finite() {
+        let converged = beta < opts.tol;
+        let stop = if converged {
+            StopReason::Converged
+        } else if beta.is_finite() {
+            StopReason::MaxIterations
+        } else {
+            StopReason::Breakdown
+        };
+        return SolveResult {
+            x: vec![0.0; n],
+            iterations: 0,
+            final_norm: beta,
+            converged,
+            stop,
+            history,
+        };
+    }
+    let mut v0 = u0;
+    blas::scale(1.0 / beta, &mut v0);
+
+    let mut vring = Ring::new(2 * l + 1, n);
+    let mut zring = Ring::new(l + 1, n);
+    vring.put(0, v0.clone());
+    zring.put(0, v0);
+    let mut p = vec![0.0; n];
+    let mut x = vec![0.0; n];
+    let mut az = vec![0.0; n];
+    let mut st = DeepScalars::new(l, beta);
+    let mut pending: VecDeque<Vec<f64>> = VecDeque::new();
+    let mut norm = beta;
+    let outcome;
+    let mut j = 0usize;
+    loop {
+        // (1) Complete the reduction posted l iterations ago → column c.
+        if j >= l {
+            let c = j + 1 - l;
+            let dots = pending.pop_front().expect("reduction queue underflow");
+            match st.process_column(c, &dots) {
+                ColumnStep::Breakdown => {
+                    outcome = (c - 1, false, StopReason::Breakdown);
+                    break;
+                }
+                ColumnStep::Ok(co) => {
+                    // x_c = x_{c−1} + ζ p_{c−1},  p_{c−1} = v_{c−1} − λ p_{c−2}.
+                    blas::par_fused_px_update(&pool, vring.get(c - 1), co.lambda, co.zeta, &mut p, &mut x);
+                    norm = co.norm;
+                    if opts.record_history {
+                        history.push(norm);
+                    }
+                    if norm < opts.tol {
+                        outcome = (c, true, StopReason::Converged);
+                        break;
+                    }
+                    if co.gcc_zero || is_bad(st.delta(c - 1)) {
+                        outcome = (c, false, StopReason::Breakdown);
+                        break;
+                    }
+                    let mut vc = vring.take(c);
+                    {
+                        let vs: Vec<&[f64]> = (co.glo..c).map(|k| vring.get(k)).collect();
+                        blas::par_fused_basis_recover(&pool, zring.get(c), &vs, &co.vcoeffs, co.inv_gcc, &mut vc);
+                    }
+                    vring.put(c, vc);
+                    if c == opts.max_iters {
+                        outcome = (c, false, StopReason::MaxIterations);
+                        break;
+                    }
+                }
+            }
+        }
+        // (2) Advance the auxiliary basis: z_{j+1}.
+        let (g, dp, inv_d) = st.zstep_coeffs(j);
+        a.par_spmv_into(&pool, zring.get(j), &mut az);
+        let mut znew = zring.take(j + 1);
+        blas::par_fused_zstep(
+            &pool,
+            &az,
+            &pc.inv_diag,
+            zring.get(j),
+            zring.get(j.saturating_sub(1)),
+            g,
+            dp,
+            inv_d,
+            &mut znew,
+        );
+        zring.put(j + 1, znew);
+        // (3) Post the reduction block for column j+1 (completed at j+1+l).
+        let (lo, m) = dot_band(j + 1, l);
+        let mut dots = vec![0.0; j + 1 - lo + 1];
+        {
+            let mut ys: Vec<&[f64]> = Vec::with_capacity(dots.len());
+            for k in lo..=m {
+                ys.push(vring.get(k));
+            }
+            for i in (m + 1)..=(j + 1) {
+                ys.push(zring.get(i));
+            }
+            blas::par_fused_wdots(&pool, &weight, zring.get(j + 1), &ys, &mut dots);
+        }
+        pending.push_back(dots);
+        j += 1;
+    }
+    let (iterations, converged, stop) = outcome;
+    SolveResult {
+        x,
+        iterations,
+        final_norm: norm,
+        converged,
+        stop,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn opts(l: usize, tol: f64) -> SolveOpts {
+        SolveOpts {
+            tol,
+            pipeline_depth: l,
+            threads: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn depth1_dispatches_to_pipecg_bitwise() {
+        let a = gen::poisson2d_5pt(24, 24);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let o = opts(1, 1e-5);
+        let r_ref = pipecg::solve(&a, &b, &pc, &o);
+        let r = solve(&a, &b, &pc, &o);
+        assert_eq!(r.iterations, r_ref.iterations);
+        assert_eq!(r.stop, r_ref.stop);
+        for (xa, xb) in r.x.iter().zip(&r_ref.x) {
+            assert_eq!(xa.to_bits(), xb.to_bits());
+        }
+        for (ha, hb) in r.history.iter().zip(&r_ref.history) {
+            assert_eq!(ha.to_bits(), hb.to_bits());
+        }
+    }
+
+    #[test]
+    fn deep_depths_converge_to_the_same_solution() {
+        let a = gen::poisson2d_5pt(24, 24);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let r_ref = pipecg::solve(&a, &b, &pc, &opts(1, 1e-8));
+        assert!(r_ref.converged);
+        for l in [2usize, 3] {
+            let r = solve(&a, &b, &pc, &opts(l, 1e-8));
+            assert!(r.converged, "l={l} did not converge");
+            let tr = r.true_residual(&a, &b);
+            assert!(tr < 1e-4, "l={l} true residual {tr}");
+            let dx = crate::util::max_abs_diff(&r.x, &r_ref.x);
+            assert!(dx < 1e-4, "l={l} solution drift {dx}");
+            // In exact arithmetic the iteration counts coincide; allow a
+            // little rounding delay from the σ = 0 auxiliary basis.
+            let di = (r.iterations as i64 - r_ref.iterations as i64).abs();
+            assert!(di <= 10, "l={l}: {} vs {}", r.iterations, r_ref.iterations);
+        }
+    }
+
+    #[test]
+    fn well_conditioned_system_supports_depth_four() {
+        let a = gen::banded_spd(400, 12.0, 5);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        for l in [2usize, 3, 4] {
+            let r = solve(&a, &b, &pc, &opts(l, 1e-8));
+            assert!(r.converged, "l={l}");
+            let tr = r.true_residual(&a, &b);
+            assert!(tr < 1e-5, "l={l} true residual {tr}");
+        }
+    }
+
+    #[test]
+    fn deep_solve_is_bit_reproducible_and_history_shaped() {
+        let a = gen::poisson2d_5pt(16, 16);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let o = opts(3, 1e-6);
+        let r1 = solve(&a, &b, &pc, &o);
+        let r2 = solve(&a, &b, &pc, &o);
+        assert!(r1.converged);
+        assert_eq!(r1.iterations, r2.iterations);
+        assert_eq!(r1.history.len(), r1.iterations + 1);
+        for (a1, a2) in r1.x.iter().zip(&r2.x) {
+            assert_eq!(a1.to_bits(), a2.to_bits());
+        }
+    }
+
+    #[test]
+    fn deep_max_iters_respected() {
+        let a = gen::poisson2d_5pt(30, 30);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let o = SolveOpts {
+            tol: 1e-30,
+            max_iters: 5,
+            pipeline_depth: 2,
+            threads: 1,
+            ..Default::default()
+        };
+        let r = solve(&a, &b, &pc, &o);
+        assert!(!r.converged);
+        assert_eq!(r.stop, StopReason::MaxIterations);
+        assert_eq!(r.iterations, 5);
+        assert_eq!(r.history.len(), 6);
+    }
+}

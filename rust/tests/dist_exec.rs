@@ -188,6 +188,109 @@ fn injected_latency_changes_timing_not_bits() {
     }
 }
 
+fn deep_opts(l: usize) -> SolveOpts {
+    SolveOpts {
+        threads: 1,
+        pipeline_depth: l,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn dist_pipecg_l_rank1_is_bitwise_serial_deep_solver() {
+    let systems = [gen::poisson2d_5pt(24, 24), gen::banded_spd(400, 12.0, 5)];
+    for a in &systems {
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(a);
+        for l in [2usize, 3] {
+            let base = deep_opts(l);
+            let serial = solver::pipecg_l::solve(a, &b, &pc, &base);
+            assert!(serial.converged, "serial l={l}");
+            let rep = dist::pipecg_l::solve(
+                a,
+                &b,
+                &pc,
+                &DistOpts {
+                    base,
+                    ranks: 1,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(rep.result.iterations, serial.iterations, "l={l}");
+            for (xd, xs) in rep.result.x.iter().zip(&serial.x) {
+                assert_eq!(xd.to_bits(), xs.to_bits(), "l={l}");
+            }
+            for (hd, hs) in rep.result.history.iter().zip(&serial.history) {
+                assert_eq!(hd.to_bits(), hs.to_bits(), "l={l}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_pipecg_l_fixed_config_is_bit_reproducible() {
+    let a = gen::banded_spd(350, 10.0, 21);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    for ranks in [2usize, 3, 4] {
+        for l in [2usize, 3] {
+            let opts = DistOpts {
+                base: deep_opts(l),
+                ranks,
+                ..Default::default()
+            };
+            let r1 = dist::pipecg_l::solve(&a, &b, &pc, &opts);
+            let r2 = dist::pipecg_l::solve(&a, &b, &pc, &opts);
+            assert_eq!(r1.result.iterations, r2.result.iterations, "ranks={ranks} l={l}");
+            for (x1, x2) in r1.result.x.iter().zip(&r2.result.x) {
+                assert_eq!(x1.to_bits(), x2.to_bits(), "ranks={ranks} l={l}");
+            }
+            for (h1, h2) in r1.result.history.iter().zip(&r2.result.history) {
+                assert_eq!(h1.to_bits(), h2.to_bits(), "ranks={ranks} l={l}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_pipecg_l_latency_changes_timing_not_bits() {
+    let a = gen::poisson2d_5pt(16, 16);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let l = 3usize;
+    let fast = dist::pipecg_l::solve(
+        &a,
+        &b,
+        &pc,
+        &DistOpts {
+            base: deep_opts(l),
+            ranks: 2,
+            ..Default::default()
+        },
+    );
+    let slow = dist::pipecg_l::solve(
+        &a,
+        &b,
+        &pc,
+        &DistOpts {
+            base: SolveOpts {
+                max_iters: fast.result.iterations,
+                ..deep_opts(l)
+            },
+            ranks: 2,
+            reduce_latency: Duration::from_micros(200),
+        },
+    );
+    assert_eq!(slow.result.iterations, fast.result.iterations);
+    for (xs, xf) in slow.result.x.iter().zip(&fast.result.x) {
+        assert_eq!(xs.to_bits(), xf.to_bits());
+    }
+    // With l reductions in flight, most of the injected latency should be
+    // hidden behind local work, and the accounting should see it.
+    let inflight: f64 = slow.per_rank.iter().map(|m| m.reduce_inflight_s).sum();
+    assert!(inflight > 0.0, "in-flight time not accounted");
+}
+
 #[test]
 fn per_rank_metrics_account_for_the_whole_system() {
     let a = gen::poisson2d_5pt(30, 30);

@@ -230,6 +230,143 @@ fn pipecg_solver_parallel_matches_serial() {
     }
 }
 
+/// The deep-pipeline recurrence kernels: the elementwise ones must match
+/// serial bit for bit at every thread count; the banded dot block must be
+/// within rounding of serial and bit-deterministic per thread count.
+#[test]
+fn deep_pipeline_par_kernels_match_serial_across_threads() {
+    let mut rng = Rng::new(66);
+    for n in SIZES {
+        let az = randvec(&mut rng, n);
+        let inv_diag: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+        let z = randvec(&mut rng, n);
+        let z_prev = randvec(&mut rng, n);
+        let zc = randvec(&mut rng, n);
+        let vs_own: Vec<Vec<f64>> = (0..3).map(|_| randvec(&mut rng, n)).collect();
+        let vs: Vec<&[f64]> = vs_own.iter().map(|v| v.as_slice()).collect();
+        let coeffs = [0.7, -0.2, 1.3];
+        let w: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+        let p0 = randvec(&mut rng, n);
+        let x0 = randvec(&mut rng, n);
+
+        let mut zs = vec![0.0; n];
+        blas::fused_zstep(&az, &inv_diag, &z, &z_prev, 0.9, 0.4, 1.7, &mut zs);
+        let mut bs = vec![0.0; n];
+        blas::fused_basis_recover(&zc, &vs, &coeffs, 2.5, &mut bs);
+        let (mut ps, mut xs) = (p0.clone(), x0.clone());
+        blas::fused_px_update(&z, 0.3, 0.8, &mut ps, &mut xs);
+        let mut ds = vec![0.0; vs.len() + 1];
+        {
+            let mut ys = vs.clone();
+            ys.push(&zc);
+            blas::fused_wdots(&w, &zc, &ys, &mut ds);
+        }
+
+        for t in THREADS {
+            let pl = pool::with_threads(t);
+            let mut zp = vec![0.0; n];
+            blas::par_fused_zstep(&pl, &az, &inv_diag, &z, &z_prev, 0.9, 0.4, 1.7, &mut zp);
+            assert_eq!(zs, zp, "zstep n={n} t={t}");
+
+            let mut bp = vec![0.0; n];
+            blas::par_fused_basis_recover(&pl, &zc, &vs, &coeffs, 2.5, &mut bp);
+            assert_eq!(bs, bp, "basis_recover n={n} t={t}");
+
+            let (mut pp, mut xp) = (p0.clone(), x0.clone());
+            blas::par_fused_px_update(&pl, &z, 0.3, 0.8, &mut pp, &mut xp);
+            assert_eq!((&ps, &xs), (&pp, &xp), "px_update n={n} t={t}");
+
+            let mut dp = vec![0.0; vs.len() + 1];
+            let mut ys = vs.clone();
+            ys.push(&zc);
+            blas::par_fused_wdots(&pl, &w, &zc, &ys, &mut dp);
+            let scale = 1e-11 * (n as f64 + 1.0);
+            for (k, (a, b)) in ds.iter().zip(&dp).enumerate() {
+                assert!((a - b).abs() < scale, "wdots[{k}] n={n} t={t}: {a} vs {b}");
+            }
+            // Fixed thread count ⇒ identical bits run after run.
+            let mut dp2 = vec![0.0; vs.len() + 1];
+            blas::par_fused_wdots(&pl, &w, &zc, &ys, &mut dp2);
+            for (a, b) in dp.iter().zip(&dp2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "wdots determinism n={n} t={t}");
+            }
+        }
+    }
+}
+
+/// Depth 1 of the deep solver *is* PIPECG — bit for bit, at every thread
+/// count (the l = 1 configuration dispatches to the same code path).
+#[test]
+fn pipecg_l_depth1_is_bitwise_pipecg_any_thread_count() {
+    use hypipe::solver::pipecg_l;
+    let a = gen::poisson2d_5pt(48, 48);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    for t in THREADS {
+        let opts = SolveOpts {
+            threads: t,
+            pipeline_depth: 1,
+            ..Default::default()
+        };
+        let reference = pipecg::solve(&a, &b, &pc, &opts);
+        let deep = pipecg_l::solve(&a, &b, &pc, &opts);
+        assert_eq!(deep.iterations, reference.iterations, "t={t}");
+        assert!(deep
+            .x
+            .iter()
+            .zip(&reference.x)
+            .all(|(a, b)| a.to_bits() == b.to_bits()), "t={t}");
+        assert!(deep
+            .history
+            .iter()
+            .zip(&reference.history)
+            .all(|(a, b)| a.to_bits() == b.to_bits()), "t={t}");
+    }
+}
+
+/// Deep depths with pooled kernels: the solver must still converge to the
+/// same solution as PIPECG and be bit-reproducible per thread count.
+#[test]
+fn pipecg_l_deep_converges_with_parallel_kernels() {
+    use hypipe::solver::pipecg_l;
+    let a = gen::poisson2d_5pt(48, 48);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let reference = pipecg::solve(
+        &a,
+        &b,
+        &pc,
+        &SolveOpts {
+            threads: 1,
+            ..Default::default()
+        },
+    );
+    assert!(reference.converged);
+    for l in [2usize, 3] {
+        for t in [2usize, 4] {
+            let opts = SolveOpts {
+                threads: t,
+                pipeline_depth: l,
+                ..Default::default()
+            };
+            let deep = pipecg_l::solve(&a, &b, &pc, &opts);
+            assert!(deep.converged, "l={l} t={t}");
+            assert!(deep.true_residual(&a, &b) < 1e-4, "l={l} t={t}");
+            assert!(
+                hypipe::util::max_abs_diff(&deep.x, &reference.x) < 1e-4,
+                "l={l} t={t} solution drift"
+            );
+            let again = pipecg_l::solve(&a, &b, &pc, &opts);
+            assert_eq!(deep.iterations, again.iterations, "l={l} t={t}");
+            assert!(deep
+                .x
+                .iter()
+                .zip(&again.x)
+                .all(|(a, b)| a.to_bits() == b.to_bits()), "l={l} t={t}");
+        }
+    }
+}
+
 /// The hybrid schedulers' CPU sides run pooled kernels; with threads > 1
 /// all three must still match the sequential reference.
 #[test]
