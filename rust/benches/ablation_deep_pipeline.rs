@@ -48,6 +48,7 @@ fn main() {
         record_history: false,
         threads: 1,
         pipeline_depth: l,
+        ..Default::default()
     };
     // methods[m] = (label, per-iter time per latency, overlap eff per latency)
     let labels: Vec<String> = std::iter::once("Dist-PCG".to_string())

@@ -57,6 +57,7 @@ fn main() {
                 record_history: false,
                 threads: 1,
                 pipeline_depth: 1,
+                ..Default::default()
             },
             ranks,
             reduce_latency: Duration::from_micros(latency_us),

@@ -120,6 +120,7 @@ fn main() {
             record_history: false,
             threads: t,
             pipeline_depth: 1,
+            ..Default::default()
         };
         let s = bench::time(
             &format!("pipecg solve 512^2 x{iters} iters (t={t})"),

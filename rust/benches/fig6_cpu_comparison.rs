@@ -21,6 +21,7 @@ use hypipe::device::native::NativeAccel;
 use hypipe::hybrid::{self, HybridConfig};
 use hypipe::precond::Jacobi;
 use hypipe::sparse::gen;
+use hypipe::util::json;
 use hypipe::util::table::Table;
 
 fn main() {
@@ -35,6 +36,7 @@ fn main() {
         &["matrix", "paper N", "iters", "Paralution-CPU", "PETSc-MPI", "Hybrid-1", "Hybrid-2", "Hybrid-3", "best"],
     );
     let mut hybrid_speedups: Vec<f64> = Vec::new();
+    let mut rows = Vec::new();
 
     for p in &suite {
         // --- bench-scale real run: convergence + iteration count.
@@ -86,6 +88,17 @@ fn main() {
             format!("{:.2}x", hybrids[2].1),
             best.0.trim_start_matches("Hybrid-PIPECG-").into(),
         ]);
+        rows.push(json::obj(vec![
+            ("matrix", json::s(p.name)),
+            ("paper_n", json::n(p.paper_n as f64)),
+            ("iters", json::n(iters as f64)),
+            ("paralution_cpu_speedup", json::n(sp("Paralution-PCG-OpenMP"))),
+            ("petsc_mpi_speedup", json::n(sp("PETSc-PCG-MPI"))),
+            ("hybrid1_speedup", json::n(hybrids[0].1)),
+            ("hybrid2_speedup", json::n(hybrids[1].1)),
+            ("hybrid3_speedup", json::n(hybrids[2].1)),
+            ("best_hybrid", json::s(best.0)),
+        ]));
     }
     println!("{}", table.render());
     let avg = hybrid_speedups.iter().sum::<f64>() / hybrid_speedups.len() as f64;
@@ -95,4 +108,14 @@ fn main() {
          (paper: ~3x avg, up to 8x over CPU libraries)"
     );
     println!("paper winners: bcsstk15,gyro -> H1 | boneS01,hood,offshore -> H2 | Serena,Queen -> H3");
+    bench::write_json(
+        "fig6_cpu_comparison",
+        &json::obj(vec![
+            ("bench", json::s("fig6_cpu_comparison")),
+            ("reference", json::s("PIPECG-OpenMP")),
+            ("avg_best_hybrid_speedup", json::n(avg)),
+            ("max_best_hybrid_speedup", json::n(max)),
+            ("rows", json::arr(rows)),
+        ]),
+    );
 }

@@ -15,6 +15,7 @@ use hypipe::device::native::NativeAccel;
 use hypipe::hybrid::HybridConfig;
 use hypipe::precond::Jacobi;
 use hypipe::sparse::gen;
+use hypipe::util::json;
 use hypipe::util::table::Table;
 
 fn main() {
@@ -29,6 +30,7 @@ fn main() {
         &["matrix", "paper N", "iters", "PETSc-PCG-GPU", "Paralution-GPU", "Hybrid-1", "Hybrid-2", "Hybrid-3", "best hybrid"],
     );
     let mut best_speedups = Vec::new();
+    let mut rows = Vec::new();
 
     for p in &suite {
         let a = p.build();
@@ -71,6 +73,17 @@ fn main() {
             format!("{:.2}x", hybrids[2]),
             format!("{:.2}x", best),
         ]);
+        rows.push(json::obj(vec![
+            ("matrix", json::s(p.name)),
+            ("paper_n", json::n(p.paper_n as f64)),
+            ("iters", json::n(iters as f64)),
+            ("petsc_pcg_gpu_speedup", json::n(sp("PETSc-PCG-GPU"))),
+            ("paralution_gpu_speedup", json::n(sp("Paralution-PCG-GPU"))),
+            ("hybrid1_speedup", json::n(hybrids[0])),
+            ("hybrid2_speedup", json::n(hybrids[1])),
+            ("hybrid3_speedup", json::n(hybrids[2])),
+            ("best_hybrid_speedup", json::n(best)),
+        ]));
     }
     println!("{}", table.render());
     let avg = best_speedups.iter().sum::<f64>() / best_speedups.len() as f64;
@@ -94,5 +107,16 @@ fn main() {
     println!(
         "best-hybrid vs PETSc-PIPECG-GPU: avg {avg:.2}x | vs Paralution-PCG-GPU: avg {avg_vs_para:.2}x, max {max_vs_para:.2}x \
          (paper: avg 1.45x, up to 5x over GPU libraries)"
+    );
+    bench::write_json(
+        "fig7_gpu_comparison",
+        &json::obj(vec![
+            ("bench", json::s("fig7_gpu_comparison")),
+            ("reference", json::s("PETSc-PIPECG-GPU")),
+            ("avg_best_hybrid_speedup", json::n(avg)),
+            ("avg_vs_paralution_gpu", json::n(avg_vs_para)),
+            ("max_vs_paralution_gpu", json::n(max_vs_para)),
+            ("rows", json::arr(rows)),
+        ]),
     );
 }

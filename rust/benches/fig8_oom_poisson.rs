@@ -18,6 +18,7 @@ use hypipe::hybrid::{self, HybridConfig};
 use hypipe::perfmodel;
 use hypipe::precond::Jacobi;
 use hypipe::sparse::gen;
+use hypipe::util::json;
 use hypipe::util::table::Table;
 
 fn main() {
@@ -34,6 +35,7 @@ fn main() {
         "speedup wrt PIPECG-OpenMP (paper expects ~2-2.5x for Hybrid-3)",
         &["matrix", "paper N", "fits?", "N_pf", "iters", "Paralution-CPU", "PETSc-MPI", "Hybrid-3"],
     );
+    let mut rows = Vec::new();
 
     for p in &suite {
         let a = p.build();
@@ -76,7 +78,29 @@ fn main() {
             format!("{:.2}x", reference / total("PETSc-PCG-MPI")),
             format!("{:.2}x", reference / total("Hybrid-PIPECG-3")),
         ]);
+        rows.push(json::obj(vec![
+            ("matrix", json::s(p.name)),
+            ("paper_n", json::n(p.paper_n as f64)),
+            ("fits", json::Json::Bool(false)),
+            ("n_pf", json::n(n_pf as f64)),
+            ("iters", json::n(iters as f64)),
+            (
+                "paralution_cpu_speedup",
+                json::n(reference / total("Paralution-PCG-OpenMP")),
+            ),
+            ("petsc_mpi_speedup", json::n(reference / total("PETSc-PCG-MPI"))),
+            ("hybrid3_speedup", json::n(reference / total("Hybrid-PIPECG-3"))),
+        ]));
     }
     println!("{}", table.render());
     println!("paper Fig. 8: Hybrid-3 gives 2.25x (4.5M), 2.45x (5M), 2.5x (6M) over the CPU methods");
+    bench::write_json(
+        "fig8_oom_poisson",
+        &json::obj(vec![
+            ("bench", json::s("fig8_oom_poisson")),
+            ("reference", json::s("PIPECG-OpenMP")),
+            ("capacity_bytes", json::n(capacity as f64)),
+            ("rows", json::arr(rows)),
+        ]),
+    );
 }

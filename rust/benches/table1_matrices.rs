@@ -7,6 +7,7 @@
 
 use hypipe::bench;
 use hypipe::sparse::{gen, MatrixStats};
+use hypipe::util::json;
 use hypipe::util::table::Table;
 
 fn main() {
@@ -19,6 +20,7 @@ fn main() {
         "",
         &["matrix", "paper N", "paper nnz", "paper nnz/N", "bench N", "bench nnz", "bench nnz/N", "gen time"],
     );
+    let mut rows = Vec::new();
     for p in &suite {
         let stats_holder: std::cell::RefCell<Option<MatrixStats>> = std::cell::RefCell::new(None);
         let s = bench::time(p.name, 0, 1, || {
@@ -39,7 +41,24 @@ fn main() {
             format!("{:.2}", stats.nnz_per_row),
             hypipe::util::human_time(s.mean),
         ]);
+        rows.push(json::obj(vec![
+            ("matrix", json::s(p.name)),
+            ("paper_n", json::n(p.paper_n as f64)),
+            ("paper_nnz", json::n(p.paper_nnz as f64)),
+            ("paper_nnz_per_row", json::n(p.paper_nnz_per_row())),
+            ("bench_n", json::n(stats.n as f64)),
+            ("bench_nnz", json::n(stats.nnz as f64)),
+            ("bench_nnz_per_row", json::n(stats.nnz_per_row)),
+            ("gen_time_s", json::n(s.mean)),
+        ]));
     }
     println!("{}", t.render());
     println!("paper Table I nnz/N: 29.84 58.81 52.78 48.82 16.33 46.38 79.45");
+    bench::write_json(
+        "table1_matrices",
+        &json::obj(vec![
+            ("bench", json::s("table1_matrices")),
+            ("rows", json::arr(rows)),
+        ]),
+    );
 }

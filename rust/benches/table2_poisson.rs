@@ -6,6 +6,7 @@
 
 use hypipe::bench;
 use hypipe::sparse::{gen, MatrixStats};
+use hypipe::util::json;
 use hypipe::util::table::Table;
 
 fn main() {
@@ -18,6 +19,7 @@ fn main() {
         "",
         &["matrix", "paper N", "paper nnz", "paper nnz/N", "bench grid", "bench N", "bench nnz/N", "gen time"],
     );
+    let mut rows = Vec::new();
     for p in &suite {
         let holder = std::cell::RefCell::new(None);
         let s = bench::time(p.name, 0, 1, || {
@@ -38,7 +40,24 @@ fn main() {
             format!("{:.2}", stats.nnz_per_row),
             hypipe::util::human_time(s.mean),
         ]);
+        rows.push(json::obj(vec![
+            ("matrix", json::s(p.name)),
+            ("paper_n", json::n(p.paper_n as f64)),
+            ("paper_nnz", json::n(p.paper_nnz as f64)),
+            ("paper_nnz_per_row", json::n(p.paper_nnz_per_row())),
+            ("bench_grid", json::s(&format!("{m}^3"))),
+            ("bench_n", json::n(stats.n as f64)),
+            ("bench_nnz_per_row", json::n(stats.nnz_per_row)),
+            ("gen_time_s", json::n(s.mean)),
+        ]));
     }
     println!("{}", t.render());
     println!("paper Table II nnz/N: 122.29 122.37 120.55 122.58 (bench grids are boundary-heavier)");
+    bench::write_json(
+        "table2_poisson",
+        &json::obj(vec![
+            ("bench", json::s("table2_poisson")),
+            ("rows", json::arr(rows)),
+        ]),
+    );
 }

@@ -208,6 +208,7 @@ pub fn run_gpu(
                 converged: stop == StopReason::Converged,
                 stop,
                 history,
+                telemetry: None,
             }
         }
         _ => {
@@ -258,6 +259,7 @@ pub fn run_gpu(
                 converged: stop == StopReason::Converged,
                 stop,
                 history,
+                telemetry: None,
             }
         }
     };

@@ -73,7 +73,8 @@ impl Args {
 }
 
 /// Solver options from the common flags (`--tol`, `--max-iters`,
-/// `--threads`, `--pipeline-depth`), shared by the binary and the benches.
+/// `--threads`, `--pipeline-depth`, `--telemetry-every`,
+/// `--progress-every`), shared by the binary and the benches.
 pub fn solve_opts(args: &Args) -> Result<SolveOpts> {
     let max_iters = args.flag_parse("max-iters", 10_000)?;
     let pipeline_depth: usize = args.flag_parse("pipeline-depth", 1)?;
@@ -95,6 +96,8 @@ pub fn solve_opts(args: &Args) -> Result<SolveOpts> {
         record_history: true,
         threads: args.flag_parse("threads", 0usize)?,
         pipeline_depth,
+        telemetry_every: args.flag_parse("telemetry-every", 0usize)?,
+        progress_every: args.flag_parse("progress-every", 0usize)?,
     })
 }
 

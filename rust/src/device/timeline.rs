@@ -71,6 +71,9 @@ pub struct TraceEvent {
     pub label: String,
     pub start: f64,
     pub end: f64,
+    /// Chrome-trace lane. [`Timeline::run`] uses one lane per resource;
+    /// [`Timeline::charge_at`] callers pick their own (e.g. one per rank).
+    pub tid: u32,
 }
 
 /// Handle to a scheduled task's completion time (virtual seconds).
@@ -116,6 +119,41 @@ impl Timeline {
                 label: label.to_string(),
                 start,
                 end,
+                tid: res.idx() as u32 + 1,
+            });
+        }
+        end
+    }
+
+    /// Charge `duration` seconds of `label` to `res` at an explicit
+    /// `start`, on chrome lane `tid`, bypassing the resource's serial
+    /// queue. For measured intervals that genuinely overlapped — e.g. the
+    /// per-rank comm/compute splits of a distributed run, where every
+    /// rank's time advanced concurrently — so `busy(res)` sums over ranks
+    /// while the events still render as parallel lanes.
+    pub fn charge_at(
+        &mut self,
+        res: Resource,
+        label: &str,
+        start: f64,
+        duration: f64,
+        tid: u32,
+    ) -> Finish {
+        assert!(duration >= 0.0, "negative duration for {label}");
+        assert!(start >= 0.0, "negative start for {label}");
+        let end = start + duration;
+        let i = res.idx();
+        if end > self.free_at[i] {
+            self.free_at[i] = end;
+        }
+        self.busy[i] += duration;
+        if self.record {
+            self.events.push(TraceEvent {
+                resource: res,
+                label: label.to_string(),
+                start,
+                end,
+                tid,
             });
         }
         end
@@ -161,7 +199,7 @@ impl Timeline {
                     ("ts", n(e.start * 1e6)),
                     ("dur", n((e.end - e.start) * 1e6)),
                     ("pid", n(1.0)),
-                    ("tid", n(e.resource.idx() as f64 + 1.0)),
+                    ("tid", n(e.tid as f64)),
                     ("cat", s(e.resource.name())),
                 ])
             })
@@ -233,6 +271,19 @@ mod tests {
                 assert!(tl.makespan() + 1e-12 >= tl.busy(r));
             }
         });
+    }
+
+    #[test]
+    fn charge_at_sums_busy_across_overlapping_lanes() {
+        let mut tl = Timeline::default();
+        // Two ranks' worth of Net time, both starting at t = 0: busy sums,
+        // makespan is the later end, and each keeps its own chrome lane.
+        tl.charge_at(Resource::Net, "rank 0 net", 0.0, 2.0, 1);
+        tl.charge_at(Resource::Net, "rank 1 net", 0.0, 3.0, 2);
+        assert_eq!(tl.busy(Resource::Net), 5.0);
+        assert_eq!(tl.makespan(), 3.0);
+        let tids: Vec<u32> = tl.events().iter().map(|e| e.tid).collect();
+        assert_eq!(tids, vec![1, 2]);
     }
 
     #[test]

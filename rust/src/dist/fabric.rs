@@ -40,6 +40,7 @@ use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use crate::metrics::RankMetrics;
+use crate::trace::{self, Cat, LaneKind};
 
 /// Fabric-wide configuration.
 #[derive(Debug, Clone, Default)]
@@ -110,6 +111,7 @@ impl RankCtx {
 
     /// Block until every rank has reached the barrier.
     pub fn barrier(&self) {
+        let _span = trace::span("barrier", Cat::Net);
         self.barrier.wait();
     }
 
@@ -118,6 +120,7 @@ impl RankCtx {
     pub fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
         assert!(to != self.rank, "rank {to}: send to self");
         assert!(to < self.ranks, "send: rank {to} out of range");
+        trace::mark("send", Cat::Net, tag);
         self.tx[to]
             .send(Packet::P2p {
                 from: self.rank,
@@ -131,6 +134,7 @@ impl RankCtx {
     /// until it arrives. Messages from other (from, tag) pairs that arrive
     /// meanwhile are buffered.
     pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f64> {
+        let _span = trace::span_arg("recv", Cat::Net, tag);
         if let Some(pos) = self
             .pend_p2p
             .iter()
@@ -177,6 +181,7 @@ impl RankCtx {
             }
         }
         self.stats.reduces += 1;
+        trace::mark("allreduce:post", Cat::Net, seq);
         Allreduce {
             seq,
             local: vals.to_vec(),
@@ -225,8 +230,14 @@ impl RankCtx {
                 std::thread::sleep(ready - now);
             }
         }
-        self.stats.reduce_wait_s += t0.elapsed().as_secs_f64();
-        self.stats.reduce_inflight_s += h.posted.elapsed().as_secs_f64();
+        // One clock read feeds both the metrics and the trace spans, so the
+        // rendered `allreduce:wait` span length equals the time charged to
+        // `stats.reduce_wait_s` exactly.
+        let end = Instant::now();
+        self.stats.reduce_wait_s += end.duration_since(t0).as_secs_f64();
+        self.stats.reduce_inflight_s += end.duration_since(h.posted).as_secs_f64();
+        trace::record(LaneKind::Main, "allreduce:wait", Cat::Net, t0, end, h.seq);
+        trace::record(LaneKind::Fabric, "allreduce:inflight", Cat::Net, h.posted, end, h.seq);
         let slot = self.pend_reduce.remove(&h.seq);
         let mut out = vec![0.0; h.local.len()];
         for p in 0..self.ranks {
@@ -331,6 +342,7 @@ where
                 let barrier = barrier.clone();
                 let cfg = cfg.clone();
                 s.spawn(move || {
+                    trace::label_thread(rank as u32 + 1, &format!("rank {rank}"));
                     let mut ctx = RankCtx {
                         rank,
                         ranks,

@@ -93,6 +93,9 @@ pub(crate) struct RankOut {
     pub stop: StopReason,
     pub history: Vec<f64>,
     pub metrics: crate::metrics::RankMetrics,
+    /// Per-iteration telemetry (identical on every rank — the samples are
+    /// reduced scalars); rank 0's copy is attached to the report.
+    pub telemetry: Option<crate::trace::IterTelemetry>,
 }
 
 /// End state of one rank's iteration loop, as handed to [`finish_rank`].
@@ -103,6 +106,8 @@ pub(crate) struct RankSolve {
     /// `Some((iterations, converged, stop))` if the loop broke early
     /// (convergence or breakdown); `None` if it ran to `max_iters`.
     pub outcome: Option<(usize, bool, StopReason)>,
+    /// The rank's drained health probe ([`crate::trace::Probe::into_telemetry`]).
+    pub telemetry: Option<crate::trace::IterTelemetry>,
 }
 
 /// Shared rank epilogue: resolve the ran-to-max-iters case, finalize the
@@ -137,7 +142,32 @@ pub(crate) fn finish_rank(
         stop,
         history: s.history,
         metrics,
+        telemetry: s.telemetry,
     }
+}
+
+/// Distributed true residual ‖b − A x‖₂ of the current iterate: refresh
+/// the ghost buffer, apply the local panel, reduce the per-rank partial
+/// sums of squares. **Collective** — every rank must call it at the same
+/// iteration; the health probes sample on an iteration-indexed cadence
+/// ([`crate::trace::Probe::wants_true`]), which guarantees exactly that.
+pub(crate) fn dist_true_residual(
+    ctx: &mut RankCtx,
+    blk: &RankBlock,
+    b: &[f64],
+    x: &[f64],
+    xbuf: &mut [f64],
+) -> f64 {
+    xbuf[blk.r0..blk.r1].copy_from_slice(x);
+    blk.exchange(ctx, xbuf);
+    let mut ax = vec![0.0; blk.nloc()];
+    blk.spmv(xbuf, &mut ax);
+    let mut acc = 0.0;
+    for (i, axi) in ax.iter().enumerate() {
+        let d = b[blk.r0 + i] - axi;
+        acc += d * d;
+    }
+    ctx.allreduce(&[acc])[0].sqrt()
 }
 
 /// Shared driver: decompose, spin up the fabric, run `rank_fn` on every
@@ -191,12 +221,20 @@ pub(crate) fn assemble(
     let mut head = None;
     for o in outs {
         if head.is_none() {
-            head = Some((o.iterations, o.final_norm, o.converged, o.stop, o.history));
+            head = Some((
+                o.iterations,
+                o.final_norm,
+                o.converged,
+                o.stop,
+                o.history,
+                o.telemetry,
+            ));
         }
         x.extend_from_slice(&o.x);
         per_rank.push(o.metrics);
     }
-    let (iterations, final_norm, converged, stop, history) = head.expect("at least one rank");
+    let (iterations, final_norm, converged, stop, history, telemetry) =
+        head.expect("at least one rank");
     let result = crate::solver::SolveResult {
         x,
         iterations,
@@ -204,6 +242,7 @@ pub(crate) fn assemble(
         converged,
         stop,
         history,
+        telemetry,
     };
     let true_residual = result.true_residual(a, b);
     crate::metrics::DistReport {

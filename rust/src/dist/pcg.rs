@@ -15,10 +15,11 @@ use crate::blas;
 use crate::precond::{Jacobi, Preconditioner};
 use crate::solver::{is_bad, SolveOpts, StopReason};
 use crate::sparse::Csr;
+use crate::trace::{self, Cat, Health, Probe};
 
 use super::fabric::RankCtx;
 use super::part::RankBlock;
-use super::{drive, finish_rank, DistOpts, RankOut, RankSolve};
+use super::{dist_true_residual, drive, finish_rank, DistOpts, RankOut, RankSolve};
 
 /// Solve `A x = b` with distributed blocking PCG from `x₀ = 0` over
 /// `opts.ranks` fabric ranks. Bit-identical to the serial `solver::pcg`
@@ -62,11 +63,18 @@ fn solve_rank(
     }
 
     let mut outcome = None;
+    let mut probe = Probe::new(
+        "dist-pcg",
+        opts.telemetry_every,
+        opts.progress_every,
+        ctx.rank() != 0,
+    );
     for it in 0..opts.max_iters {
         if norm < opts.tol {
             outcome = Some((it, true, StopReason::Converged));
             break;
         }
+        let _iter = trace::span_arg("iter", Cat::Solver, it as u64);
         // lines 4–8: β ; line 9: p = u + β p
         let beta = if it > 0 { gamma / gamma_prev } else { 0.0 };
         blas::xpay(&u, beta, &mut p);
@@ -94,6 +102,20 @@ fn solve_rank(
         if opts.record_history {
             history.push(norm);
         }
+        // Health probe: collective true-residual sample at the cadence
+        // (identical on every rank), divergence decision symmetric.
+        let sampled = if probe.wants_true(it + 1) {
+            Some(dist_true_residual(ctx, blk, b, &x, &mut xbuf))
+        } else {
+            None
+        };
+        if let Health::Diverged(why) = probe.observe(it + 1, norm, sampled) {
+            if ctx.rank() == 0 {
+                eprintln!("[dist-pcg] stopping at iteration {}: {why}", it + 1);
+            }
+            outcome = Some((it + 1, false, StopReason::Diverged));
+            break;
+        }
     }
     finish_rank(
         ctx,
@@ -105,6 +127,7 @@ fn solve_rank(
             history,
             norm,
             outcome,
+            telemetry: probe.into_telemetry(),
         },
     )
 }

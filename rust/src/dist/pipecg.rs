@@ -22,10 +22,11 @@ use crate::blas::{self, PipecgVectors};
 use crate::precond::{Jacobi, Preconditioner};
 use crate::solver::{pipecg::scalars, SolveOpts, StopReason};
 use crate::sparse::Csr;
+use crate::trace::{self, Cat, Health, Probe};
 
 use super::fabric::RankCtx;
 use super::part::RankBlock;
-use super::{drive, finish_rank, DistOpts, RankOut, RankSolve};
+use super::{dist_true_residual, drive, finish_rank, DistOpts, RankOut, RankSolve};
 
 /// Solve `A x = b` with distributed PIPECG from `x₀ = 0` over
 /// `opts.ranks` fabric ranks. The assembled solution is bit-identical to
@@ -81,11 +82,18 @@ pub(crate) fn solve_rank(
     }
 
     let mut outcome = None;
+    let mut probe = Probe::new(
+        "dist-pipecg",
+        opts.telemetry_every,
+        opts.progress_every,
+        ctx.rank() != 0,
+    );
     for it in 0..opts.max_iters {
         if norm < opts.tol {
             outcome = Some((it, true, StopReason::Converged));
             break;
         }
+        let _iter = trace::span_arg("iter", Cat::Solver, it as u64);
         let Some((alpha, beta)) = scalars(it, gamma, delta, gamma_prev, alpha_prev) else {
             outcome = Some((it, false, StopReason::Breakdown));
             break;
@@ -125,6 +133,20 @@ pub(crate) fn solve_rank(
         if opts.record_history {
             history.push(norm);
         }
+        // Health probe: collective true-residual sample at the cadence
+        // (identical on every rank), divergence decision symmetric.
+        let sampled = if probe.wants_true(it + 1) {
+            Some(dist_true_residual(ctx, blk, b, &x, &mut xbuf))
+        } else {
+            None
+        };
+        if let Health::Diverged(why) = probe.observe(it + 1, norm, sampled) {
+            if ctx.rank() == 0 {
+                eprintln!("[dist-pipecg] stopping at iteration {}: {why}", it + 1);
+            }
+            outcome = Some((it + 1, false, StopReason::Diverged));
+            break;
+        }
     }
     finish_rank(
         ctx,
@@ -136,6 +158,7 @@ pub(crate) fn solve_rank(
             history,
             norm,
             outcome,
+            telemetry: probe.into_telemetry(),
         },
     )
 }

@@ -26,10 +26,11 @@ use crate::precond::{Jacobi, Preconditioner};
 use crate::solver::pipecg_l::{dot_band, ColumnStep, DeepScalars, Ring};
 use crate::solver::{is_bad, SolveOpts, StopReason};
 use crate::sparse::Csr;
+use crate::trace::{self, Cat, Health, Probe};
 
 use super::fabric::{Allreduce, RankCtx};
 use super::part::RankBlock;
-use super::{drive, finish_rank, DistOpts, RankOut, RankSolve};
+use super::{dist_true_residual, drive, finish_rank, DistOpts, RankOut, RankSolve};
 
 /// Solve `A x = b` with distributed p(l)-CG from `x₀ = 0`, keeping
 /// `opts.base.pipeline_depth` allreduces in flight. Depth 1 runs the
@@ -97,6 +98,7 @@ fn solve_rank_deep(
                 history,
                 norm: beta,
                 outcome: Some((0, converged, stop)),
+                telemetry: None,
             },
         );
     }
@@ -115,7 +117,14 @@ fn solve_rank_deep(
     let mut norm = beta;
     let outcome;
     let mut j = 0usize;
+    let mut probe = Probe::new(
+        "dist-pipecg-l",
+        opts.telemetry_every,
+        opts.progress_every,
+        ctx.rank() != 0,
+    );
     loop {
+        let _iter = trace::span_arg("iter", Cat::Solver, j as u64);
         // (1) Local SpMV of the already-known z_j — the bulk of the work
         // the in-flight reductions hide behind.
         xbuf[blk.r0..blk.r1].copy_from_slice(zring.get(j));
@@ -139,6 +148,20 @@ fn solve_rank_deep(
                     }
                     if norm < opts.tol {
                         outcome = Some((c, true, StopReason::Converged));
+                        break;
+                    }
+                    // Health probe: collective true-residual sample at the
+                    // cadence (identical on every rank), decision symmetric.
+                    let sampled = if probe.wants_true(c) {
+                        Some(dist_true_residual(ctx, blk, b, &x, &mut xbuf))
+                    } else {
+                        None
+                    };
+                    if let Health::Diverged(why) = probe.observe(c, norm, sampled) {
+                        if ctx.rank() == 0 {
+                            eprintln!("[dist-pipecg-l] stopping at iteration {c}: {why}");
+                        }
+                        outcome = Some((c, false, StopReason::Diverged));
                         break;
                     }
                     if co.gcc_zero || is_bad(st.delta(c - 1)) {
@@ -202,6 +225,7 @@ fn solve_rank_deep(
             history,
             norm,
             outcome,
+            telemetry: probe.into_telemetry(),
         },
     )
 }

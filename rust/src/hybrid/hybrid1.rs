@@ -140,6 +140,7 @@ pub fn solve(
         converged: stop == StopReason::Converged,
         stop,
         history,
+        telemetry: None,
     };
     let true_res = result.true_residual(a, b);
     Ok(RunReport::from_timeline(

@@ -84,6 +84,7 @@ pub mod precond;
 pub mod runtime;
 pub mod solver;
 pub mod sparse;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide error type (hand-rolled `Display`/`Error` impls: the build

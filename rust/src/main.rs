@@ -55,7 +55,16 @@ COMMON FLAGS
                     injected allreduce completion latency in µs for the
                     dist-* methods (default 0; models an interconnect)
   --gpu-mem BYTES   simulated device memory capacity (default 5 GiB)
-  --trace PATH      write a chrome-trace of the run
+  --trace PATH      write a chrome-trace of the *virtual* timeline
+  --trace-out PATH  write a chrome-trace of measured wall-clock spans
+                    (solver iterations, pool, halo, allreduce post→complete;
+                    HYPIPE_TRACE also honored)
+  --telemetry-every K
+                    sample the true residual every K iterations and attach
+                    per-iteration telemetry to the report (default 0 = off;
+                    enables the residual-gap health probe)
+  --progress-every K
+                    print a progress line every K iterations (default 0)
   --json            print the report as JSON
 
 EXAMPLES
@@ -116,6 +125,36 @@ fn gpu_params(args: &Args) -> Result<DeviceParams> {
     Ok(p)
 }
 
+/// Wall-clock tracer destination: `--trace-out PATH`, else `HYPIPE_TRACE`.
+fn trace_out(args: &Args) -> Option<String> {
+    args.flag("trace-out")
+        .map(str::to_string)
+        .or_else(|| std::env::var("HYPIPE_TRACE").ok().filter(|p| !p.is_empty()))
+}
+
+/// Merge the per-thread span rings into a chrome trace at `path` and switch
+/// the recorder back off. No-op when tracing was never requested.
+fn finish_trace(path: Option<&str>) -> Result<()> {
+    if let Some(p) = path {
+        hypipe::trace::write(std::path::Path::new(p))?;
+        hypipe::trace::disable();
+        eprintln!("wall-clock trace written to {p}");
+    }
+    Ok(())
+}
+
+fn print_telemetry(t: &hypipe::trace::IterTelemetry) {
+    println!(
+        "telemetry       : {} of {} iterations retained (true residual every {})",
+        t.samples.len(),
+        t.total,
+        t.every
+    );
+    if let Some(g) = t.max_gap() {
+        println!("residual gap    : max true/recurrence ratio {g:.3}");
+    }
+}
+
 fn backend_name(args: &Args) -> String {
     args.flag_or(
         "backend",
@@ -166,6 +205,9 @@ fn print_report(args: &Args, rep: &RunReport) -> Result<()> {
                     100.0 * b / rep.virtual_total.max(1e-30)
                 );
             }
+        }
+        if let Some(t) = &rep.result.telemetry {
+            print_telemetry(t);
         }
     }
     if let Some(path) = args.flag("trace") {
@@ -219,6 +261,9 @@ fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<(
             ]);
         }
         println!("{}", t.render());
+        if let Some(t) = &rep.result.telemetry {
+            print_telemetry(t);
+        }
     }
     if let Some(path) = args.flag("trace") {
         std::fs::write(path, rep.to_timeline().to_chrome_trace().to_pretty())?;
@@ -251,6 +296,11 @@ fn cmd_solve(args: &Args) -> Result<()> {
         .unwrap_or(true);
 
     let method = args.flag_or("method", "auto");
+    let tout = trace_out(args);
+    if tout.is_some() {
+        hypipe::trace::reset();
+        hypipe::trace::enable();
+    }
     if matches!(method.as_str(), "dist-pipecg" | "dist-pipecg-l" | "dist-pcg") {
         let dopts = dist_opts(args)?;
         let rep = match method.as_str() {
@@ -258,6 +308,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             "dist-pipecg-l" => hypipe::dist::pipecg_l::solve(&a, &b, &pc, &dopts),
             _ => hypipe::dist::pcg::solve(&a, &b, &pc, &dopts),
         };
+        finish_trace(tout.as_deref())?;
         return print_dist_report(args, &rep);
     }
     let rep = match method.as_str() {
@@ -365,6 +416,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             return Err(hypipe::Error::Config(format!("unknown method '{other}'")));
         }
     };
+    finish_trace(tout.as_deref())?;
     print_report(args, &rep)
 }
 

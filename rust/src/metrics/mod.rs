@@ -74,7 +74,7 @@ impl RunReport {
 
     /// JSON record (one row of EXPERIMENTS.md data).
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("method", s(&self.method)),
             ("backend", s(&self.backend)),
             ("n", n(self.n as f64)),
@@ -94,7 +94,11 @@ impl RunReport {
                     .map(|(r, b)| (r.name(), n(*b)))
                     .collect()),
             ),
-        ])
+        ];
+        if let Some(t) = &self.result.telemetry {
+            fields.push(("telemetry", t.to_json()));
+        }
+        obj(fields)
     }
 }
 
@@ -118,18 +122,26 @@ impl ReportSet {
     }
 
     /// Speedup of every report relative to the named reference method
-    /// (the paper's figures present speedup wrt a reference).
-    pub fn speedups_vs(&self, reference: &str) -> Vec<(String, f64)> {
+    /// (the paper's figures present speedup wrt a reference). Errors when
+    /// the reference is absent — a silent NaN here used to poison every
+    /// downstream average.
+    pub fn speedups_vs(&self, reference: &str) -> crate::Result<Vec<(String, f64)>> {
         let base = self
             .reports
             .iter()
             .find(|r| r.method == reference)
             .map(|r| r.virtual_total)
-            .unwrap_or(f64::NAN);
-        self.reports
+            .ok_or_else(|| {
+                crate::Error::Config(format!(
+                    "speedups_vs: reference method '{reference}' not in report set '{}'",
+                    self.title
+                ))
+            })?;
+        Ok(self
+            .reports
             .iter()
             .map(|r| (r.method.clone(), base / r.virtual_total))
-            .collect()
+            .collect())
     }
 
     pub fn to_json(&self) -> Json {
@@ -258,23 +270,47 @@ impl DistReport {
         (exposed / ranks / iters, hidden / ranks / iters)
     }
 
-    /// Charge the measured rank-0 comm/compute split to a [`Timeline`]
-    /// (compute on `CpuExec`, fabric traffic on `Net`) so the standard
-    /// report/trace tooling can render a distributed run. Aggregate spans,
-    /// not per-iteration events: overlap shows up as `Net` busy time
-    /// hidden under the `CpuExec` span.
+    /// Charge **every rank's** measured comm/compute split to a
+    /// [`Timeline`] (compute on `CpuExec`, fabric traffic on `Net`) so the
+    /// standard report/trace tooling can render a distributed run.
+    /// Aggregate spans, not per-iteration events. Each rank gets its own
+    /// pair of chrome lanes, all starting at `t = 0` — ranks genuinely run
+    /// concurrently — so `busy(Net)` / `busy(CpuExec)` sum over ranks
+    /// (this used to charge rank 0 only, silently dropping the other
+    /// ranks' communication from the rendered trace).
     pub fn to_timeline(&self) -> Timeline {
         let mut tl = Timeline::default();
-        if let Some(r0) = self.per_rank.first() {
-            tl.run(Resource::CpuExec, "dist local compute (rank 0)", r0.compute_s, &[]);
-            tl.run(Resource::Net, "halo exchange (rank 0)", r0.halo_s, &[]);
-            tl.run(Resource::Net, "reduction wait (rank 0)", r0.reduce_wait_s, &[]);
+        for m in &self.per_rank {
+            let compute_lane = 2 * m.rank as u32 + 1;
+            let net_lane = 2 * m.rank as u32 + 2;
+            let rank = m.rank;
+            tl.charge_at(
+                Resource::CpuExec,
+                &format!("dist local compute (rank {rank})"),
+                0.0,
+                m.compute_s,
+                compute_lane,
+            );
+            let halo_end = tl.charge_at(
+                Resource::Net,
+                &format!("halo exchange (rank {rank})"),
+                0.0,
+                m.halo_s,
+                net_lane,
+            );
+            tl.charge_at(
+                Resource::Net,
+                &format!("reduction wait (rank {rank})"),
+                halo_end,
+                m.reduce_wait_s,
+                net_lane,
+            );
         }
         tl
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("method", s(&self.method)),
             ("ranks", n(self.ranks as f64)),
             ("n", n(self.n as f64)),
@@ -294,7 +330,11 @@ impl DistReport {
                 "per_rank",
                 arr(self.per_rank.iter().map(|r| r.to_json()).collect()),
             ),
-        ])
+        ];
+        if let Some(t) = &self.result.telemetry {
+            fields.push(("telemetry", t.to_json()));
+        }
+        obj(fields)
     }
 }
 
@@ -321,6 +361,7 @@ mod tests {
             converged: true,
             stop: StopReason::Converged,
             history: vec![],
+            telemetry: None,
         }
     }
 
@@ -347,9 +388,22 @@ mod tests {
                 name, "native", 10, 10, dummy_result(), 0.0, tl, 0.0, 0.0, false,
             ));
         }
-        let sp = set.speedups_vs("slow");
+        let sp = set.speedups_vs("slow").unwrap();
         assert_eq!(sp[0].1, 1.0);
         assert_eq!(sp[1].1, 4.0);
+    }
+
+    #[test]
+    fn speedups_error_on_missing_reference() {
+        let mut set = ReportSet::new("demo");
+        let mut tl = Timeline::default();
+        tl.run(Resource::CpuExec, "w", 1.0, &[]);
+        set.push(RunReport::from_timeline(
+            "only", "native", 10, 10, dummy_result(), 0.0, tl, 0.0, 0.0, false,
+        ));
+        let err = set.speedups_vs("absent").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("absent"), "unhelpful error: {msg}");
     }
 
     #[test]
@@ -393,11 +447,48 @@ mod tests {
         assert!((exposed - 0.55 / 2.0 / 10.0).abs() < 1e-12);
         assert!((hidden - (1.5 + 1.95) / 2.0 / 10.0).abs() < 1e-12);
         assert!((rep.per_rank[0].reduce_hidden_s() - 1.5).abs() < 1e-12);
+        // Timeline charges every rank: Net = (0.1 + 0.5) + (0.05 + 0.05),
+        // CpuExec = 1.4 + 1.9 — not just rank 0's share.
         let tl = rep.to_timeline();
-        assert!((tl.busy(Resource::Net) - 0.6).abs() < 1e-12);
-        assert!((tl.busy(Resource::CpuExec) - 1.4).abs() < 1e-12);
+        assert!((tl.busy(Resource::Net) - 0.7).abs() < 1e-12);
+        assert!((tl.busy(Resource::CpuExec) - 3.3).abs() < 1e-12);
         let txt = rep.to_json().to_string();
         assert!(crate::util::json::parse(&txt).is_ok());
+    }
+
+    /// Regression for the rank-0-only timeline bug: `busy(Net)` must equal
+    /// the sum of every rank's halo + reduction-wait time, and each rank
+    /// must land on its own chrome lane.
+    #[test]
+    fn dist_timeline_charges_every_rank() {
+        let ranks: Vec<RankMetrics> = (0..3)
+            .map(|rank| RankMetrics {
+                rank,
+                compute_s: 1.0 + rank as f64,
+                halo_s: 0.1 * (rank + 1) as f64,
+                reduce_wait_s: 0.2,
+                ..Default::default()
+            })
+            .collect();
+        let expect_net: f64 = ranks.iter().map(|m| m.halo_s + m.reduce_wait_s).sum();
+        let expect_cpu: f64 = ranks.iter().map(|m| m.compute_s).sum();
+        let rep = DistReport {
+            method: "Dist-PIPECG".into(),
+            ranks: 3,
+            n: 10,
+            nnz: 10,
+            result: dummy_result(),
+            true_residual: 0.0,
+            wall_seconds: 3.0,
+            reduce_latency_s: 0.0,
+            per_rank: ranks,
+        };
+        let tl = rep.to_timeline();
+        assert!((tl.busy(Resource::Net) - expect_net).abs() < 1e-12);
+        assert!((tl.busy(Resource::CpuExec) - expect_cpu).abs() < 1e-12);
+        let lanes: std::collections::BTreeSet<u32> =
+            tl.events().iter().map(|e| e.tid).collect();
+        assert_eq!(lanes.len(), 6, "two lanes per rank");
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub fn solve(a: &Csr, b: &[f64], opts: &SolveOpts) -> SolveResult {
                 converged: true,
                 stop: StopReason::Converged,
                 history,
+                telemetry: None,
             };
         }
         a.par_spmv_into(&pool, &p, &mut ap);
@@ -43,6 +44,7 @@ pub fn solve(a: &Csr, b: &[f64], opts: &SolveOpts) -> SolveResult {
                 converged: false,
                 stop: StopReason::Breakdown,
                 history,
+                telemetry: None,
             };
         }
         let alpha = rr / pap;
@@ -68,6 +70,7 @@ pub fn solve(a: &Csr, b: &[f64], opts: &SolveOpts) -> SolveResult {
             StopReason::MaxIterations
         },
         history,
+        telemetry: None,
     }
 }
 

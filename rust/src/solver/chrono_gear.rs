@@ -47,6 +47,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
                 converged: true,
                 stop: StopReason::Converged,
                 history,
+                telemetry: None,
             };
         }
         let (alpha, beta);
@@ -61,6 +62,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
                     converged: false,
                     stop: StopReason::Breakdown,
                     history,
+                    telemetry: None,
                 };
             }
             alpha = gamma / denom;
@@ -74,6 +76,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
                     converged: false,
                     stop: StopReason::Breakdown,
                     history,
+                    telemetry: None,
                 };
             }
             alpha = gamma / delta;
@@ -117,6 +120,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
             StopReason::MaxIterations
         },
         history,
+        telemetry: None,
     }
 }
 

@@ -35,6 +35,17 @@ pub struct SolveOpts {
     /// the cost of extra local work and rounding (see the README's
     /// "Deep pipelines" section). Ignored by the other solvers.
     pub pipeline_depth: usize,
+    /// Sample the *true* residual ‖b − A·x‖₂ every this many iterations
+    /// and record per-iteration telemetry ([`crate::trace::IterTelemetry`]
+    /// on the result). `0` (the default) disables sampling — the solve
+    /// performs no extra SpMV and, on the distributed path, no extra
+    /// reduction. The samples feed the residual-gap health probe that
+    /// turns a decoupled recurrence into [`StopReason::Diverged`].
+    pub telemetry_every: usize,
+    /// Print a progress line to stderr every this many iterations
+    /// (`0` = silent, the default). Distributed solves print from rank 0
+    /// only.
+    pub progress_every: usize,
 }
 
 impl Default for SolveOpts {
@@ -45,6 +56,8 @@ impl Default for SolveOpts {
             record_history: true,
             threads: 0,
             pipeline_depth: 1,
+            telemetry_every: 0,
+            progress_every: 0,
         }
     }
 }
@@ -64,6 +77,11 @@ pub enum StopReason {
     /// Breakdown: a zero/NaN denominator in α or β (indicates a non-SPD
     /// system or severe rounding).
     Breakdown,
+    /// The numerical-health probe stopped the run: a NaN/Inf residual, or
+    /// the periodically sampled true residual stagnated far above the
+    /// recurrence estimate (rounding drift decoupled the recurrence —
+    /// the failure mode of pipelined CG, amplified by depth `l`).
+    Diverged,
 }
 
 /// Result of a linear solve.
@@ -76,19 +94,28 @@ pub struct SolveResult {
     pub stop: StopReason,
     /// Preconditioned residual norm per iteration (if recorded).
     pub history: Vec<f64>,
+    /// Per-iteration telemetry (wall time, residuals, sampled true
+    /// residuals); present when [`SolveOpts::telemetry_every`] > 0.
+    pub telemetry: Option<crate::trace::IterTelemetry>,
 }
 
 impl SolveResult {
     /// True residual `‖b − A x‖₂` (recomputed, not the recursive residual).
     pub fn true_residual(&self, a: &crate::sparse::Csr, b: &[f64]) -> f64 {
-        let ax = a.spmv(&self.x);
-        let mut acc = 0.0;
-        for i in 0..b.len() {
-            let d = b[i] - ax[i];
-            acc += d * d;
-        }
-        acc.sqrt()
+        true_residual_of(a, b, &self.x)
     }
+}
+
+/// True residual ‖b − A·x‖₂ of an arbitrary iterate (serial SpMV — the
+/// health probes call this at their sampling rate, not per iteration).
+pub(crate) fn true_residual_of(a: &crate::sparse::Csr, b: &[f64], x: &[f64]) -> f64 {
+    let ax = a.spmv(x);
+    let mut acc = 0.0;
+    for i in 0..b.len() {
+        let d = b[i] - ax[i];
+        acc += d * d;
+    }
+    acc.sqrt()
 }
 
 /// Shared helper: detect breakdown values.

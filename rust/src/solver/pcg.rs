@@ -5,6 +5,7 @@
 use crate::blas;
 use crate::precond::Preconditioner;
 use crate::sparse::Csr;
+use crate::trace::{self, Cat, Health, IterTelemetry, Probe};
 
 use super::{is_bad, SolveOpts, SolveResult, StopReason};
 
@@ -31,11 +32,13 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
     if opts.record_history {
         history.push(norm);
     }
+    let mut probe = Probe::new("pcg", opts.telemetry_every, opts.progress_every, false);
 
     for it in 0..opts.max_iters {
         if norm < opts.tol {
-            return done(x, it, norm, true, StopReason::Converged, history);
+            return done(x, it, norm, true, StopReason::Converged, history, probe);
         }
+        let _iter = trace::span_arg("iter", Cat::Solver, it as u64);
         // lines 4–8: β
         let beta = if it > 0 { gamma / gamma_prev } else { 0.0 };
         // line 9: p = u + β p
@@ -45,7 +48,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
         // line 11: δ = (s, p)
         let delta = blas::par_dot(&pool, &s, &p);
         if is_bad(delta) {
-            return done(x, it, norm, false, StopReason::Breakdown, history);
+            return done(x, it, norm, false, StopReason::Breakdown, history, probe);
         }
         // line 12: α = γ / δ
         let alpha = gamma / delta;
@@ -61,6 +64,15 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
         if opts.record_history {
             history.push(norm);
         }
+        let sampled = if probe.wants_true(it + 1) {
+            Some(super::true_residual_of(a, b, &x))
+        } else {
+            None
+        };
+        if let Health::Diverged(why) = probe.observe(it + 1, norm, sampled) {
+            eprintln!("[pcg] stopping at iteration {}: {why}", it + 1);
+            return done(x, it + 1, norm, false, StopReason::Diverged, history, probe);
+        }
     }
     let converged = norm < opts.tol;
     done(
@@ -74,9 +86,11 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], m: &M, opts: &SolveOpts) -> 
             StopReason::MaxIterations
         },
         history,
+        probe,
     )
 }
 
+#[allow(clippy::too_many_arguments)]
 fn done(
     x: Vec<f64>,
     iterations: usize,
@@ -84,7 +98,9 @@ fn done(
     converged: bool,
     stop: StopReason,
     history: Vec<f64>,
+    probe: Probe,
 ) -> SolveResult {
+    let telemetry: Option<IterTelemetry> = probe.into_telemetry();
     SolveResult {
         x,
         iterations,
@@ -92,6 +108,7 @@ fn done(
         converged,
         stop,
         history,
+        telemetry,
     }
 }
 

@@ -13,6 +13,7 @@
 use crate::blas::{self, PipecgVectors};
 use crate::precond::Preconditioner;
 use crate::sparse::Csr;
+use crate::trace::{self, Cat, Health, Probe};
 use crate::util::pool::{self, ThreadPool};
 
 use super::{is_bad, SolveOpts, SolveResult, StopReason};
@@ -174,6 +175,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &SolveOpts) ->
     if opts.record_history {
         history.push(st.norm);
     }
+    let mut probe = Probe::new("pipecg", opts.telemetry_every, opts.progress_every, false);
     for it in 0..opts.max_iters {
         if st.norm < opts.tol {
             return SolveResult {
@@ -183,8 +185,10 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &SolveOpts) ->
                 converged: true,
                 stop: StopReason::Converged,
                 history,
+                telemetry: probe.into_telemetry(),
             };
         }
+        let iter_span = trace::span_arg("iter", Cat::Solver, it as u64);
         if !step_on(&pool, a, pc, &mut st) {
             return SolveResult {
                 x: st.x,
@@ -193,10 +197,29 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &SolveOpts) ->
                 converged: false,
                 stop: StopReason::Breakdown,
                 history,
+                telemetry: probe.into_telemetry(),
             };
         }
+        drop(iter_span);
         if opts.record_history {
             history.push(st.norm);
+        }
+        let sampled = if probe.wants_true(it + 1) {
+            Some(super::true_residual_of(a, b, &st.x))
+        } else {
+            None
+        };
+        if let Health::Diverged(why) = probe.observe(it + 1, st.norm, sampled) {
+            eprintln!("[pipecg] stopping at iteration {}: {why}", it + 1);
+            return SolveResult {
+                x: st.x,
+                iterations: it + 1,
+                final_norm: st.norm,
+                converged: false,
+                stop: StopReason::Diverged,
+                history,
+                telemetry: probe.into_telemetry(),
+            };
         }
     }
     let converged = st.norm < opts.tol;
@@ -211,6 +234,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &SolveOpts) ->
             StopReason::MaxIterations
         },
         history,
+        telemetry: probe.into_telemetry(),
     }
 }
 

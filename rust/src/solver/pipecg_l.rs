@@ -59,6 +59,7 @@ use super::{is_bad, pipecg, SolveOpts, SolveResult, StopReason};
 use crate::blas;
 use crate::precond::{Jacobi, Preconditioner};
 use crate::sparse::Csr;
+use crate::trace::{self, Cat, Health, Probe};
 
 /// Fixed-capacity ring of n-vectors indexed by *absolute* iteration
 /// number; slot reuse is safe because the recurrences only ever reach
@@ -298,6 +299,7 @@ pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &SolveOpts) -> SolveResult {
             converged,
             stop,
             history,
+            telemetry: None,
         };
     }
     let mut v0 = u0;
@@ -313,9 +315,11 @@ pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &SolveOpts) -> SolveResult {
     let mut st = DeepScalars::new(l, beta);
     let mut pending: VecDeque<Vec<f64>> = VecDeque::new();
     let mut norm = beta;
+    let mut probe = Probe::new("pipecg-l", opts.telemetry_every, opts.progress_every, false);
     let outcome;
     let mut j = 0usize;
     loop {
+        let _iter = trace::span_arg("iter", Cat::Solver, j as u64);
         // (1) Complete the reduction posted l iterations ago → column c.
         if j >= l {
             let c = j + 1 - l;
@@ -334,6 +338,16 @@ pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &SolveOpts) -> SolveResult {
                     }
                     if norm < opts.tol {
                         outcome = (c, true, StopReason::Converged);
+                        break;
+                    }
+                    let sampled = if probe.wants_true(c) {
+                        Some(super::true_residual_of(a, b, &x))
+                    } else {
+                        None
+                    };
+                    if let Health::Diverged(why) = probe.observe(c, norm, sampled) {
+                        eprintln!("[pipecg-l] stopping at iteration {c}: {why}");
+                        outcome = (c, false, StopReason::Diverged);
                         break;
                     }
                     if co.gcc_zero || is_bad(st.delta(c - 1)) {
@@ -393,6 +407,7 @@ pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &SolveOpts) -> SolveResult {
         converged,
         stop,
         history,
+        telemetry: probe.into_telemetry(),
     }
 }
 

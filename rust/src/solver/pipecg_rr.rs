@@ -76,6 +76,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &RrOpts) -> So
                 converged: true,
                 stop: StopReason::Converged,
                 history,
+                telemetry: None,
             };
         }
         if !step_on(&pool, a, pc, &mut st) {
@@ -86,6 +87,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &RrOpts) -> So
                 converged: false,
                 stop: StopReason::Breakdown,
                 history,
+                telemetry: None,
             };
         }
         if opts.interval != 0 && st.iteration % opts.interval.max(1) == 0 {
@@ -112,6 +114,7 @@ pub fn solve<M: Preconditioner>(a: &Csr, b: &[f64], pc: &M, opts: &RrOpts) -> So
             StopReason::MaxIterations
         },
         history,
+        telemetry: None,
     }
 }
 

@@ -1,0 +1,151 @@
+//! Bounded single-writer span ring.
+//!
+//! Each trace lane owns one `Ring`. The owning thread is the only writer
+//! (`push`); readers (`snapshot`) run only once the writer is quiescent —
+//! after `dist::fabric::run` has joined its rank threads, or after a
+//! `ThreadPool::run` join for pool workers. That contract is what makes
+//! the single `AtomicUsize` head sufficient: the Release store on push
+//! pairs with the Acquire load on snapshot, and no slot is ever read
+//! while it may still be written.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Span category; becomes the chrome-trace `cat` field so Perfetto can
+/// filter solver vs pool vs network activity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cat {
+    /// Per-iteration solver spans.
+    Solver,
+    /// Worker-pool dispatch/drain spans.
+    Pool,
+    /// Fabric traffic: allreduce post/wait/in-flight, p2p send/recv.
+    Net,
+    /// Halo pack/exchange/unpack.
+    Halo,
+}
+
+impl Cat {
+    /// Chrome-trace category name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::Solver => "solver",
+            Cat::Pool => "pool",
+            Cat::Net => "net",
+            Cat::Halo => "halo",
+        }
+    }
+}
+
+/// One recorded span. Timestamps are nanoseconds since the tracer epoch;
+/// `arg` carries a small integer payload (iteration or reduction sequence
+/// number) surfaced as `args.n` in the chrome trace.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    /// Static label, e.g. `"iter"` or `"allreduce:wait"`.
+    pub label: &'static str,
+    /// Category (chrome `cat`).
+    pub cat: Cat,
+    /// Start, nanoseconds since the tracer epoch.
+    pub start_ns: u64,
+    /// End, nanoseconds since the tracer epoch (`== start_ns` for marks).
+    pub end_ns: u64,
+    /// Integer payload (iteration index, allreduce sequence number, …).
+    pub arg: u64,
+}
+
+const EMPTY: Span = Span {
+    label: "",
+    cat: Cat::Solver,
+    start_ns: 0,
+    end_ns: 0,
+    arg: 0,
+};
+
+/// Fixed-capacity single-writer span ring. When full, the oldest spans
+/// are overwritten; `snapshot` reports how many were dropped so traces
+/// never silently truncate.
+pub struct Ring {
+    slots: Box<[UnsafeCell<Span>]>,
+    head: AtomicUsize,
+}
+
+// SAFETY: `push` is owner-thread-only and `snapshot` is only called at
+// quiescence (see module docs), so a slot is never read and written
+// concurrently. The head's Release/Acquire pair orders slot writes
+// before the count that exposes them.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    /// Ring with room for `cap` spans (`cap >= 1`).
+    pub fn new(cap: usize) -> Ring {
+        let slots: Vec<UnsafeCell<Span>> =
+            (0..cap.max(1)).map(|_| UnsafeCell::new(EMPTY)).collect();
+        Ring {
+            slots: slots.into_boxed_slice(),
+            head: AtomicUsize::new(0),
+        }
+    }
+
+    /// Append a span. Must only be called by the lane's owning thread.
+    pub fn push(&self, s: Span) {
+        let h = self.head.load(Ordering::Relaxed);
+        let cap = self.slots.len();
+        // SAFETY: single writer (owning thread); readers wait for
+        // quiescence, so this slot is not aliased.
+        unsafe { *self.slots[h % cap].get() = s };
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Retained spans in chronological order, plus the count of spans the
+    /// bounded capacity dropped. Call only while the writer is quiescent.
+    pub fn snapshot(&self) -> (Vec<Span>, usize) {
+        let h = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len();
+        let kept = h.min(cap);
+        let mut out = Vec::with_capacity(kept);
+        for i in (h - kept)..h {
+            // SAFETY: quiescent writer (contract above) — no concurrent
+            // mutation of any slot.
+            out.push(unsafe { *self.slots[i % cap].get() });
+        }
+        (out, h - kept)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(label: &'static str, t: u64) -> Span {
+        Span {
+            label,
+            cat: Cat::Solver,
+            start_ns: t,
+            end_ns: t + 1,
+            arg: 0,
+        }
+    }
+
+    #[test]
+    fn keeps_everything_under_capacity() {
+        let r = Ring::new(8);
+        for t in 0..5 {
+            r.push(span("a", t));
+        }
+        let (spans, dropped) = r.snapshot();
+        assert_eq!(dropped, 0);
+        assert_eq!(spans.iter().map(|s| s.start_ns).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn overwrites_oldest_when_full() {
+        let r = Ring::new(4);
+        for t in 0..10 {
+            r.push(span("a", t));
+        }
+        let (spans, dropped) = r.snapshot();
+        assert_eq!(dropped, 6);
+        assert_eq!(spans.iter().map(|s| s.start_ns).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+    }
+}

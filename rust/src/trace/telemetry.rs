@@ -1,0 +1,305 @@
+//! Per-iteration telemetry ring and numerical-health probe.
+//!
+//! Pipelined CG variants replace the true residual with a recurrence that
+//! drifts under rounding — the deeper the pipeline, the faster (Cornelis,
+//! Cools & Vanroose, arXiv 1801.04728; Cools et al., arXiv 1905.06850).
+//! The [`Probe`] owned by each instrumented solver records per-iteration
+//! wall time and residual norms into a bounded [`IterTelemetry`] ring,
+//! periodically compares the recurrence estimate against a freshly
+//! computed true residual, and turns NaN/Inf or a stagnating residual gap
+//! into an explicit diverged stop instead of silently iterating to
+//! `max_iters`.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// One per-iteration telemetry record.
+#[derive(Debug, Clone, Copy)]
+pub struct IterSample {
+    /// Iteration index (1-based, matching `SolveResult::iterations`).
+    pub iteration: usize,
+    /// Wall time since the previous iteration boundary, seconds.
+    pub wall_s: f64,
+    /// Recurrence residual norm (what the convergence test sees).
+    pub rec_norm: f64,
+    /// True residual ‖b − A·x‖₂, present on probe iterations only.
+    pub true_residual: Option<f64>,
+}
+
+/// Bounded ring of [`IterSample`]s: the last [`IterTelemetry::MAX_SAMPLES`]
+/// iterations are retained, `total` counts all of them.
+#[derive(Debug, Clone, Default)]
+pub struct IterTelemetry {
+    /// True-residual sampling period (`--telemetry-every`).
+    pub every: usize,
+    /// Iterations observed in total (≥ `samples.len()`).
+    pub total: usize,
+    /// Retained samples, oldest first.
+    pub samples: VecDeque<IterSample>,
+}
+
+impl IterTelemetry {
+    /// Retention bound: ~160 KiB per solve at 40 bytes a sample.
+    pub const MAX_SAMPLES: usize = 4096;
+
+    /// Append a sample, evicting the oldest beyond the retention bound.
+    pub fn push(&mut self, s: IterSample) {
+        self.total += 1;
+        if self.samples.len() == Self::MAX_SAMPLES {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(s);
+    }
+
+    /// Largest observed true/recurrence residual ratio — the residual-gap
+    /// figure of merit (1.0 = recurrence exact; grows with rounding drift).
+    pub fn max_gap(&self) -> Option<f64> {
+        self.samples
+            .iter()
+            .filter_map(|s| match s.true_residual {
+                Some(t) if s.rec_norm > 0.0 => Some(t / s.rec_norm),
+                _ => None,
+            })
+            .reduce(f64::max)
+    }
+
+    /// Machine-readable form for the metrics exporters.
+    pub fn to_json(&self) -> Json {
+        let samples = self
+            .samples
+            .iter()
+            .map(|s| {
+                let mut row = vec![
+                    ("iter", json::n(s.iteration as f64)),
+                    ("wall_s", json::n(s.wall_s)),
+                    ("rec_norm", json::n(s.rec_norm)),
+                ];
+                if let Some(t) = s.true_residual {
+                    row.push(("true_residual", json::n(t)));
+                }
+                json::obj(row)
+            })
+            .collect();
+        let mut out = vec![
+            ("every", json::n(self.every as f64)),
+            ("iterations", json::n(self.total as f64)),
+            ("samples", Json::Arr(samples)),
+        ];
+        if let Some(g) = self.max_gap() {
+            out.push(("max_residual_gap", json::n(g)));
+        }
+        json::obj(out)
+    }
+}
+
+/// Outcome of one health observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Keep iterating.
+    Ok,
+    /// Stop: NaN/Inf residual, or the true residual stagnated far above
+    /// the recurrence estimate (the recurrence has decoupled).
+    Diverged(&'static str),
+}
+
+/// Consecutive non-improving true-residual samples before a large gap is
+/// declared a divergence.
+const STAGNATION_PATIENCE: usize = 3;
+
+/// The recurrence must under-report the true residual by at least this
+/// factor (on top of stagnation) before the probe declares divergence —
+/// ordinary rounding gaps are O(1), a decoupled recurrence is orders of
+/// magnitude off.
+const GAP_FACTOR: f64 = 10.0;
+
+/// Per-iteration observation point owned by an instrumented solver:
+/// collects [`IterTelemetry`], prints progress lines, detects divergence.
+///
+/// [`Probe::wants_true`] is a pure function of the iteration index so
+/// every rank of a distributed solve reaches the probe's true-residual
+/// collective on exactly the same iterations.
+#[derive(Debug)]
+pub struct Probe {
+    label: &'static str,
+    every: usize,
+    progress: usize,
+    quiet: bool,
+    last: Instant,
+    best_true: f64,
+    stagnant: usize,
+    telemetry: IterTelemetry,
+}
+
+impl Probe {
+    /// Probe for a solver named `label`; `every` = true-residual sampling
+    /// period (0 = never), `progress` = stderr progress period (0 =
+    /// silent), `quiet` suppresses progress (non-zero ranks).
+    pub fn new(label: &'static str, every: usize, progress: usize, quiet: bool) -> Probe {
+        Probe {
+            label,
+            every,
+            progress,
+            quiet,
+            last: Instant::now(),
+            best_true: f64::INFINITY,
+            stagnant: 0,
+            telemetry: IterTelemetry {
+                every,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Whether iteration `it` must sample the true residual (pure in `it`;
+    /// see type docs for why that matters on the distributed path).
+    pub fn wants_true(&self, it: usize) -> bool {
+        self.every != 0 && it % self.every == 0
+    }
+
+    /// Record iteration `it` with recurrence residual norm `rec_norm` and
+    /// — on [`Probe::wants_true`] iterations — the true residual.
+    pub fn observe(&mut self, it: usize, rec_norm: f64, true_norm: Option<f64>) -> Health {
+        let now = Instant::now();
+        let wall_s = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        if self.every != 0 {
+            self.telemetry.push(IterSample {
+                iteration: it,
+                wall_s,
+                rec_norm,
+                true_residual: true_norm,
+            });
+        }
+        if self.progress != 0 && !self.quiet && it % self.progress == 0 {
+            match true_norm {
+                Some(t) => eprintln!(
+                    "[{}] iter {it:>6}  residual {rec_norm:.3e}  true {t:.3e}",
+                    self.label
+                ),
+                None => eprintln!("[{}] iter {it:>6}  residual {rec_norm:.3e}", self.label),
+            }
+        }
+        if !rec_norm.is_finite() {
+            return Health::Diverged("recurrence residual is NaN/Inf");
+        }
+        if let Some(t) = true_norm {
+            if !t.is_finite() {
+                return Health::Diverged("true residual is NaN/Inf");
+            }
+            if t < self.best_true * (1.0 - 1e-4) {
+                self.best_true = t;
+                self.stagnant = 0;
+            } else {
+                self.stagnant += 1;
+                if self.stagnant >= STAGNATION_PATIENCE && rec_norm * GAP_FACTOR < t {
+                    return Health::Diverged(
+                        "true residual stagnated far above the recurrence estimate",
+                    );
+                }
+            }
+        }
+        Health::Ok
+    }
+
+    /// Collected telemetry (`None` when sampling was off).
+    pub fn into_telemetry(self) -> Option<IterTelemetry> {
+        if self.every == 0 {
+            None
+        } else {
+            Some(self.telemetry)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bounds_retention() {
+        let mut t = IterTelemetry {
+            every: 1,
+            ..Default::default()
+        };
+        for i in 1..=(IterTelemetry::MAX_SAMPLES + 10) {
+            t.push(IterSample {
+                iteration: i,
+                wall_s: 0.0,
+                rec_norm: 1.0,
+                true_residual: None,
+            });
+        }
+        assert_eq!(t.total, IterTelemetry::MAX_SAMPLES + 10);
+        assert_eq!(t.samples.len(), IterTelemetry::MAX_SAMPLES);
+        assert_eq!(t.samples.front().unwrap().iteration, 11);
+    }
+
+    #[test]
+    fn max_gap_tracks_worst_ratio() {
+        let mut t = IterTelemetry {
+            every: 2,
+            ..Default::default()
+        };
+        let rows = [
+            (2usize, 1e-3, Some(2e-3)),
+            (4, 1e-4, Some(5e-4)),
+            (6, 1e-5, None),
+        ];
+        for (it, rec, tr) in rows {
+            t.push(IterSample {
+                iteration: it,
+                wall_s: 0.0,
+                rec_norm: rec,
+                true_residual: tr,
+            });
+        }
+        assert!((t.max_gap().unwrap() - 5.0).abs() < 1e-12);
+        let j = t.to_json();
+        assert_eq!(j.get("iterations").as_usize(), Some(3));
+        assert_eq!(j.get("samples").as_arr().unwrap().len(), 3);
+        assert!(j.get("max_residual_gap").as_f64().is_some());
+    }
+
+    #[test]
+    fn probe_flags_nan_immediately() {
+        let mut p = Probe::new("t", 0, 0, true);
+        assert_eq!(p.observe(1, 1.0, None), Health::Ok);
+        assert!(matches!(p.observe(2, f64::NAN, None), Health::Diverged(_)));
+        let mut p = Probe::new("t", 1, 0, true);
+        assert!(matches!(
+            p.observe(1, 1.0, Some(f64::INFINITY)),
+            Health::Diverged(_)
+        ));
+    }
+
+    #[test]
+    fn probe_flags_stagnating_gap_but_tolerates_improvement() {
+        // Improving true residual: never diverged, even with a gap.
+        let mut p = Probe::new("t", 1, 0, true);
+        let mut t = 1.0;
+        for it in 1..20 {
+            t *= 0.5;
+            assert_eq!(p.observe(it, t * 0.05, Some(t)), Health::Ok);
+        }
+        // Stagnating true residual, recurrence far below: diverged after
+        // the patience threshold.
+        let mut p = Probe::new("t", 1, 0, true);
+        assert_eq!(p.observe(1, 1e-1, Some(1.0)), Health::Ok);
+        let mut verdict = Health::Ok;
+        for it in 2..10 {
+            verdict = p.observe(it, 1e-6, Some(1.0));
+            if verdict != Health::Ok {
+                break;
+            }
+        }
+        assert!(matches!(verdict, Health::Diverged(_)));
+        // Stagnation with an honest recurrence (small gap) is not flagged.
+        let mut p = Probe::new("t", 1, 0, true);
+        for it in 1..10 {
+            assert_eq!(p.observe(it, 0.9, Some(1.0)), Health::Ok);
+        }
+        assert!(p.into_telemetry().is_some());
+    }
+}

@@ -22,6 +22,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
+use crate::trace::{self, Cat};
+
 /// Below this many elements (or stored entries, for SPMV) the parallel
 /// kernels fall back to their serial forms: fork/join latency would exceed
 /// the loop itself.
@@ -234,6 +236,9 @@ impl ThreadPool {
             .dispatch
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
+        // Dispatch + caller drain + join, as one span on the calling
+        // thread's lane (workers record their own `pool:drain` spans).
+        let _run = trace::span_arg("pool:run", Cat::Pool, tasks as u64);
         let next = AtomicUsize::new(0);
         let poisoned = AtomicBool::new(false);
         unsafe fn shim<F: Fn(usize)>(data: *const (), i: usize) {
@@ -361,6 +366,7 @@ fn worker(shared: Arc<Shared>) {
         // below, so the job's pointers are valid for the whole drain loop.
         // Panics are caught and reported via the poison flag so the
         // dispatcher can re-raise them after its join.
+        let drain_span = trace::span_arg("pool:drain", Cat::Pool, job.tasks as u64);
         let drained = catch_unwind(AssertUnwindSafe(|| unsafe {
             let next = &*job.next;
             loop {
@@ -371,6 +377,7 @@ fn worker(shared: Arc<Shared>) {
                 (job.call)(job.data, i);
             }
         }));
+        drop(drain_span);
         if drained.is_err() {
             unsafe { (*job.poisoned).store(true, Ordering::Release) };
         }

@@ -112,7 +112,7 @@ fn hybrids_beat_cpu_baselines() {
 fn speedup_table_has_pipecg_openmp_as_worst_cpu() {
     let a = gen::banded_spd(2000, 20.0, 2);
     let set = all_methods_on(&a);
-    let sp = set.speedups_vs("PIPECG-OpenMP");
+    let sp = set.speedups_vs("PIPECG-OpenMP").expect("reference present");
     for (m, s) in sp {
         if m.contains("OpenMP") || m.contains("MPI") {
             assert!(

@@ -1,0 +1,256 @@
+//! Observability integration: the wall-clock span tracer's contracts.
+//!
+//! * disabled tracing allocates nothing (counting global allocator),
+//! * spans on one lane nest or are disjoint — never partially overlap
+//!   (property-checked over random span trees),
+//! * enabling the tracer does not perturb solver numerics bitwise,
+//! * a 3-rank distributed run yields per-rank allreduce post/wait/in-flight
+//!   records whose wait time agrees with `RankMetrics::reduce_wait_s`,
+//! * the merged chrome-trace document round-trips through `util::json`.
+//!
+//! The tracer is process-global state, so every test serializes on one
+//! mutex (the test harness runs tests in this binary concurrently).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use hypipe::dist::{self, DistOpts};
+use hypipe::precond::Jacobi;
+use hypipe::solver::{self, SolveOpts};
+use hypipe::sparse::gen;
+use hypipe::trace::{self, Cat, LaneKind, Span};
+use hypipe::util::json;
+use hypipe::util::prng::Rng;
+use hypipe::util::propcheck;
+
+/// Counts allocator calls so the disabled-path test can prove the tracer's
+/// entry points touch the allocator zero times.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Serializes the tests: the tracer switch, lanes, and epoch are shared.
+fn lock() -> MutexGuard<'static, ()> {
+    static M: Mutex<()> = Mutex::new(());
+    M.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[test]
+fn disabled_tracing_allocates_nothing() {
+    let _g = lock();
+    trace::disable();
+    // Other harness threads may allocate concurrently (test startup /
+    // output capture), so allow a few attempts at a clean window; the
+    // property only needs one allocation-free pass to hold.
+    let mut clean = false;
+    for _ in 0..8 {
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for i in 0..1_000u64 {
+            let _s = trace::span_arg("alloc-probe", Cat::Solver, i);
+            trace::mark("alloc-probe-mark", Cat::Net, i);
+            let t = Instant::now();
+            trace::record(LaneKind::Main, "alloc-probe-rec", Cat::Net, t, t, i);
+        }
+        if ALLOC_CALLS.load(Ordering::SeqCst) == before {
+            clean = true;
+            break;
+        }
+    }
+    assert!(clean, "disabled tracing entry points hit the allocator");
+    // And nothing was recorded either.
+    for lane in trace::lanes_snapshot() {
+        assert!(lane.spans.iter().all(|s| s.label != "alloc-probe"));
+    }
+}
+
+/// Random span tree: every node opens a guard around its children.
+/// Returns the number of spans created.
+fn record_tree(rng: &mut Rng, depth: usize) -> usize {
+    let _node = trace::span_arg("prop-node", Cat::Solver, depth as u64);
+    let mut count = 1;
+    if depth < 3 {
+        for _ in 0..rng.below(3) {
+            count += record_tree(rng, depth + 1);
+        }
+    }
+    count
+}
+
+fn contains(a: &Span, b: &Span) -> bool {
+    a.start_ns <= b.start_ns && b.end_ns <= a.end_ns
+}
+
+fn disjoint(a: &Span, b: &Span) -> bool {
+    a.end_ns <= b.start_ns || b.end_ns <= a.start_ns
+}
+
+#[test]
+fn random_span_trees_nest_within_a_lane() {
+    let _g = lock();
+    propcheck::check("spans nest or are disjoint, never partial", 60, |rng: &mut Rng| {
+        trace::reset();
+        trace::enable();
+        let expected = record_tree(rng, 0);
+        trace::disable();
+        let lanes = trace::lanes_snapshot();
+        // One recording thread, main lane only.
+        assert_eq!(lanes.len(), 1);
+        let spans = &lanes[0].spans;
+        assert_eq!(spans.len(), expected);
+        for (i, a) in spans.iter().enumerate() {
+            assert!(a.start_ns <= a.end_ns);
+            for b in spans.iter().skip(i + 1) {
+                assert!(
+                    contains(a, b) || contains(b, a) || disjoint(a, b),
+                    "partial overlap: [{}, {}] vs [{}, {}]",
+                    a.start_ns,
+                    a.end_ns,
+                    b.start_ns,
+                    b.end_ns
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn tracing_enabled_does_not_change_results() {
+    let _g = lock();
+    let a = gen::poisson2d_5pt(16, 16);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let opts = SolveOpts {
+        threads: 1,
+        ..Default::default()
+    };
+    trace::disable();
+    let off = solver::pipecg::solve(&a, &b, &pc, &opts);
+    trace::reset();
+    trace::enable();
+    let on = solver::pipecg::solve(&a, &b, &pc, &opts);
+    trace::disable();
+    assert!(off.converged && on.converged);
+    assert_eq!(off.iterations, on.iterations);
+    for (x0, x1) in off.x.iter().zip(&on.x) {
+        assert_eq!(x0.to_bits(), x1.to_bits());
+    }
+    for (h0, h1) in off.history.iter().zip(&on.history) {
+        assert_eq!(h0.to_bits(), h1.to_bits());
+    }
+}
+
+#[test]
+fn serial_solver_trace_parses_with_iter_spans() {
+    let _g = lock();
+    trace::reset();
+    trace::enable();
+    let a = gen::poisson2d_5pt(12, 12);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let res = solver::pipecg::solve(
+        &a,
+        &b,
+        &pc,
+        &SolveOpts {
+            threads: 1,
+            ..Default::default()
+        },
+    );
+    trace::disable();
+    assert!(res.converged);
+    let iters: Vec<Span> = trace::lanes_snapshot()
+        .into_iter()
+        .flat_map(|l| l.spans)
+        .filter(|s| s.label == "iter" && s.cat == Cat::Solver)
+        .collect();
+    assert_eq!(iters.len(), res.iterations);
+    let doc = json::parse(&trace::chrome_trace().to_string()).unwrap();
+    let events = doc.get("traceEvents").as_arr().unwrap();
+    assert!(events
+        .iter()
+        .any(|e| e.get("name").as_str() == Some("iter") && e.get("ph").as_str() == Some("X")));
+}
+
+#[test]
+fn three_rank_dist_trace_has_allreduce_pairs_per_rank() {
+    let _g = lock();
+    trace::reset();
+    trace::enable();
+    let a = gen::poisson2d_5pt(16, 16);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let rep = dist::pipecg::solve(&a, &b, &pc, &DistOpts::with_ranks(3));
+    trace::disable();
+    assert!(rep.result.converged);
+
+    let lanes = trace::lanes_snapshot();
+    for rank in 0..3usize {
+        let pid = rank as u32 + 1;
+        let spans_of = |label: &str| -> Vec<Span> {
+            lanes
+                .iter()
+                .filter(|l| l.pid == pid)
+                .flat_map(|l| l.spans.iter().copied())
+                .filter(|s| s.label == label)
+                .collect()
+        };
+        let posts = spans_of("allreduce:post");
+        let waits = spans_of("allreduce:wait");
+        let inflight = spans_of("allreduce:inflight");
+        assert!(!posts.is_empty(), "rank {rank}: no posted reductions");
+        // Every posted reduction is completed: the sequence-number sets of
+        // the post marks and the wait/in-flight spans coincide.
+        let seqs = |v: &[Span]| v.iter().map(|s| s.arg).collect::<BTreeSet<u64>>();
+        assert_eq!(seqs(&posts), seqs(&waits), "rank {rank}");
+        assert_eq!(seqs(&posts), seqs(&inflight), "rank {rank}");
+        // The in-flight interval starts at the post and ends at the wait.
+        for w in &waits {
+            let f = inflight.iter().find(|s| s.arg == w.arg).unwrap();
+            assert!(f.start_ns <= w.start_ns && f.end_ns == w.end_ns, "rank {rank}");
+        }
+        // Exposed reduction time in the trace agrees with the metrics the
+        // fabric charged (same clock reads; only ns truncation differs).
+        let span_wait_s: f64 = waits
+            .iter()
+            .map(|s| (s.end_ns - s.start_ns) as f64 / 1e9)
+            .sum();
+        let m = rep.per_rank.iter().find(|m| m.rank == rank).unwrap();
+        assert!(
+            (span_wait_s - m.reduce_wait_s).abs() <= 0.05 * m.reduce_wait_s.max(1e-9) + 1e-6,
+            "rank {rank}: span wait {span_wait_s} vs metric {}",
+            m.reduce_wait_s
+        );
+    }
+    let doc = json::parse(&trace::chrome_trace().to_string()).unwrap();
+    let events = doc.get("traceEvents").as_arr().unwrap();
+    assert!(events.len() > 10, "dist trace has events");
+    // Every rank appears as its own chrome process.
+    let pids: BTreeSet<i64> = events
+        .iter()
+        .filter_map(|e| e.get("pid").as_f64())
+        .map(|p| p as i64)
+        .collect();
+    for pid in [1, 2, 3] {
+        assert!(pids.contains(&pid), "pid {pid} missing from trace");
+    }
+}
