@@ -5,7 +5,8 @@
 //! artifacts` HLO text → Rust PJRT runtime → device engines + copy streams
 //! → the three hybrid schedulers — solving real SPD systems to the paper's
 //! tolerance (1e-5), logging the residual curve, and cross-checking every
-//! result against the sequential reference solver.
+//! result against the sequential reference solver. All four device methods
+//! dispatch through one PJRT-backed [`Runner`].
 //!
 //! Writes: `e2e_residuals.csv`, `e2e_report.json`, `e2e_trace.json`.
 //! The run is recorded in EXPERIMENTS.md §E10.
@@ -16,20 +17,15 @@
 
 use std::fmt::Write as _;
 
-use hypipe::device::native::GpuCompute;
-use hypipe::device::{DeviceParams, GpuEngine};
+use hypipe::device::DeviceParams;
 use hypipe::hybrid::{self, HybridConfig};
 use hypipe::metrics::RunReport;
 use hypipe::precond::Jacobi;
-use hypipe::runtime;
+use hypipe::runtime::{self, Method, Runner};
 use hypipe::solver::pipecg;
 use hypipe::sparse::{gen, Csr, MatrixStats};
 use hypipe::util::json::{arr, obj, s, Json};
 use hypipe::util::{human_time, max_abs_diff};
-
-fn engine(lib: &std::rc::Rc<hypipe::runtime::ArtifactLibrary>) -> GpuEngine {
-    GpuEngine::new(lib.clone(), DeviceParams::gpu_k20m())
-}
 
 fn validate(name: &str, rep: &RunReport, reference: &hypipe::solver::SolveResult) {
     assert!(rep.result.converged, "{name}: did not converge");
@@ -59,8 +55,10 @@ fn main() -> hypipe::Result<()> {
             "e2e_validation requires the AOT artifacts: run `make artifacts` first".into(),
         ));
     }
-    let lib = std::rc::Rc::new(runtime::open_default()?);
-    println!("artifact library: {} compiled graphs available", lib.names().len());
+    println!(
+        "artifact library: {} compiled graphs available",
+        runtime::open_default()?.names().len()
+    );
 
     // Two real workloads: a 125-pt Poisson system lowered through the
     // *Pallas* kernels (small bucket) and a larger banded SPD system
@@ -75,6 +73,7 @@ fn main() -> hypipe::Result<()> {
         keep_trace: true,
         ..Default::default()
     };
+    let runner = Runner::new("pjrt", DeviceParams::gpu_k20m(), cfg.clone())?;
     let mut runs: Vec<Json> = Vec::new();
     let mut residual_csv = String::from("system,method,iteration,residual\n");
 
@@ -89,37 +88,25 @@ fn main() -> hypipe::Result<()> {
         let reference = pipecg::solve(a, &b, &pc, &cfg.opts);
         assert!(reference.converged, "reference solver failed on {name}");
 
-        // Hybrid-1 and Hybrid-2 on the PJRT backend (full matrix resident).
+        // The same split the runner will use for Hybrid-3, shown up front.
+        let plan = hybrid::hybrid3::plan(a, &cfg, None, None);
+        println!(
+            "  hybrid3 plan: r_cpu={:.3} N_cpu={} N_gpu={}",
+            plan.perf.r_cpu,
+            plan.split.n_cpu,
+            plan.split.n_gpu()
+        );
+
+        // The three hybrids plus the full-GPU baseline (which exercises the
+        // pipecg_step graph's in-graph dots), all through the PJRT runner.
         let mut reports: Vec<RunReport> = Vec::new();
-        {
-            let mut eng = engine(&lib);
-            eng.load_matrix(a, &pc.inv_diag)?;
-            reports.push(hybrid::hybrid1::solve(a, &b, &pc, &mut eng, &cfg)?);
-        }
-        {
-            let mut eng = engine(&lib);
-            eng.load_matrix(a, &pc.inv_diag)?;
-            reports.push(hybrid::hybrid2::solve(a, &b, &pc, &mut eng, &cfg)?);
-        }
-        // Hybrid-3 on the PJRT backend (panel resident).
-        {
-            let plan = hybrid::hybrid3::plan(a, &cfg, None, None);
-            let mut eng = engine(&lib);
-            eng.load_panel(a, plan.split.n_cpu, a.n, &pc.inv_diag)?;
-            println!(
-                "  hybrid3 plan: r_cpu={:.3} N_cpu={} N_gpu={}",
-                plan.perf.r_cpu,
-                plan.split.n_cpu,
-                plan.split.n_gpu()
-            );
-            reports.push(hybrid::hybrid3::solve(a, &b, &pc, &mut eng, &plan, &cfg)?);
-        }
-        // Full-GPU baseline through the same artifacts (uses the in-graph
-        // dots — the pipecg_step graph's third role).
-        {
-            let mut eng = engine(&lib);
-            eng.load_matrix(a, &pc.inv_diag)?;
-            reports.push(baseline_gpu(a, &b, &mut eng, &cfg)?);
+        for m in [
+            Method::Hybrid1,
+            Method::Hybrid2,
+            Method::Hybrid3,
+            Method::PipecgGpuPetsc,
+        ] {
+            reports.push(runner.run(m, a, &b, &pc)?);
         }
 
         for rep in &reports {
@@ -144,21 +131,4 @@ fn main() -> hypipe::Result<()> {
     println!("\nwrote e2e_residuals.csv, e2e_report.json, e2e_trace.json");
     println!("e2e_validation OK — all layers compose");
     Ok(())
-}
-
-/// PETSc-PIPECG-GPU flavour on the PJRT backend.
-fn baseline_gpu(
-    a: &Csr,
-    b: &[f64],
-    eng: &mut dyn GpuCompute,
-    cfg: &HybridConfig,
-) -> hypipe::Result<RunReport> {
-    hypipe::baselines::run_gpu(
-        a,
-        b,
-        hypipe::baselines::GpuFlavor::PetscPipecg,
-        eng,
-        &cfg.opts,
-        &cfg.cm,
-    )
 }

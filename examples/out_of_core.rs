@@ -2,19 +2,19 @@
 //! exceeds the simulated device memory. Methods needing the full matrix
 //! device-resident (Hybrid-1/2, the GPU-library baselines) must refuse;
 //! Hybrid-PIPECG-3 proceeds with a device-resident row panel chosen by the
-//! performance model (measured on the N_pf row subset that fits).
+//! performance model (measured on the N_pf row subset that fits). The
+//! capacity-aware Hybrid-3 budgeting and the CPU baselines all dispatch
+//! through one [`Runner`] carrying the shrunken [`DeviceParams`].
 //!
 //! ```sh
 //! cargo run --release --example out_of_core
 //! ```
 
-use hypipe::baselines::{self, CpuFlavor};
-use hypipe::device::native::NativeAccel;
 use hypipe::device::{DeviceParams, GpuEngine};
 use hypipe::hybrid::{self, HybridConfig};
 use hypipe::perfmodel;
 use hypipe::precond::Jacobi;
-use hypipe::runtime;
+use hypipe::runtime::{self, Method, Runner};
 use hypipe::sparse::{gen, MatrixStats};
 use hypipe::util::{human_bytes, human_time};
 
@@ -38,6 +38,10 @@ fn main() -> hypipe::Result<()> {
     );
     assert!(need > params.mem_capacity.unwrap(), "workload must not fit");
 
+    let cfg = HybridConfig::default();
+    let runner = Runner::new("native", params.clone(), cfg.clone())?;
+    assert!(!runner.fits_gpu(&a), "runner must see the capacity shortfall");
+
     // 1. Full-matrix methods must refuse (exercised through the real PJRT
     //    engine when artifacts exist).
     if runtime::artifacts_available() {
@@ -55,8 +59,9 @@ fn main() -> hypipe::Result<()> {
         println!("(artifacts absent: skipping the PJRT refusal demonstration)");
     }
 
-    // 2. Hybrid-3 proceeds: perf model on the N_pf subset that fits.
-    let cfg = HybridConfig::default();
+    // 2. Hybrid-3 proceeds: perf model on the N_pf subset that fits. The
+    //    runner applies exactly this budget internally; recompute the plan
+    //    here only to show the decomposition.
     let n_pf = perfmodel::rows_fitting(&a, params.mem_capacity.unwrap());
     println!("performance modelling restricted to N_pf = {n_pf} rows");
     let plan = hybrid::hybrid3::plan_capped(&a, &cfg, Some(n_pf), params.mem_capacity, None);
@@ -66,8 +71,7 @@ fn main() -> hypipe::Result<()> {
         plan.split.n_gpu(),
         plan.perf.r_cpu
     );
-    let mut acc = NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag);
-    let h3 = hybrid::hybrid3::solve(&a, &b, &pc, &mut acc, &plan, &cfg)?;
+    let h3 = runner.run(Method::Hybrid3, &a, &b, &pc)?;
     assert!(h3.result.converged);
     println!(
         "Hybrid-PIPECG-3: converged in {} iterations, virtual time {}",
@@ -77,8 +81,12 @@ fn main() -> hypipe::Result<()> {
 
     // 3. CPU-only methods remain available; Hybrid-3 should beat them
     //    (paper reports 2–2.5x at Table-II scale).
-    for flavor in [CpuFlavor::PipecgOpenMp, CpuFlavor::ParalutionOpenMp, CpuFlavor::PetscMpi] {
-        let rep = baselines::run_cpu(&a, &b, flavor, &cfg.opts, &cfg.cm);
+    for m in [
+        Method::PipecgCpu,
+        Method::PcgCpuParalution,
+        Method::PcgCpuPetsc,
+    ] {
+        let rep = runner.run(m, &a, &b, &pc)?;
         println!(
             "{:24} virtual {} -> Hybrid-3 speedup {:.2}x",
             rep.method,

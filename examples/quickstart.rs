@@ -6,13 +6,14 @@
 //! ```
 //!
 //! Uses the PJRT artifact backend when `make artifacts` has been run,
-//! falling back to the native backend otherwise.
+//! falling back to the native backend otherwise. The whole dispatch —
+//! method selection, accelerator construction, budgeted Hybrid-3
+//! planning — goes through one [`Runner`].
 
-use hypipe::device::native::{GpuCompute, NativeAccel};
-use hypipe::device::{CostModel, DeviceParams, GpuEngine};
-use hypipe::hybrid::{self, select::Method, HybridConfig};
+use hypipe::device::DeviceParams;
+use hypipe::hybrid::HybridConfig;
 use hypipe::precond::Jacobi;
-use hypipe::runtime;
+use hypipe::runtime::{self, Method, Runner};
 use hypipe::sparse::{gen, MatrixStats};
 
 fn main() -> hypipe::Result<()> {
@@ -26,49 +27,24 @@ fn main() -> hypipe::Result<()> {
         stats.n, stats.nnz, stats.nnz_per_row
     );
 
-    let cm = CostModel::default();
-    let cfg = HybridConfig::default();
-    let method = hybrid::select::select(&cm, &stats, true);
-    println!("auto-selected method: {}", method.name());
-
-    let use_pjrt = runtime::artifacts_available();
+    let backend = if runtime::artifacts_available() {
+        "pjrt"
+    } else {
+        "native"
+    };
     println!(
         "accelerator backend: {}",
-        if use_pjrt {
+        if backend == "pjrt" {
             "pjrt (AOT artifacts)"
         } else {
             "native (run `make artifacts` for the PJRT path)"
         }
     );
 
-    let rep = match method {
-        Method::Hybrid3 => {
-            let plan = hybrid::hybrid3::plan(&a, &cfg, None, None);
-            let mut acc: Box<dyn GpuCompute> = if use_pjrt {
-                let lib = std::rc::Rc::new(runtime::open_default()?);
-                let mut eng = GpuEngine::new(lib, DeviceParams::gpu_k20m());
-                eng.load_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag)?;
-                Box::new(eng)
-            } else {
-                Box::new(NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag))
-            };
-            hybrid::hybrid3::solve(&a, &b, &pc, acc.as_mut(), &plan, &cfg)?
-        }
-        m => {
-            let mut acc: Box<dyn GpuCompute> = if use_pjrt {
-                let lib = std::rc::Rc::new(runtime::open_default()?);
-                let mut eng = GpuEngine::new(lib, DeviceParams::gpu_k20m());
-                eng.load_matrix(&a, &pc.inv_diag)?;
-                Box::new(eng)
-            } else {
-                Box::new(NativeAccel::with_matrix(&a, &pc.inv_diag))
-            };
-            match m {
-                Method::Hybrid1 => hybrid::hybrid1::solve(&a, &b, &pc, acc.as_mut(), &cfg)?,
-                _ => hybrid::hybrid2::solve(&a, &b, &pc, acc.as_mut(), &cfg)?,
-            }
-        }
-    };
+    let runner = Runner::new(backend, DeviceParams::gpu_k20m(), HybridConfig::default())?;
+    let method = runner.resolve(Method::Auto, &a);
+    println!("auto-selected method: {method}");
+    let rep = runner.run(method, &a, &b, &pc)?;
 
     println!(
         "converged: {} in {} iterations (‖u‖ = {:.2e}, true residual = {:.2e})",

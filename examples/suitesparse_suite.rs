@@ -9,13 +9,15 @@
 //!
 //! `scale` (default 8) divides the bench-scale matrix sizes further; the
 //! paper-scale figure reproduction lives in `cargo bench --bench
-//! fig6_cpu_comparison` / `fig7_gpu_comparison`.
+//! fig6_cpu_comparison` / `fig7_gpu_comparison`. Every method dispatches
+//! through one [`Runner`] over [`Method::suite()`] — the accelerator and
+//! Hybrid-3 plan for each method are the runner's business.
 
-use hypipe::baselines::{self, CpuFlavor, GpuFlavor};
-use hypipe::device::native::NativeAccel;
-use hypipe::hybrid::{self, HybridConfig};
+use hypipe::device::DeviceParams;
+use hypipe::hybrid::HybridConfig;
 use hypipe::metrics::ReportSet;
 use hypipe::precond::Jacobi;
+use hypipe::runtime::{Method, Runner};
 use hypipe::sparse::gen;
 use hypipe::util::table::Table;
 
@@ -25,7 +27,7 @@ fn main() -> hypipe::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
     let suite = gen::table1_suite(scale);
-    let cfg = HybridConfig::default();
+    let runner = Runner::new("native", DeviceParams::gpu_k20m(), HybridConfig::default())?;
 
     let mut fig6 = Table::new(
         "Fig. 6 style — speedup wrt PIPECG-OpenMP (bench scale, measured virtual time)",
@@ -43,25 +45,8 @@ fn main() -> hypipe::Result<()> {
         eprintln!("running {} (bench n={}, nnz={})...", profile.name, a.n, a.nnz());
 
         let mut set = ReportSet::new(profile.name);
-        set.push(baselines::run_cpu(&a, &b, CpuFlavor::PipecgOpenMp, &cfg.opts, &cfg.cm));
-        set.push(baselines::run_cpu(&a, &b, CpuFlavor::ParalutionOpenMp, &cfg.opts, &cfg.cm));
-        set.push(baselines::run_cpu(&a, &b, CpuFlavor::PetscMpi, &cfg.opts, &cfg.cm));
-        for flavor in [GpuFlavor::PetscPipecg, GpuFlavor::PetscPcg, GpuFlavor::ParalutionPcg] {
-            let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
-            set.push(baselines::run_gpu(&a, &b, flavor, &mut acc, &cfg.opts, &cfg.cm)?);
-        }
-        {
-            let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
-            set.push(hybrid::hybrid1::solve(&a, &b, &pc, &mut acc, &cfg)?);
-        }
-        {
-            let mut acc = NativeAccel::with_matrix(&a, &pc.inv_diag);
-            set.push(hybrid::hybrid2::solve(&a, &b, &pc, &mut acc, &cfg)?);
-        }
-        {
-            let plan = hybrid::hybrid3::plan(&a, &cfg, None, None);
-            let mut acc = NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag);
-            set.push(hybrid::hybrid3::solve(&a, &b, &pc, &mut acc, &plan, &cfg)?);
+        for &m in Method::suite() {
+            set.push(runner.run(m, &a, &b, &pc)?);
         }
         for rep in &set.reports {
             assert!(rep.result.converged, "{} on {}", rep.method, profile.name);

@@ -77,6 +77,7 @@ fn main() {
                 base: base(l),
                 ranks,
                 reduce_latency,
+                ..Default::default()
             };
             let rep = match m {
                 0 => dist::pcg::solve(&a, &b, &pc, &opts),

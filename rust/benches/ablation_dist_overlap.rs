@@ -61,6 +61,7 @@ fn main() {
             },
             ranks,
             reduce_latency: Duration::from_micros(latency_us),
+            ..Default::default()
         };
         let pcg = dist::pcg::solve(&a, &b, &pc, &opts);
         let pipe = dist::pipecg::solve(&a, &b, &pc, &opts);

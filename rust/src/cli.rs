@@ -5,11 +5,22 @@
 //! and benches: `poisson2d:NXxNY`, `poisson7:M`, `poisson27:M`,
 //! `poisson125:M`, `banded:N,NNZ_PER_ROW[,SEED]`, `mtx:PATH`,
 //! `table1:NAME[/SCALE]`.
+//!
+//! The flag surface is consolidated in [`RunConfig`]: one value holding
+//! the matrix spec, the [`Method`](crate::runtime::Method), the backend
+//! choice, the solver + distribution options (a [`DistOpts`] embedding
+//! the [`SolveOpts`]), and — for multi-process TCP workers — the node
+//! placement (`--rank`/`--listen`/`--peers`). Build one with
+//! [`RunConfig::from_args`] (the binary) or the builder methods (the
+//! examples), then hand it to [`RunConfig::runner`].
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::dist::exec::NodeCfg;
+use crate::dist::transport::{TcpCfg, TransportKind};
 use crate::dist::DistOpts;
+use crate::runtime::{Method, Runner};
 use crate::solver::SolveOpts;
 use crate::sparse::{gen, mm, Csr};
 use crate::{Error, Result};
@@ -72,10 +83,155 @@ impl Args {
     }
 }
 
+/// Everything one `hypipe solve`/`suite` run needs, from one parse of the
+/// flags: what to solve (`matrix`), how (`method`, `backend`, the solver
+/// options inside `dist.base`), over which fabric (`dist`), and — for a
+/// multi-process worker — where this process sits (`node`).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Matrix spec for [`build_matrix`].
+    pub matrix: String,
+    pub method: Method,
+    /// `Some("native" | "pjrt")`, or `None` for the default (pjrt when
+    /// the AOT artifacts exist, native otherwise).
+    pub backend: Option<String>,
+    /// Distribution options; `dist.base` holds the [`SolveOpts`] every
+    /// method uses.
+    pub dist: DistOpts,
+    /// `Some` when this process is one TCP worker of a multi-process job
+    /// (`--rank` given); `None` for ordinary in-process runs.
+    pub node: Option<NodeCfg>,
+    /// Residual-replacement interval for `pipecg-rr`.
+    pub rr_interval: usize,
+    /// Simulated device memory override (`--gpu-mem`).
+    pub gpu_mem: Option<u64>,
+    /// Keep the virtual timeline for `--trace` output.
+    pub keep_trace: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            matrix: "poisson2d:64x64".into(),
+            method: Method::Auto,
+            backend: None,
+            dist: DistOpts::default(),
+            node: None,
+            rr_interval: 50,
+            gpu_mem: None,
+            keep_trace: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Start a config for `matrix` with default options (builder entry
+    /// point for examples and tests).
+    pub fn new(matrix: &str) -> RunConfig {
+        RunConfig {
+            matrix: matrix.into(),
+            ..Default::default()
+        }
+    }
+
+    /// Choose the method.
+    pub fn with_method(mut self, m: Method) -> RunConfig {
+        self.method = m;
+        self
+    }
+
+    /// Pin the backend (`"native"` or `"pjrt"`).
+    pub fn with_backend(mut self, backend: &str) -> RunConfig {
+        self.backend = Some(backend.into());
+        self
+    }
+
+    /// Replace the solver options.
+    pub fn with_opts(mut self, opts: SolveOpts) -> RunConfig {
+        self.dist.base = opts;
+        self
+    }
+
+    /// Fix the fabric rank count for the dist-* methods.
+    pub fn with_ranks(mut self, ranks: usize) -> RunConfig {
+        self.dist.ranks = ranks;
+        self
+    }
+
+    /// Override the simulated device memory capacity.
+    pub fn with_gpu_mem(mut self, bytes: u64) -> RunConfig {
+        self.gpu_mem = Some(bytes);
+        self
+    }
+
+    /// Parse the full flag surface. Validations: method and transport
+    /// names (unknown ones list the valid tokens), solver-option ranges,
+    /// and the `--rank`/`--listen`/`--peers` worker placement (which
+    /// requires `--transport tcp` and an explicit `--ranks`).
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let dist = dist_from_args(args)?;
+        let method: Method = args.flag_or("method", "auto").parse()?;
+        let node = node_from_args(args, method, &dist)?;
+        let gpu_mem = match args.flag("gpu-mem") {
+            None => None,
+            Some(v) => Some(
+                v.parse()
+                    .map_err(|_| Error::Config(format!("--gpu-mem: bad bytes '{v}'")))?,
+            ),
+        };
+        Ok(RunConfig {
+            matrix: args.flag_or("matrix", "poisson2d:64x64"),
+            method,
+            backend: args.flag("backend").map(str::to_string),
+            dist,
+            node,
+            rr_interval: args.flag_parse("rr-interval", 50)?,
+            gpu_mem,
+            keep_trace: args.flag("trace").is_some(),
+        })
+    }
+
+    /// The solver options shared by every method.
+    pub fn opts(&self) -> &SolveOpts {
+        &self.dist.base
+    }
+
+    /// Build the matrix this config names.
+    pub fn build(&self) -> Result<Csr> {
+        build_matrix(&self.matrix)
+    }
+
+    /// The backend this config resolves to (applying the artifact-based
+    /// default when none was pinned).
+    pub fn backend_name(&self) -> String {
+        self.backend.clone().unwrap_or_else(|| {
+            if crate::runtime::artifacts_available() {
+                "pjrt".into()
+            } else {
+                "native".into()
+            }
+        })
+    }
+
+    /// Build the [`Runner`] executing this config's methods.
+    pub fn runner(&self) -> Result<Runner> {
+        let mut gp = crate::device::DeviceParams::gpu_k20m();
+        if let Some(mem) = self.gpu_mem {
+            gp.mem_capacity = Some(mem);
+        }
+        let cfg = crate::hybrid::HybridConfig {
+            opts: self.dist.base.clone(),
+            keep_trace: self.keep_trace,
+            ..Default::default()
+        };
+        Ok(Runner::new(&self.backend_name(), gp, cfg)?.with_rr_interval(self.rr_interval))
+    }
+}
+
 /// Solver options from the common flags (`--tol`, `--max-iters`,
 /// `--threads`, `--pipeline-depth`, `--telemetry-every`,
 /// `--progress-every`), shared by the binary and the benches.
-pub fn solve_opts(args: &Args) -> Result<SolveOpts> {
+fn solve_from_args(args: &Args) -> Result<SolveOpts> {
     let max_iters = args.flag_parse("max-iters", 10_000)?;
     let pipeline_depth: usize = args.flag_parse("pipeline-depth", 1)?;
     if pipeline_depth == 0 {
@@ -101,10 +257,11 @@ pub fn solve_opts(args: &Args) -> Result<SolveOpts> {
     })
 }
 
-/// Distributed-solve options: [`solve_opts`] plus `--ranks` (0 = auto,
-/// `HYPIPE_RANKS` honored) and `--reduce-latency-us` (injected allreduce
-/// completion latency in microseconds).
-pub fn dist_opts(args: &Args) -> Result<DistOpts> {
+/// Distributed-solve options: the solver options plus `--ranks` (0 =
+/// auto, `HYPIPE_RANKS` honored), `--reduce-latency-us` (injected
+/// allreduce completion latency in microseconds), `--transport chan|tcp`,
+/// and the TCP timeout knobs.
+fn dist_from_args(args: &Args) -> Result<DistOpts> {
     let latency_us: f64 = args.flag_parse("reduce-latency-us", 0.0)?;
     // Upper bound keeps Duration::from_secs_f64 from panicking on
     // overflow; 1e15 µs (~32 years) is far beyond any sane latency.
@@ -120,11 +277,98 @@ pub fn dist_opts(args: &Args) -> Result<DistOpts> {
             "--ranks: must be >= 1 (omit the flag or set HYPIPE_RANKS for auto)".into(),
         ));
     }
+    let transport: TransportKind = match args.flag("transport") {
+        None => TransportKind::Chan,
+        Some(v) => v.parse()?,
+    };
+    let connect_ms: u64 = args.flag_parse("connect-timeout-ms", 10_000u64)?;
+    let recv_ms: u64 = args.flag_parse("recv-timeout-ms", 60_000u64)?;
+    if connect_ms == 0 || recv_ms == 0 {
+        return Err(Error::Config(
+            "--connect-timeout-ms / --recv-timeout-ms: must be >= 1 millisecond".into(),
+        ));
+    }
     Ok(DistOpts {
-        base: solve_opts(args)?,
+        base: solve_from_args(args)?,
         ranks,
         reduce_latency: Duration::from_secs_f64(latency_us * 1e-6),
+        transport,
+        tcp: TcpCfg {
+            connect_timeout: Duration::from_millis(connect_ms),
+            recv_timeout: Duration::from_millis(recv_ms),
+        },
     })
+}
+
+/// Worker placement from `--rank`/`--listen`/`--peers`. `None` when
+/// `--rank` is absent (ordinary in-process run).
+fn node_from_args(args: &Args, method: Method, dist: &DistOpts) -> Result<Option<NodeCfg>> {
+    let Some(rank_s) = args.flag("rank") else {
+        return Ok(None);
+    };
+    let rank: usize = rank_s
+        .parse()
+        .map_err(|_| Error::Config(format!("--rank: cannot parse '{rank_s}'")))?;
+    if !method.is_dist() {
+        return Err(Error::Config(format!(
+            "--rank only applies to the dist-* methods (got --method {method})"
+        )));
+    }
+    if dist.transport != TransportKind::Tcp {
+        return Err(Error::Config(
+            "--rank requires --transport tcp (multi-process workers mesh over sockets)".into(),
+        ));
+    }
+    if dist.ranks == 0 {
+        return Err(Error::Config(
+            "--rank requires an explicit --ranks N (every worker must agree on the job size)"
+                .into(),
+        ));
+    }
+    if rank >= dist.ranks {
+        return Err(Error::Config(format!(
+            "--rank: {rank} out of range for --ranks {}",
+            dist.ranks
+        )));
+    }
+    let listen = args.flag_or("listen", "127.0.0.1:0");
+    if rank == 0 && listen.ends_with(":0") {
+        return Err(Error::Config(
+            "--rank 0 needs an explicit --listen HOST:PORT — this is the rendezvous \
+             address the peer workers dial"
+                .into(),
+        ));
+    }
+    let host = match args.flag("peers") {
+        Some(h) => h.to_string(),
+        None if rank == 0 => listen.clone(),
+        None => {
+            return Err(Error::Config(
+                "--peers HOST:PORT (the rank-0 rendezvous address) is required for --rank >= 1"
+                    .into(),
+            ))
+        }
+    };
+    Ok(Some(NodeCfg {
+        rank,
+        ranks: dist.ranks,
+        listen,
+        host,
+    }))
+}
+
+/// Deprecated shim kept for one release: the solver options are now part
+/// of [`RunConfig`] (`RunConfig::from_args(args)?.opts()`).
+#[deprecated(note = "use RunConfig::from_args; this reads the same flags")]
+pub fn solve_opts(args: &Args) -> Result<SolveOpts> {
+    solve_from_args(args)
+}
+
+/// Deprecated shim kept for one release: the distribution options are now
+/// part of [`RunConfig`] (`RunConfig::from_args(args)?.dist`).
+#[deprecated(note = "use RunConfig::from_args; this reads the same flags")]
+pub fn dist_opts(args: &Args) -> Result<DistOpts> {
+    dist_from_args(args)
 }
 
 /// Build a matrix from a spec string (see module docs for the grammar).
@@ -214,46 +458,166 @@ mod tests {
             "solve --tol 1e-7 --max-iters 50 --threads 2 --ranks 3 --reduce-latency-us 250",
         ))
         .unwrap();
-        let so = solve_opts(&a).unwrap();
+        let so = solve_from_args(&a).unwrap();
         assert_eq!(so.tol, 1e-7);
         assert_eq!(so.max_iters, 50);
         assert_eq!(so.threads, 2);
-        let d = dist_opts(&a).unwrap();
+        let d = dist_from_args(&a).unwrap();
         assert_eq!(d.ranks, 3);
         assert!((d.reduce_latency.as_secs_f64() - 250e-6).abs() < 1e-12);
         // defaults
-        let d = dist_opts(&Args::parse(argv("solve")).unwrap()).unwrap();
+        let d = dist_from_args(&Args::parse(argv("solve")).unwrap()).unwrap();
         assert_eq!(d.ranks, 0);
         assert_eq!(d.reduce_latency, Duration::ZERO);
+        assert_eq!(d.transport, TransportKind::Chan);
         // negative and Duration-overflowing latencies rejected
         let bad = Args::parse(argv("solve --reduce-latency-us -5")).unwrap();
-        assert!(dist_opts(&bad).is_err());
+        assert!(dist_from_args(&bad).is_err());
         let huge = Args::parse(argv("solve --reduce-latency-us 1e30")).unwrap();
-        assert!(dist_opts(&huge).is_err());
+        assert!(dist_from_args(&huge).is_err());
     }
 
     #[test]
     fn pipeline_depth_and_ranks_validation() {
         // valid explicit depth
         let a = Args::parse(argv("solve --pipeline-depth 3 --max-iters 50")).unwrap();
-        assert_eq!(solve_opts(&a).unwrap().pipeline_depth, 3);
+        assert_eq!(solve_from_args(&a).unwrap().pipeline_depth, 3);
         // default depth 1 when the flag is omitted
         let a = Args::parse(argv("solve")).unwrap();
-        assert_eq!(solve_opts(&a).unwrap().pipeline_depth, 1);
+        assert_eq!(solve_from_args(&a).unwrap().pipeline_depth, 1);
         // depth 0 rejected
         let a = Args::parse(argv("solve --pipeline-depth 0")).unwrap();
-        let e = format!("{}", solve_opts(&a).unwrap_err());
+        let e = format!("{}", solve_from_args(&a).unwrap_err());
         assert!(e.contains("pipeline-depth"), "{e}");
         // depth beyond the iteration budget rejected
         let a = Args::parse(argv("solve --pipeline-depth 60 --max-iters 50")).unwrap();
-        let e = format!("{}", solve_opts(&a).unwrap_err());
+        let e = format!("{}", solve_from_args(&a).unwrap_err());
         assert!(e.contains("iteration budget"), "{e}");
         // explicit --ranks 0 rejected; omitted flag still means auto (0)
         let a = Args::parse(argv("solve --ranks 0")).unwrap();
-        let e = format!("{}", dist_opts(&a).unwrap_err());
+        let e = format!("{}", dist_from_args(&a).unwrap_err());
         assert!(e.contains("ranks"), "{e}");
         let a = Args::parse(argv("solve")).unwrap();
-        assert_eq!(dist_opts(&a).unwrap().ranks, 0);
+        assert_eq!(dist_from_args(&a).unwrap().ranks, 0);
+    }
+
+    #[test]
+    fn run_config_defaults_and_flags() {
+        let rc = RunConfig::from_args(&Args::parse(argv("solve")).unwrap()).unwrap();
+        assert_eq!(rc.matrix, "poisson2d:64x64");
+        assert_eq!(rc.method, Method::Auto);
+        assert!(rc.backend.is_none());
+        assert!(rc.node.is_none());
+        assert_eq!(rc.rr_interval, 50);
+        assert!(!rc.keep_trace);
+
+        let rc = RunConfig::from_args(
+            &Args::parse(argv(
+                "solve --matrix poisson125:8 --method dist-pipecg-l --backend native \
+                 --transport tcp --ranks 3 --connect-timeout-ms 500 --recv-timeout-ms 2000 \
+                 --gpu-mem 1024 --trace t.json",
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(rc.method, Method::DistPipecgL);
+        assert_eq!(rc.dist.transport, TransportKind::Tcp);
+        assert_eq!(rc.dist.tcp.connect_timeout, Duration::from_millis(500));
+        assert_eq!(rc.dist.tcp.recv_timeout, Duration::from_millis(2000));
+        assert_eq!(rc.gpu_mem, Some(1024));
+        assert!(rc.keep_trace);
+        // unknown method/transport errors name the valid tokens
+        let e = RunConfig::from_args(&Args::parse(argv("solve --method warp")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("dist-pipecg") && e.contains("h3"), "{e}");
+        let bad = Args::parse(argv("solve --transport carrier-pigeon")).unwrap();
+        let e = RunConfig::from_args(&bad).unwrap_err().to_string();
+        assert!(e.contains("chan") && e.contains("tcp"), "{e}");
+        // zero timeouts rejected
+        let e = dist_from_args(&Args::parse(argv("solve --recv-timeout-ms 0")).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("timeout"), "{e}");
+    }
+
+    #[test]
+    fn worker_placement_validation() {
+        let parse = |s: &str| RunConfig::from_args(&Args::parse(argv(s)).unwrap());
+        // a complete worker spec
+        let rc = parse(
+            "solve --method dist-pipecg --transport tcp --ranks 3 --rank 1 \
+             --peers 127.0.0.1:9410",
+        )
+        .unwrap();
+        let node = rc.node.unwrap();
+        assert_eq!((node.rank, node.ranks), (1, 3));
+        assert_eq!(node.listen, "127.0.0.1:0");
+        assert_eq!(node.host, "127.0.0.1:9410");
+        // rank 0 may omit --peers but must pin its listen port
+        let rc = parse(
+            "solve --method dist-pipecg --transport tcp --ranks 2 --rank 0 \
+             --listen 127.0.0.1:9411",
+        )
+        .unwrap();
+        assert_eq!(rc.node.unwrap().host, "127.0.0.1:9411");
+        let e = parse("solve --method dist-pipecg --transport tcp --ranks 2 --rank 0")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--listen"), "{e}");
+        // --rank needs a dist method, tcp, explicit ranks, peers, and range
+        let e = parse("solve --method h1 --transport tcp --ranks 2 --rank 1")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("dist-*"), "{e}");
+        let e = parse("solve --method dist-pipecg --ranks 2 --rank 1")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--transport tcp"), "{e}");
+        let e = parse("solve --method dist-pipecg --transport tcp --rank 1")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--ranks"), "{e}");
+        let e = parse("solve --method dist-pipecg --transport tcp --ranks 2 --rank 1")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--peers"), "{e}");
+        let e = parse(
+            "solve --method dist-pipecg --transport tcp --ranks 2 --rank 5 \
+             --peers 127.0.0.1:9410",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("out of range"), "{e}");
+    }
+
+    #[test]
+    fn builder_composes_and_runner_builds() {
+        let rc = RunConfig::new("poisson2d:8x8")
+            .with_method(Method::DistPcg)
+            .with_backend("native")
+            .with_ranks(2)
+            .with_gpu_mem(1 << 20)
+            .with_opts(SolveOpts {
+                tol: 1e-8,
+                ..Default::default()
+            });
+        assert_eq!(rc.opts().tol, 1e-8);
+        assert_eq!(rc.dist.ranks, 2);
+        assert_eq!(rc.backend_name(), "native");
+        assert_eq!(rc.build().unwrap().n, 64);
+        assert!(rc.runner().is_ok());
+        assert!(RunConfig::new("x").with_backend("cuda").runner().is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_read_the_same_flags() {
+        let a = Args::parse(argv("solve --tol 1e-7 --ranks 3 --transport tcp")).unwrap();
+        assert_eq!(solve_opts(&a).unwrap().tol, solve_from_args(&a).unwrap().tol);
+        let d = dist_opts(&a).unwrap();
+        assert_eq!(d.ranks, 3);
+        assert_eq!(d.transport, TransportKind::Tcp);
     }
 
     #[test]

@@ -1,0 +1,557 @@
+//! Multi-process distributed execution: one `hypipe` worker per rank,
+//! meshed over the TCP transport.
+//!
+//! [`run_node`] is the worker body: it builds this rank's transport
+//! endpoint (rank 0 hosts the rendezvous, everyone else joins), runs the
+//! method's rank solve via the same dispatch table the in-process driver
+//! uses ([`super::solve_rank_for`]), then gathers solution slices and
+//! per-rank metrics to rank 0 over ordinary tagged fabric messages —
+//! so only rank 0 returns a [`DistReport`], exactly one report per job.
+//!
+//! [`launch`] is the convenience spawner for loopback runs: it picks a
+//! free rendezvous port, spawns `--ranks` copies of the current
+//! executable as `solve --rank R ...` workers, supervises them, and (when
+//! tracing) merges the per-rank chrome traces into one file whose `pid`
+//! lanes are the ranks.
+//!
+//! Fabric-level failures (peer death, handshake timeouts) surface as
+//! [`Error::Transport`](crate::Error::Transport) from `run_node` instead
+//! of panics: the rank body's internal transport panics are caught here
+//! and unwrapped back into the error they carry.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{DistReport, RankMetrics};
+use crate::precond::Jacobi;
+use crate::runtime::Method;
+use crate::solver::StopReason;
+use crate::sparse::Csr;
+use crate::trace;
+use crate::util::json::{self, arr, obj, s, Json};
+use crate::{Error, Result};
+
+use super::fabric::{FabricCfg, FabricFailure, RankCtx};
+use super::part::DistPlan;
+use super::transport::{TcpTransport, TransportKind};
+use super::{assemble, dist_label, solve_rank_for, DistOpts, RankOut};
+
+/// Gather tag for a rank's solution slice (ASCII `GATX`).
+const TAG_GATHER_X: u64 = 0x4741_5458;
+/// Gather tag for a rank's encoded outcome + metrics (ASCII `GATM`).
+const TAG_GATHER_M: u64 = 0x4741_544D;
+
+/// This process's place in a multi-process job.
+#[derive(Debug, Clone)]
+pub struct NodeCfg {
+    /// This worker's rank (rank 0 hosts the rendezvous and assembles the
+    /// report).
+    pub rank: usize,
+    /// Total worker count — every worker must agree.
+    pub ranks: usize,
+    /// Address this worker listens on (`host:port`; port 0 = ephemeral).
+    /// For rank 0 this *is* the rendezvous address the peers dial.
+    pub listen: String,
+    /// The rank-0 rendezvous address (`--peers`); unused by rank 0.
+    pub host: String,
+}
+
+/// Run one rank of a distributed solve as a TCP worker. Returns
+/// `Ok(Some(report))` on rank 0, `Ok(None)` on every other rank, and
+/// `Err` if the method is not distributed, the node config is
+/// inconsistent, or the fabric fails (peer lost, rendezvous timeout).
+pub fn run_node(
+    m: Method,
+    a: &Csr,
+    b: &[f64],
+    pc: &Jacobi,
+    opts: &DistOpts,
+    node: &NodeCfg,
+) -> Result<Option<DistReport>> {
+    if !m.is_dist() {
+        return Err(Error::Config(format!(
+            "method '{m}' is not distributed — `--rank` only applies to the dist-* methods"
+        )));
+    }
+    if node.ranks < 1 {
+        return Err(Error::Config("node: ranks must be >= 1".into()));
+    }
+    if node.rank >= node.ranks {
+        return Err(Error::Config(format!(
+            "node: rank {} out of range for {} ranks",
+            node.rank, node.ranks
+        )));
+    }
+    if node.ranks > a.n {
+        return Err(Error::Config(format!(
+            "node: {} ranks for a {}-row system (workers cannot share rows)",
+            node.ranks, a.n
+        )));
+    }
+    // The rank body reports transport failures by panicking with a
+    // `FabricFailure` (it has no Result channel of its own); unwrap that
+    // back into the error it carries.
+    match catch_unwind(AssertUnwindSafe(|| run_node_inner(m, a, b, pc, opts, node))) {
+        Ok(r) => r,
+        Err(p) => match p.downcast::<FabricFailure>() {
+            Ok(f) => Err(f.0),
+            Err(p) => resume_unwind(p),
+        },
+    }
+}
+
+fn run_node_inner(
+    m: Method,
+    a: &Csr,
+    b: &[f64],
+    pc: &Jacobi,
+    opts: &DistOpts,
+    node: &NodeCfg,
+) -> Result<Option<DistReport>> {
+    let wall = Instant::now();
+    let plan = DistPlan::build(a, node.ranks);
+    let tp = if node.rank == 0 {
+        let listener = std::net::TcpListener::bind(&node.listen).map_err(|e| {
+            Error::Transport(format!("rank 0: cannot bind rendezvous {}: {e}", node.listen))
+        })?;
+        TcpTransport::host(listener, node.ranks, opts.tcp.clone())?
+    } else {
+        TcpTransport::join(
+            node.rank,
+            node.ranks,
+            &node.listen,
+            &node.host,
+            opts.tcp.clone(),
+        )?
+    };
+    let cfg = FabricCfg {
+        reduce_latency: opts.reduce_latency,
+        transport: TransportKind::Tcp,
+        tcp: opts.tcp.clone(),
+    };
+    let mut ctx = RankCtx::from_transport(Box::new(tp), cfg);
+    trace::label_thread(node.rank as u32 + 1, &format!("rank {}", node.rank));
+    let out = solve_rank_for(m, &mut ctx, &plan.blocks[node.rank], b, pc, &opts.base);
+
+    if node.rank != 0 {
+        // Ship our slice and accounting to rank 0, then sync the epilogue
+        // so no worker tears its sockets down mid-gather.
+        ctx.send(0, TAG_GATHER_X, out.x.clone());
+        ctx.send(0, TAG_GATHER_M, encode_out(&out));
+        ctx.barrier();
+        return Ok(None);
+    }
+    let mut outs = vec![out];
+    for r in 1..node.ranks {
+        let x = ctx.recv(r, TAG_GATHER_X);
+        let meta = ctx.recv(r, TAG_GATHER_M);
+        outs.push(decode_out(r, &plan, x, &meta)?);
+    }
+    ctx.barrier();
+    let report = assemble(
+        &dist_label(m, &opts.base),
+        a,
+        b,
+        outs,
+        wall.elapsed().as_secs_f64(),
+        opts.reduce_latency,
+    );
+    Ok(Some(report))
+}
+
+/// Stop reason as a wire scalar (the gather payload is a plain f64 vec).
+fn stop_code(s: StopReason) -> f64 {
+    match s {
+        StopReason::Converged => 0.0,
+        StopReason::MaxIterations => 1.0,
+        StopReason::Breakdown => 2.0,
+        StopReason::Diverged => 3.0,
+    }
+}
+
+fn stop_from_code(c: f64) -> Result<StopReason> {
+    match c as i64 {
+        0 => Ok(StopReason::Converged),
+        1 => Ok(StopReason::MaxIterations),
+        2 => Ok(StopReason::Breakdown),
+        3 => Ok(StopReason::Diverged),
+        other => Err(Error::Transport(format!(
+            "gather: bad stop-reason code {other}"
+        ))),
+    }
+}
+
+/// Outcome + metrics of one rank as a flat f64 vector. Counters ride as
+/// exact small integers (f64 is exact through 2⁵³); history/telemetry are
+/// bit-identical on every rank, so only rank 0's copies are kept.
+fn encode_out(o: &RankOut) -> Vec<f64> {
+    vec![
+        o.iterations as f64,
+        o.final_norm,
+        if o.converged { 1.0 } else { 0.0 },
+        stop_code(o.stop),
+        o.metrics.compute_s,
+        o.metrics.halo_s,
+        o.metrics.reduce_wait_s,
+        o.metrics.reduce_inflight_s,
+        o.metrics.reduces as f64,
+        o.metrics.halo_doubles_sent as f64,
+        o.metrics.socket_wait_s,
+    ]
+}
+
+fn decode_out(rank: usize, plan: &DistPlan, x: Vec<f64>, v: &[f64]) -> Result<RankOut> {
+    if v.len() != 11 {
+        return Err(Error::Transport(format!(
+            "gather: rank {rank} metrics frame has {} fields, expected 11",
+            v.len()
+        )));
+    }
+    let blk = &plan.blocks[rank];
+    if x.len() != blk.nloc() {
+        return Err(Error::Transport(format!(
+            "gather: rank {rank} sent {} solution rows, owns {}",
+            x.len(),
+            blk.nloc()
+        )));
+    }
+    Ok(RankOut {
+        x,
+        iterations: v[0] as usize,
+        final_norm: v[1],
+        converged: v[2] != 0.0,
+        stop: stop_from_code(v[3])?,
+        history: Vec::new(),
+        metrics: RankMetrics {
+            rank,
+            rows: blk.nloc(),
+            nnz: blk.panel.nnz(),
+            compute_s: v[4],
+            halo_s: v[5],
+            reduce_wait_s: v[6],
+            reduce_inflight_s: v[7],
+            reduces: v[8] as u64,
+            halo_doubles_sent: v[9] as u64,
+            socket_wait_s: v[10],
+        },
+        telemetry: None,
+    })
+}
+
+/// What `hypipe launch` spawns: `ranks` copies of `exe` running
+/// `solve <passthrough> --transport tcp --rank R ...` over a fresh
+/// loopback rendezvous port.
+#[derive(Debug, Clone)]
+pub struct LaunchCfg {
+    pub ranks: usize,
+    /// Worker executable (normally [`std::env::current_exe`]).
+    pub exe: std::path::PathBuf,
+    /// Flags forwarded verbatim to every worker (matrix, method, solver
+    /// options) — must not contain the rank/transport flags the launcher
+    /// appends itself.
+    pub passthrough: Vec<String>,
+    /// When set, each worker writes `<path>.rank<R>` and the launcher
+    /// merges them into `<path>` (one chrome trace, pid lane = rank + 1).
+    pub trace_out: Option<String>,
+}
+
+/// Pick a free loopback port by binding an ephemeral listener and
+/// releasing it. Racy in principle (the port could be re-taken before the
+/// rank-0 worker binds), benign in practice for local launches.
+fn free_loopback_addr() -> Result<String> {
+    let l = std::net::TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| Error::Transport(format!("launch: cannot probe a loopback port: {e}")))?;
+    Ok(l.local_addr()
+        .map_err(|e| Error::Transport(format!("launch: listener address: {e}")))?
+        .to_string())
+}
+
+/// Spawn and supervise one worker process per rank on loopback TCP.
+/// Rank 0 inherits stdout/stderr (it prints the report); the other
+/// workers' stdout is discarded. The first worker failure kills the
+/// remaining workers and surfaces as an error.
+pub fn launch(cfg: &LaunchCfg) -> Result<()> {
+    if cfg.ranks < 1 {
+        return Err(Error::Config("launch: --ranks must be >= 1".into()));
+    }
+    let host = free_loopback_addr()?;
+    let mut children = Vec::with_capacity(cfg.ranks);
+    for r in 0..cfg.ranks {
+        let mut cmd = Command::new(&cfg.exe);
+        cmd.arg("solve")
+            .args(&cfg.passthrough)
+            .args(["--transport", "tcp"])
+            .args(["--ranks", &cfg.ranks.to_string()])
+            .args(["--rank", &r.to_string()])
+            .args(["--listen", if r == 0 { &host } else { "127.0.0.1:0" }])
+            .args(["--peers", &host]);
+        if let Some(t) = &cfg.trace_out {
+            cmd.args(["--trace-out", &format!("{t}.rank{r}")]);
+        }
+        if r != 0 {
+            cmd.stdout(Stdio::null());
+        }
+        let child = cmd
+            .spawn()
+            .map_err(|e| Error::Transport(format!("launch: cannot spawn rank {r} worker: {e}")))?;
+        children.push((r, child, false));
+    }
+    let mut failure: Option<String> = None;
+    while children.iter().any(|(_, _, done)| !done) {
+        let mut progressed = false;
+        for (r, child, done) in children.iter_mut() {
+            if *done {
+                continue;
+            }
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    *done = true;
+                    progressed = true;
+                    if !status.success() && failure.is_none() {
+                        failure = Some(format!("launch: rank {r} worker exited with {status}"));
+                    }
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    *done = true;
+                    progressed = true;
+                    if failure.is_none() {
+                        failure = Some(format!("launch: waiting on rank {r} worker: {e}"));
+                    }
+                }
+            }
+        }
+        if failure.is_some() {
+            // One worker is gone; its peers will hang on their sockets
+            // until their recv timeout — don't wait for that.
+            for (_, child, done) in children.iter_mut() {
+                if !*done {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    *done = true;
+                }
+            }
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(30));
+        }
+    }
+    if let Some(msg) = failure {
+        return Err(Error::Transport(msg));
+    }
+    if let Some(t) = &cfg.trace_out {
+        merge_traces(t, cfg.ranks)?;
+    }
+    Ok(())
+}
+
+/// Merge the per-rank chrome traces `<base>.rank<R>` into `<base>` and
+/// remove the parts. Each worker already labels its process lane
+/// (`pid = rank + 1`), so concatenating the event arrays is the whole
+/// merge.
+fn merge_traces(base: &str, ranks: usize) -> Result<()> {
+    let mut events: Vec<Json> = Vec::new();
+    for r in 0..ranks {
+        let part = format!("{base}.rank{r}");
+        let txt = std::fs::read_to_string(&part)?;
+        let j = json::parse(&txt)
+            .map_err(|e| Error::Config(format!("launch: bad trace {part}: {e}")))?;
+        match j.get("traceEvents").as_arr() {
+            Some(evs) => events.extend(evs.iter().cloned()),
+            None => {
+                return Err(Error::Config(format!(
+                    "launch: trace {part} has no traceEvents array"
+                )))
+            }
+        }
+        let _ = std::fs::remove_file(&part);
+    }
+    let merged = obj(vec![
+        ("displayTimeUnit", s("ms")),
+        ("traceEvents", arr(events)),
+    ]);
+    std::fs::write(base, merged.to_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::SolveOpts;
+    use crate::sparse::gen;
+
+    fn out_for_test() -> RankOut {
+        RankOut {
+            x: vec![1.0, 2.0],
+            iterations: 17,
+            final_norm: 3.25e-6,
+            converged: true,
+            stop: StopReason::Converged,
+            history: vec![1.0],
+            metrics: RankMetrics {
+                rank: 1,
+                rows: 2,
+                nnz: 4,
+                compute_s: 0.5,
+                halo_s: 0.125,
+                reduce_wait_s: 0.25,
+                reduce_inflight_s: 1.0,
+                reduces: 18,
+                halo_doubles_sent: 34,
+                socket_wait_s: 0.0625,
+            },
+            telemetry: None,
+        }
+    }
+
+    #[test]
+    fn gather_encoding_round_trips() {
+        let a = gen::poisson2d_5pt(4, 4);
+        let plan = DistPlan::build(&a, 8);
+        let o = out_for_test();
+        let v = encode_out(&o);
+        let blk = &plan.blocks[1];
+        let x = vec![0.5; blk.nloc()];
+        let d = decode_out(1, &plan, x.clone(), &v).unwrap();
+        assert_eq!(d.x, x);
+        assert_eq!(d.iterations, o.iterations);
+        assert_eq!(d.final_norm.to_bits(), o.final_norm.to_bits());
+        assert!(d.converged);
+        assert_eq!(d.stop, o.stop);
+        assert_eq!(d.metrics.reduces, 18);
+        assert_eq!(d.metrics.halo_doubles_sent, 34);
+        assert_eq!(d.metrics.socket_wait_s, 0.0625);
+        assert_eq!(d.metrics.rows, blk.nloc());
+        // Wrong shapes are errors, not panics.
+        assert!(decode_out(1, &plan, vec![0.0; 1], &v).is_err());
+        assert!(decode_out(1, &plan, vec![0.5; blk.nloc()], &v[..10]).is_err());
+        assert!(stop_from_code(9.0).is_err());
+    }
+
+    #[test]
+    fn run_node_rejects_bad_configs() {
+        let a = gen::poisson2d_5pt(4, 4);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let opts = DistOpts::default();
+        let node = |rank, ranks| NodeCfg {
+            rank,
+            ranks,
+            listen: "127.0.0.1:0".into(),
+            host: "127.0.0.1:1".into(),
+        };
+        let err = run_node(Method::Hybrid1, &a, &b, &pc, &opts, &node(0, 2))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not distributed"), "{err}");
+        assert!(run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node(2, 2)).is_err());
+        assert!(run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node(0, 1000)).is_err());
+    }
+
+    #[test]
+    fn join_against_dead_rendezvous_is_an_error_not_a_panic() {
+        let a = gen::poisson2d_5pt(4, 4);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let opts = DistOpts {
+            tcp: crate::dist::transport::TcpCfg {
+                connect_timeout: Duration::from_millis(200),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        // A port nothing listens on: bind, read the addr, drop.
+        let host = match free_loopback_addr() {
+            Ok(h) => h,
+            Err(_) => {
+                eprintln!("skipping: no loopback networking in this environment");
+                return;
+            }
+        };
+        let node = NodeCfg {
+            rank: 1,
+            ranks: 2,
+            listen: "127.0.0.1:0".into(),
+            host,
+        };
+        let err = run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node).unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+    }
+
+    /// Two real worker bodies in one process over loopback TCP: rank 0
+    /// returns the report, rank 1 returns `None`, and the assembled
+    /// solution is bit-identical to the in-process channel fabric.
+    #[test]
+    fn two_rank_loopback_run_matches_chan_fabric() {
+        let Ok(host) = free_loopback_addr() else {
+            eprintln!("skipping: no loopback networking in this environment");
+            return;
+        };
+        let a = gen::poisson2d_5pt(12, 12);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let opts = DistOpts {
+            base: SolveOpts {
+                threads: 1,
+                ..Default::default()
+            },
+            ranks: 2,
+            ..Default::default()
+        };
+        let (rep0, rep1) = std::thread::scope(|s| {
+            let h1 = s.spawn(|| {
+                let node = NodeCfg {
+                    rank: 1,
+                    ranks: 2,
+                    listen: "127.0.0.1:0".into(),
+                    host: host.clone(),
+                };
+                run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node)
+            });
+            let node0 = NodeCfg {
+                rank: 0,
+                ranks: 2,
+                listen: host.clone(),
+                host: host.clone(),
+            };
+            let r0 = run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node0);
+            (r0, h1.join().unwrap())
+        });
+        let rep = rep0.unwrap().expect("rank 0 returns the report");
+        assert!(rep1.unwrap().is_none(), "rank 1 returns no report");
+        assert!(rep.result.converged);
+        assert_eq!(rep.ranks, 2);
+        assert_eq!(rep.per_rank.len(), 2);
+        let chan = super::super::pipecg::solve(&a, &b, &pc, &opts);
+        assert_eq!(rep.result.iterations, chan.result.iterations);
+        for (t, c) in rep.result.x.iter().zip(&chan.result.x) {
+            assert_eq!(t.to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn merge_traces_concatenates_rank_parts() {
+        let dir = std::env::temp_dir().join(format!(
+            "hypipe-merge-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("trace.json");
+        let base_s = base.to_str().unwrap().to_string();
+        for r in 0..2 {
+            let part = obj(vec![(
+                "traceEvents",
+                arr(vec![obj(vec![("pid", json::n(r as f64 + 1.0))])]),
+            )]);
+            std::fs::write(format!("{base_s}.rank{r}"), part.to_string()).unwrap();
+        }
+        merge_traces(&base_s, 2).unwrap();
+        let merged = json::parse(&std::fs::read_to_string(&base).unwrap()).unwrap();
+        assert_eq!(merged.get("traceEvents").as_arr().unwrap().len(), 2);
+        assert!(!std::path::Path::new(&format!("{base_s}.rank0")).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,5 +1,5 @@
-//! The rank fabric: N ranks as threads connected by typed message
-//! channels — the in-process analogue of an MPI communicator.
+//! The rank fabric: N ranks joined by a pluggable message transport —
+//! the analogue of an MPI communicator.
 //!
 //! [`run`] spawns one OS thread per rank (scoped, so rank bodies may
 //! borrow the matrix and right-hand side from the caller) and hands each a
@@ -14,14 +14,25 @@
 //!   ([`RankCtx::wait`]) — the distributed analogue of `MPI_Iallreduce`,
 //!   the primitive PIPECG hides behind the preconditioner and SPMV.
 //!
+//! The wire underneath is a [`Transport`]: in-process channels
+//! ([`FabricCfg::transport`] = `Chan`, the default) or framed TCP
+//! sockets (`Tcp` — [`run`] then performs a real loopback rendezvous, so
+//! the full wire path is exercised inside one process; multi-process
+//! execution goes through [`crate::dist::exec`]). Reduction
+//! contributions ride the same tagged message stream with the tag's high
+//! bit set ([`REDUCE_BIT`]), which keeps every transport a plain
+//! byte-mover.
+//!
 //! ## Determinism contract
 //!
 //! The allreduce is an all-gather followed by a **rank-ordered sum**:
 //! every rank receives every contribution and accumulates them in rank
 //! order `0, 1, …, N−1`. All ranks therefore compute bit-identical sums,
 //! and a fixed rank count reproduces identical bits run after run
-//! regardless of OS scheduling — the same discipline as the block-ordered
-//! reductions in `util::pool`.
+//! regardless of OS scheduling — or of the transport: `f64` payloads
+//! cross the TCP wire via `to_bits`, so `chan` and `tcp` runs agree bit
+//! for bit (the transport-conformance suite in `tests/dist_exec.rs`
+//! enforces this).
 //!
 //! ## Latency injection
 //!
@@ -35,10 +46,13 @@
 //! pays nothing; a blocking caller pays the full latency.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier};
+use std::net::TcpListener;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::dist::transport::{
+    ChanTransport, TcpCfg, TcpTransport, Transport, TransportKind, WireMsg,
+};
 use crate::metrics::RankMetrics;
 use crate::trace::{self, Cat, LaneKind};
 
@@ -47,51 +61,81 @@ use crate::trace::{self, Cat, LaneKind};
 pub struct FabricCfg {
     /// Injected completion latency for every multi-rank allreduce.
     pub reduce_latency: Duration,
+    /// Which wire joins the ranks (default: in-process channels).
+    pub transport: TransportKind,
+    /// Socket timeouts/retry policy, used when `transport` is TCP.
+    pub tcp: TcpCfg,
 }
 
-/// A message crossing the fabric.
-enum Packet {
-    /// Tagged point-to-point payload.
-    P2p {
-        from: usize,
-        tag: u64,
-        data: Vec<f64>,
-    },
-    /// One rank's contribution to allreduce number `seq`.
-    Reduce {
-        from: usize,
-        seq: u64,
-        data: Vec<f64>,
-        ready_at: Instant,
-    },
-}
+/// Tag-space split: reduction contributions for sequence `seq` travel as
+/// tag `REDUCE_BIT | seq`; user point-to-point tags must stay below the
+/// high bit. (The halo tag and every other tag in this crate are small
+/// ASCII constants, far below it.)
+pub const REDUCE_BIT: u64 = 1 << 63;
 
-/// Contributions gathered so far for one allreduce sequence number.
-struct ReduceSlot {
-    parts: Vec<Option<Vec<f64>>>,
-    ready_at: Instant,
+/// A transport failure escaping a rank body. [`RankCtx`]'s infallible
+/// methods propagate [`crate::Error::Transport`] by unwinding with this
+/// payload; [`run`] turns it into a clean panic message and
+/// `dist::exec::run_node` into an `Err` for the CLI.
+pub struct FabricFailure(pub crate::Error);
+
+fn fail(e: crate::Error) -> ! {
+    std::panic::panic_any(FabricFailure(e))
 }
 
 /// Handle to an in-flight non-blocking allreduce. Completed (and consumed)
 /// by [`RankCtx::wait`]; progress can be polled with [`RankCtx::test`].
+///
+/// Every rank must complete the same reductions: a handle that is simply
+/// dropped leaves its peers' contributions queued and desynchronizes the
+/// rank-ordered sequence stream. Debug builds therefore **panic on drop**
+/// of an incomplete handle; a solver that legitimately abandons a
+/// reduction (e.g. the deep pipeline's tail at convergence) must say so
+/// with [`Allreduce::abandon`].
 #[derive(Debug)]
 pub struct Allreduce {
     seq: u64,
     local: Vec<f64>,
     posted: Instant,
+    armed: bool,
+}
+
+impl Allreduce {
+    /// The fabric-assigned sequence number (the wire tag is
+    /// `REDUCE_BIT | seq`).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Explicitly discard the handle without completing it: every rank
+    /// abandons the same in-flight tail, so the streams stay aligned.
+    pub fn abandon(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for Allreduce {
+    fn drop(&mut self) {
+        if self.armed && cfg!(debug_assertions) && !std::thread::panicking() {
+            panic!(
+                "Allreduce handle dropped without wait(): reduction seq {} (tag {:#x}) is \
+                 still pending — complete it with wait() or discard it on every rank with \
+                 abandon(), or the rank-ordered reduction stream desynchronizes",
+                self.seq,
+                REDUCE_BIT | self.seq
+            );
+        }
+    }
 }
 
 /// One rank's endpoint of the fabric.
 pub struct RankCtx {
-    rank: usize,
-    ranks: usize,
     cfg: FabricCfg,
-    tx: Vec<Sender<Packet>>,
-    rx: Receiver<Packet>,
-    barrier: Arc<Barrier>,
+    tp: Box<dyn Transport>,
     /// Unexpected-message queue, FIFO per (from, tag).
     pend_p2p: Vec<(usize, u64, Vec<f64>)>,
-    pend_reduce: HashMap<u64, ReduceSlot>,
+    /// Contributions gathered so far, per allreduce sequence number.
+    pend_reduce: HashMap<u64, Vec<Option<Vec<f64>>>>,
     next_seq: u64,
     /// Per-rank communication accounting, filled in as the fabric is used
     /// (reduction waits here; halo timing by `part::RankBlock::exchange`).
@@ -99,35 +143,65 @@ pub struct RankCtx {
 }
 
 impl RankCtx {
+    /// Wrap a connected transport endpoint. Used by [`run`] for the
+    /// in-process fabrics and by `dist::exec` for multi-process workers.
+    pub fn from_transport(tp: Box<dyn Transport>, cfg: FabricCfg) -> RankCtx {
+        let rank = tp.rank();
+        RankCtx {
+            cfg,
+            tp,
+            pend_p2p: Vec::new(),
+            pend_reduce: HashMap::new(),
+            next_seq: 0,
+            stats: RankMetrics {
+                rank,
+                ..Default::default()
+            },
+        }
+    }
+
     /// This rank's index, `0 <= rank < ranks`.
     pub fn rank(&self) -> usize {
-        self.rank
+        self.tp.rank()
     }
 
     /// Total rank count.
     pub fn ranks(&self) -> usize {
-        self.ranks
+        self.tp.ranks()
+    }
+
+    /// Wall seconds this rank has spent blocked on the wire itself
+    /// (socket waits; zero on the channel transport).
+    pub fn transport_wait_s(&self) -> f64 {
+        self.tp.wait_s()
+    }
+
+    /// The wire this context runs over.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.tp.kind()
     }
 
     /// Block until every rank has reached the barrier.
-    pub fn barrier(&self) {
+    pub fn barrier(&mut self) {
         let _span = trace::span("barrier", Cat::Net);
-        self.barrier.wait();
+        if let Err(e) = self.tp.barrier() {
+            fail(e);
+        }
     }
 
     /// Post `data` to rank `to` under `tag`. Non-blocking (channels are
-    /// unbounded); sending to self is a bug.
+    /// unbounded; sockets buffer); sending to self is a bug.
     pub fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
-        assert!(to != self.rank, "rank {to}: send to self");
-        assert!(to < self.ranks, "send: rank {to} out of range");
+        assert!(to != self.rank(), "rank {to}: send to self");
+        assert!(to < self.ranks(), "send: rank {to} out of range");
+        assert!(
+            tag & REDUCE_BIT == 0,
+            "send: tag {tag:#x} collides with the reduction stream"
+        );
         trace::mark("send", Cat::Net, tag);
-        self.tx[to]
-            .send(Packet::P2p {
-                from: self.rank,
-                tag,
-                data,
-            })
-            .expect("fabric: peer rank hung up");
+        if let Err(e) = self.tp.send(to, tag, data) {
+            fail(e);
+        }
     }
 
     /// Receive the next message from rank `from` under `tag`, blocking
@@ -143,20 +217,14 @@ impl RankCtx {
             return self.pend_p2p.remove(pos).2;
         }
         loop {
-            let pkt = self.rx.recv().expect("fabric: all peers hung up");
-            match pkt {
-                Packet::P2p {
-                    from: f,
-                    tag: t,
-                    data,
-                } => {
-                    if f == from && t == tag {
-                        return data;
-                    }
-                    self.pend_p2p.push((f, t, data));
-                }
-                pkt => self.stash_reduce(pkt),
+            let msg = match self.tp.recv() {
+                Ok(m) => m,
+                Err(e) => fail(e),
+            };
+            if msg.tag & REDUCE_BIT == 0 && msg.from == from && msg.tag == tag {
+                return msg.data;
             }
+            self.absorb(msg);
         }
     }
 
@@ -167,17 +235,11 @@ impl RankCtx {
         let seq = self.next_seq;
         self.next_seq += 1;
         let posted = Instant::now();
-        let ready_at = posted + self.cfg.reduce_latency;
-        for p in 0..self.ranks {
-            if p != self.rank {
-                self.tx[p]
-                    .send(Packet::Reduce {
-                        from: self.rank,
-                        seq,
-                        data: vals.to_vec(),
-                        ready_at,
-                    })
-                    .expect("fabric: peer rank hung up");
+        for p in 0..self.ranks() {
+            if p != self.rank() {
+                if let Err(e) = self.tp.send(p, REDUCE_BIT | seq, vals.to_vec()) {
+                    fail(e);
+                }
             }
         }
         self.stats.reduces += 1;
@@ -186,6 +248,7 @@ impl RankCtx {
             seq,
             local: vals.to_vec(),
             posted,
+            armed: true,
         }
     }
 
@@ -193,19 +256,20 @@ impl RankCtx {
     /// arrived and the injected latency has elapsed ([`RankCtx::wait`]
     /// would return without blocking).
     pub fn test(&mut self, h: &Allreduce) -> bool {
-        if self.ranks == 1 {
+        if self.ranks() == 1 {
             return true;
         }
-        while let Ok(pkt) = self.rx.try_recv() {
-            match pkt {
-                Packet::P2p { from, tag, data } => self.pend_p2p.push((from, tag, data)),
-                pkt => self.stash_reduce(pkt),
+        loop {
+            match self.tp.try_recv() {
+                Ok(Some(msg)) => self.absorb(msg),
+                Ok(None) => break,
+                Err(e) => fail(e),
             }
         }
-        match self.ready_time(h) {
-            Some(ready) => Instant::now() >= ready,
-            None => false,
+        if !self.have_all_parts(h.seq) {
+            return false;
         }
+        Instant::now() >= self.ready_time(h)
     }
 
     /// Complete an allreduce: block until every contribution has arrived
@@ -214,17 +278,18 @@ impl RankCtx {
     /// `stats.reduce_wait_s` (the *exposed* slice); the full post→complete
     /// interval is charged to `stats.reduce_inflight_s`, so
     /// `inflight − wait` is the latency the solver managed to hide.
-    pub fn wait(&mut self, h: Allreduce) -> Vec<f64> {
+    pub fn wait(&mut self, mut h: Allreduce) -> Vec<f64> {
+        h.armed = false;
         let t0 = Instant::now();
-        if self.ranks > 1 {
+        if self.ranks() > 1 {
             while !self.have_all_parts(h.seq) {
-                let pkt = self.rx.recv().expect("fabric: all peers hung up");
-                match pkt {
-                    Packet::P2p { from, tag, data } => self.pend_p2p.push((from, tag, data)),
-                    pkt => self.stash_reduce(pkt),
-                }
+                let msg = match self.tp.recv() {
+                    Ok(m) => m,
+                    Err(e) => fail(e),
+                };
+                self.absorb(msg);
             }
-            let ready = self.ready_time(&h).unwrap();
+            let ready = self.ready_time(&h);
             let now = Instant::now();
             if ready > now {
                 std::thread::sleep(ready - now);
@@ -240,11 +305,11 @@ impl RankCtx {
         trace::record(LaneKind::Fabric, "allreduce:inflight", Cat::Net, h.posted, end, h.seq);
         let slot = self.pend_reduce.remove(&h.seq);
         let mut out = vec![0.0; h.local.len()];
-        for p in 0..self.ranks {
-            let part: &[f64] = if p == self.rank {
+        for p in 0..self.ranks() {
+            let part: &[f64] = if p == self.rank() {
                 &h.local
             } else {
-                slot.as_ref().expect("multi-rank wait without slot").parts[p]
+                slot.as_ref().expect("multi-rank wait without slot")[p]
                     .as_deref()
                     .expect("missing contribution")
             };
@@ -263,113 +328,137 @@ impl RankCtx {
         self.wait(h)
     }
 
-    fn stash_reduce(&mut self, pkt: Packet) {
-        let Packet::Reduce {
-            from,
-            seq,
-            data,
-            ready_at,
-        } = pkt
-        else {
-            unreachable!("stash_reduce: p2p packet")
-        };
-        let ranks = self.ranks;
-        let slot = self.pend_reduce.entry(seq).or_insert_with(|| ReduceSlot {
-            parts: vec![None; ranks],
-            ready_at,
-        });
-        if ready_at > slot.ready_at {
-            slot.ready_at = ready_at;
+    /// Route one inbound message: reduction contributions to their
+    /// sequence slot, everything else to the unexpected-message queue.
+    fn absorb(&mut self, msg: WireMsg) {
+        if msg.tag & REDUCE_BIT == 0 {
+            self.pend_p2p.push((msg.from, msg.tag, msg.data));
+            return;
         }
+        let seq = msg.tag & !REDUCE_BIT;
+        let ranks = self.ranks();
+        let slot = self
+            .pend_reduce
+            .entry(seq)
+            .or_insert_with(|| vec![None; ranks]);
         assert!(
-            slot.parts[from].replace(data).is_none(),
-            "duplicate allreduce contribution from rank {from} (seq {seq})"
+            slot[msg.from].replace(msg.data).is_none(),
+            "duplicate allreduce contribution from rank {} (seq {seq})",
+            msg.from
         );
     }
 
     fn have_all_parts(&self, seq: u64) -> bool {
         match self.pend_reduce.get(&seq) {
             Some(slot) => slot
-                .parts
                 .iter()
                 .enumerate()
-                .all(|(p, v)| p == self.rank || v.is_some()),
+                .all(|(p, v)| p == self.rank() || v.is_some()),
             None => false,
         }
     }
 
-    /// Earliest completion instant, once all contributions are in.
-    fn ready_time(&self, h: &Allreduce) -> Option<Instant> {
-        if !self.have_all_parts(h.seq) {
-            return None;
-        }
-        let own = h.posted + self.cfg.reduce_latency;
-        Some(self.pend_reduce[&h.seq].ready_at.max(own))
+    /// Completion instant: the injected latency runs from the local
+    /// posting instant (every rank delays its own completion — the
+    /// interconnect stand-in needs no wire clock).
+    fn ready_time(&self, h: &Allreduce) -> Instant {
+        h.posted + self.cfg.reduce_latency
     }
 }
 
 /// Spawn `ranks` threads, run `f` on each with its [`RankCtx`], and return
 /// the per-rank results in rank order. Scoped: `f` may borrow from the
 /// caller. A panicking rank propagates its panic out of `run` (the rank
-/// bodies in this crate run in lockstep, so panics are symmetric).
+/// bodies in this crate run in lockstep, so panics are symmetric);
+/// transport failures surface as a panic naming the failed rank and the
+/// underlying [`crate::Error::Transport`].
+///
+/// With [`FabricCfg::transport`] = `Tcp` the ranks rendezvous over real
+/// loopback sockets — same process, full wire path.
 pub fn run<R, F>(ranks: usize, cfg: &FabricCfg, f: F) -> Vec<R>
 where
     R: Send,
     F: Fn(&mut RankCtx) -> R + Sync,
 {
     assert!(ranks >= 1, "fabric: need at least one rank");
-    let mut txs = Vec::with_capacity(ranks);
-    let mut rxs = Vec::with_capacity(ranks);
-    for _ in 0..ranks {
-        let (tx, rx) = channel();
-        txs.push(tx);
-        rxs.push(rx);
+    match cfg.transport {
+        TransportKind::Chan => {
+            let slots: Vec<Mutex<Option<Box<dyn Transport>>>> = ChanTransport::fabric(ranks)
+                .into_iter()
+                .map(|t| Mutex::new(Some(Box::new(t) as Box<dyn Transport>)))
+                .collect();
+            run_with(ranks, cfg, f, |rank| {
+                Ok(slots[rank]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("transport endpoint taken twice"))
+            })
+        }
+        TransportKind::Tcp => {
+            let listener = TcpListener::bind("127.0.0.1:0")
+                .unwrap_or_else(|e| panic!("fabric: cannot bind loopback rendezvous: {e}"));
+            let host = listener
+                .local_addr()
+                .expect("loopback listener address")
+                .to_string();
+            let slot = Mutex::new(Some(listener));
+            run_with(ranks, cfg, f, |rank| {
+                if rank == 0 {
+                    let l = slot.lock().unwrap().take().expect("listener taken twice");
+                    Ok(Box::new(TcpTransport::host(l, ranks, cfg.tcp.clone())?)
+                        as Box<dyn Transport>)
+                } else {
+                    Ok(Box::new(TcpTransport::join(
+                        rank,
+                        ranks,
+                        "127.0.0.1:0",
+                        &host,
+                        cfg.tcp.clone(),
+                    )?) as Box<dyn Transport>)
+                }
+            })
+        }
     }
-    let barrier = Arc::new(Barrier::new(ranks));
+}
+
+fn run_with<R, F>(
+    ranks: usize,
+    cfg: &FabricCfg,
+    f: F,
+    make: impl Fn(usize) -> crate::Result<Box<dyn Transport>> + Sync,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(&mut RankCtx) -> R + Sync,
+{
     let fref = &f;
+    let mref = &make;
     std::thread::scope(|s| {
-        let handles: Vec<_> = rxs
-            .into_iter()
-            .enumerate()
-            .map(|(rank, rx)| {
-                let mut tx = txs.clone();
-                // Replace the rank's own sender with a disconnected dummy:
-                // sending to self is asserted against, and without a live
-                // self-sender a rank whose peers have all exited (or
-                // panicked) gets a channel error from recv()/wait() instead
-                // of blocking forever.
-                tx[rank] = channel().0;
-                let barrier = barrier.clone();
+        let handles: Vec<_> = (0..ranks)
+            .map(|rank| {
                 let cfg = cfg.clone();
                 s.spawn(move || {
                     trace::label_thread(rank as u32 + 1, &format!("rank {rank}"));
-                    let mut ctx = RankCtx {
-                        rank,
-                        ranks,
-                        cfg,
-                        tx,
-                        rx,
-                        barrier,
-                        pend_p2p: Vec::new(),
-                        pend_reduce: HashMap::new(),
-                        next_seq: 0,
-                        stats: RankMetrics {
-                            rank,
-                            ..Default::default()
-                        },
+                    let tp = match mref(rank) {
+                        Ok(t) => t,
+                        Err(e) => fail(e),
                     };
+                    let mut ctx = RankCtx::from_transport(tp, cfg);
                     fref(&mut ctx)
                 })
             })
             .collect();
-        // Drop the parent's sender clones: once a rank's peers are gone,
-        // its receiver must disconnect (the self-sender above is a dummy),
-        // so a rank blocked in recv()/wait() after an asymmetric peer
-        // panic aborts via the channel error instead of hanging forever.
-        drop(txs);
         handles
             .into_iter()
-            .map(|h| h.join().expect("fabric: rank panicked"))
+            .enumerate()
+            .map(|(rank, h)| match h.join() {
+                Ok(r) => r,
+                Err(p) => match p.downcast::<FabricFailure>() {
+                    Ok(fe) => panic!("fabric: rank {rank} failed: {}", fe.0),
+                    Err(p) => std::panic::resume_unwind(p),
+                },
+            })
             .collect()
     })
 }
@@ -491,6 +580,7 @@ mod tests {
     fn wait_accounts_inflight_time_of_hidden_reductions() {
         let cfg = FabricCfg {
             reduce_latency: Duration::from_millis(20),
+            ..Default::default()
         };
         let stats = run(2, &cfg, |ctx| {
             ctx.barrier();
@@ -512,6 +602,7 @@ mod tests {
     fn injected_latency_delays_blocking_wait() {
         let cfg = FabricCfg {
             reduce_latency: Duration::from_millis(30),
+            ..Default::default()
         };
         let waits = run(2, &cfg, |ctx| {
             let t0 = Instant::now();
@@ -528,6 +619,7 @@ mod tests {
     fn overlapped_work_hides_injected_latency() {
         let cfg = FabricCfg {
             reduce_latency: Duration::from_millis(20),
+            ..Default::default()
         };
         let waits = run(2, &cfg, |ctx| {
             ctx.barrier(); // align the ranks so spawn skew cannot bleed in
@@ -549,6 +641,7 @@ mod tests {
     fn single_rank_reduction_completes_immediately() {
         let cfg = FabricCfg {
             reduce_latency: Duration::from_secs(3600),
+            ..Default::default()
         };
         let out = run(1, &cfg, |ctx| {
             let h = ctx.iallreduce(&[5.0, 6.0]);
@@ -582,6 +675,37 @@ mod tests {
             arrived.fetch_add(1, Ordering::SeqCst);
             ctx.barrier();
             assert_eq!(arrived.load(Ordering::SeqCst), 4);
+        });
+    }
+
+    /// The satellite fix: dropping an incomplete handle is a silent
+    /// desynchronization bug, so debug builds refuse it loudly.
+    #[test]
+    #[cfg(debug_assertions)]
+    fn dropped_allreduce_handle_panics_in_debug() {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(1, &FabricCfg::default(), |ctx| {
+                let h = ctx.iallreduce(&[1.0]);
+                drop(h);
+            });
+        }));
+        let err = res.expect_err("drop guard must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("seq 0"), "unexpected panic payload: {msg}");
+        assert!(msg.contains("abandon"), "unexpected panic payload: {msg}");
+    }
+
+    /// `abandon()` is the sanctioned way out: no panic, on any transport.
+    #[test]
+    fn abandoned_handle_does_not_panic() {
+        run(2, &FabricCfg::default(), |ctx| {
+            let keep = ctx.iallreduce(&[1.0]);
+            let discard = ctx.iallreduce(&[2.0]);
+            discard.abandon();
+            assert_eq!(ctx.wait(keep), vec![2.0]);
         });
     }
 }

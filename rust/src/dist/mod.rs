@@ -6,11 +6,19 @@
 //! overlap only inside one address space; this module makes the hidden
 //! latency real:
 //!
-//! * [`fabric`] — N ranks as threads joined by typed message channels:
-//!   point-to-point send/recv, barrier, and a **non-blocking allreduce**
-//!   whose completion is polled (the `MPI_Iallreduce` analogue), with
+//! * [`transport`] — the pluggable wire: the [`transport::Transport`]
+//!   trait (tagged framed messages, barrier, rank roster) with an
+//!   in-process channel implementation and a real TCP one
+//!   (length-prefixed frames, rank-0 rendezvous, per-peer reader
+//!   threads, configurable timeouts).
+//! * [`fabric`] — N ranks joined by a transport: point-to-point
+//!   send/recv, barrier, and a **non-blocking allreduce** whose
+//!   completion is polled (the `MPI_Iallreduce` analogue), with
 //!   optional injected reduction latency standing in for a cluster
 //!   interconnect.
+//! * [`exec`] — multi-process execution: one `hypipe solve --rank R`
+//!   worker per rank meshed over TCP, plus the `hypipe launch` process
+//!   spawner for loopback runs.
 //! * [`part`] — nnz-balanced 1-D row-block domain decomposition extending
 //!   [`decomp::RowPartition`](crate::decomp::RowPartition) with per-rank
 //!   local CSR blocks, halo maps, and a packed halo exchange run before
@@ -45,11 +53,13 @@
 //! *is* the rank count ([`SolveOpts::threads`] applies to the
 //! single-process methods and is ignored here — one OS thread per rank).
 
+pub mod exec;
 pub mod fabric;
 pub mod part;
 pub mod pcg;
 pub mod pipecg;
 pub mod pipecg_l;
+pub mod transport;
 
 use std::time::{Duration, Instant};
 
@@ -57,9 +67,10 @@ use crate::solver::{SolveOpts, StopReason};
 
 use self::fabric::{FabricCfg, RankCtx};
 use self::part::{DistPlan, RankBlock};
+use self::transport::{TcpCfg, TransportKind};
 
 /// Configuration of a distributed solve: the usual [`SolveOpts`] plus the
-/// rank count and the injected reduction latency.
+/// rank count, the transport, and the injected reduction latency.
 #[derive(Debug, Clone, Default)]
 pub struct DistOpts {
     pub base: SolveOpts,
@@ -70,6 +81,11 @@ pub struct DistOpts {
     /// Injected allreduce completion latency (default zero) — the
     /// interconnect stand-in for overlap experiments.
     pub reduce_latency: Duration,
+    /// Wire joining the ranks: in-process channels (default) or framed
+    /// TCP sockets (real rendezvous over loopback).
+    pub transport: TransportKind,
+    /// Socket timeouts/retry policy for the TCP transport.
+    pub tcp: TcpCfg,
 }
 
 impl DistOpts {
@@ -132,6 +148,7 @@ pub(crate) fn finish_rank(
     let mut metrics = std::mem::take(&mut ctx.stats);
     metrics.rows = blk.nloc();
     metrics.nnz = blk.panel.nnz();
+    metrics.socket_wait_s = ctx.transport_wait_s();
     metrics.compute_s =
         (started.elapsed().as_secs_f64() - metrics.halo_s - metrics.reduce_wait_s).max(0.0);
     RankOut {
@@ -185,6 +202,8 @@ pub(crate) fn drive(
     let plan = DistPlan::build(a, ranks);
     let cfg = FabricCfg {
         reduce_latency: opts.reduce_latency,
+        transport: opts.transport,
+        tcp: opts.tcp.clone(),
     };
     let wall = Instant::now();
     let outs = fabric::run(plan.ranks, &cfg, |ctx| {
@@ -255,6 +274,38 @@ pub(crate) fn assemble(
         wall_seconds,
         reduce_latency_s: reduce_latency.as_secs_f64(),
         per_rank,
+    }
+}
+
+/// One rank's iteration body for a distributed method — the dispatch
+/// table `exec::run_node` shares with the in-process drivers. The method
+/// must be distributed ([`crate::runtime::Method::is_dist`]).
+pub(crate) fn solve_rank_for(
+    m: crate::runtime::Method,
+    ctx: &mut RankCtx,
+    blk: &RankBlock,
+    b: &[f64],
+    pc: &crate::precond::Jacobi,
+    opts: &SolveOpts,
+) -> RankOut {
+    use crate::runtime::Method;
+    match m {
+        Method::DistPcg => pcg::solve_rank(ctx, blk, b, pc, opts),
+        Method::DistPipecgL if opts.pipeline_depth > 1 => {
+            pipecg_l::solve_rank_deep(ctx, blk, b, pc, opts, opts.pipeline_depth)
+        }
+        _ => pipecg::solve_rank(ctx, blk, b, pc, opts),
+    }
+}
+
+/// Report label of a distributed method (depth-qualified for the deep
+/// pipeline), matching what the in-process drivers print.
+pub(crate) fn dist_label(m: crate::runtime::Method, opts: &SolveOpts) -> String {
+    use crate::runtime::Method;
+    match m {
+        Method::DistPcg => "Dist-PCG".to_string(),
+        Method::DistPipecgL => format!("Dist-PIPECG-L{}", opts.pipeline_depth),
+        _ => "Dist-PIPECG".to_string(),
     }
 }
 

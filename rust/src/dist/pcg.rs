@@ -33,7 +33,7 @@ pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &DistOpts) -> crate::metrics
 
 /// One rank's solve; mirrors `solver::pcg` operation for operation on the
 /// local row block.
-fn solve_rank(
+pub(crate) fn solve_rank(
     ctx: &mut RankCtx,
     blk: &RankBlock,
     b: &[f64],

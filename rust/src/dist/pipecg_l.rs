@@ -53,7 +53,7 @@ pub fn solve(a: &Csr, b: &[f64], pc: &Jacobi, opts: &DistOpts) -> crate::metrics
 /// SpMV of the already-known `z_j` hoisted *before* the wait on the
 /// oldest reduction so the in-flight window spans a full `l` iterations
 /// of local work.
-fn solve_rank_deep(
+pub(crate) fn solve_rank_deep(
     ctx: &mut RankCtx,
     blk: &RankBlock,
     b: &[f64],
@@ -212,9 +212,14 @@ fn solve_rank_deep(
         inflight.push_back(ctx.iallreduce(&dots));
         j += 1;
     }
-    // Reductions still in flight are abandoned: every rank breaks at the
-    // same iteration (bit-identical scalar trajectory), so nobody blocks
-    // on the orphaned sequence numbers.
+    // Reductions still in flight are abandoned *explicitly*: every rank
+    // breaks at the same iteration (bit-identical scalar trajectory), so
+    // every rank discards the same orphaned sequence numbers and nobody
+    // blocks on them. (A bare drop would trip the fabric's debug-mode
+    // desynchronization guard.)
+    for h in inflight.drain(..) {
+        h.abandon();
+    }
     finish_rank(
         ctx,
         blk,

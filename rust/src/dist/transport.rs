@@ -1,0 +1,1008 @@
+//! Pluggable rank-fabric transports.
+//!
+//! The fabric ([`super::fabric`]) is transport-agnostic: everything it
+//! needs from the wire is captured by the [`Transport`] trait — tagged
+//! send/recv of framed messages, a barrier, and the rank roster. Two
+//! implementations ship:
+//!
+//! * [`ChanTransport`] — the original in-process `std::sync::mpsc`
+//!   fabric: one unbounded channel per rank, a [`std::sync::Barrier`]
+//!   across all of them. Zero-copy within one address space.
+//! * [`TcpTransport`] — length-prefixed framed messages over
+//!   [`std::net::TcpStream`], one full-mesh connection per rank pair,
+//!   established by a **rank-0 rendezvous handshake**. Per-peer reader
+//!   threads feed a shared inbound queue (the fabric's MPI-style
+//!   unexpected-message queue sits above it), so a blocking receive on
+//!   one peer never starves another. Connect and receive timeouts are
+//!   configurable ([`TcpCfg`]); connection setup retries with backoff.
+//!
+//! ## Wire protocol (TCP)
+//!
+//! Every message is one frame: a little-endian `u32` body length followed
+//! by the body. The first body byte is the frame kind:
+//!
+//! ```text
+//! 0 DATA    [from: u32][tag: u64][n × f64 little-endian payload]
+//! 1 BARRIER [from: u32][epoch: u64]
+//! 2 HELLO   [rank: u32][ranks: u32][listen addr, utf-8]
+//! 3 ROSTER  [ranks: u32] then per rank [len: u16][listen addr, utf-8]
+//! 4 ID      [rank: u32]
+//! ```
+//!
+//! `f64` payloads round-trip through `to_bits`/`from_bits`, so values are
+//! reproduced **bit-exactly** across the wire — the rank-ordered reduction
+//! contract holds bit-for-bit on both transports.
+//!
+//! ## Rendezvous
+//!
+//! Rank 0 listens on a well-known address. Every other rank dials it
+//! (retry + backoff until the connect timeout), binds its own listener,
+//! and sends `HELLO{rank, ranks, listen_addr}`. Once all `N − 1` hellos
+//! are in, rank 0 answers each with the full `ROSTER`; the hello
+//! connection becomes the rank-0 data link. The mesh is completed
+//! directly: rank `i` dials rank `j`'s roster address for `i < j`
+//! (identifying itself with `ID{i}`), rank `j` accepts the lower ranks.
+//!
+//! The barrier is centralized through rank 0: each rank sends
+//! `BARRIER{epoch}` and waits for rank 0's matching release frame.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use crate::trace::{self, Cat, LaneKind};
+use crate::{Error, Result};
+
+/// Which transport the fabric should run over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process `mpsc` channels (single address space). The default.
+    #[default]
+    Chan,
+    /// Framed messages over TCP sockets (loopback or LAN).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Chan => "chan",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<TransportKind> {
+        match s {
+            "chan" => Ok(TransportKind::Chan),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(Error::Config(format!(
+                "unknown transport '{other}' (valid: chan, tcp)"
+            ))),
+        }
+    }
+}
+
+/// One message as seen by the fabric: sender rank, tag, `f64` payload.
+/// Tag space: the high bit is reserved for the fabric's reduction stream
+/// (see `fabric::REDUCE_BIT`); user point-to-point tags stay below it.
+#[derive(Debug)]
+pub struct WireMsg {
+    pub from: usize,
+    pub tag: u64,
+    pub data: Vec<f64>,
+}
+
+/// What the rank fabric needs from a wire.
+///
+/// Implementations deliver messages **FIFO per sender** and never drop
+/// them; `recv`/`try_recv` surface messages from *any* peer (the fabric
+/// keeps the per-(sender, tag) unexpected-message queue above this).
+/// All failures surface as [`Error::Transport`] — no poisoned-channel
+/// panics escape a transport.
+pub trait Transport: Send {
+    /// This endpoint's rank, `0 <= rank < ranks`.
+    fn rank(&self) -> usize;
+    /// Total rank count (the roster size).
+    fn ranks(&self) -> usize;
+    /// Post `data` to rank `to` under `tag`. Non-blocking or
+    /// buffered-blocking (socket backpressure); never to self.
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<()>;
+    /// Block until the next message from any peer arrives.
+    fn recv(&mut self) -> Result<WireMsg>;
+    /// Non-blocking poll for the next message from any peer.
+    fn try_recv(&mut self) -> Result<Option<WireMsg>>;
+    /// Block until every rank has entered the barrier.
+    fn barrier(&mut self) -> Result<()>;
+    /// Cumulative wall seconds this endpoint spent blocked on the wire
+    /// (socket waits; zero for in-process channels).
+    fn wait_s(&self) -> f64 {
+        0.0
+    }
+    /// Transport flavor, for labels and reports.
+    fn kind(&self) -> TransportKind;
+}
+
+// ---------------------------------------------------------------------------
+// ChanTransport
+// ---------------------------------------------------------------------------
+
+/// The in-process channel transport: one unbounded `mpsc` channel per
+/// rank plus a process-wide barrier. Built collectively with
+/// [`ChanTransport::fabric`].
+pub struct ChanTransport {
+    rank: usize,
+    ranks: usize,
+    tx: Vec<Sender<WireMsg>>,
+    rx: Receiver<WireMsg>,
+    barrier: Arc<Barrier>,
+}
+
+impl ChanTransport {
+    /// Build the whole fabric at once: one connected endpoint per rank.
+    /// Each endpoint's own sender slot is a disconnected dummy (sending
+    /// to self is a bug), so a rank whose peers have all exited gets a
+    /// clean channel error instead of blocking forever.
+    pub fn fabric(ranks: usize) -> Vec<ChanTransport> {
+        assert!(ranks >= 1, "transport: need at least one rank");
+        let mut txs = Vec::with_capacity(ranks);
+        let mut rxs = Vec::with_capacity(ranks);
+        for _ in 0..ranks {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let barrier = Arc::new(Barrier::new(ranks));
+        rxs.into_iter()
+            .enumerate()
+            .map(|(rank, rx)| {
+                let mut tx = txs.clone();
+                tx[rank] = channel().0;
+                ChanTransport {
+                    rank,
+                    ranks,
+                    tx,
+                    rx,
+                    barrier: barrier.clone(),
+                }
+            })
+            .collect()
+    }
+}
+
+impl Transport for ChanTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<()> {
+        self.tx[to]
+            .send(WireMsg {
+                from: self.rank,
+                tag,
+                data,
+            })
+            .map_err(|_| {
+                Error::Transport(format!(
+                    "rank {}: peer rank {to} hung up",
+                    self.rank
+                ))
+            })
+    }
+
+    fn recv(&mut self) -> Result<WireMsg> {
+        self.rx.recv().map_err(|_| {
+            Error::Transport(format!("rank {}: all peers hung up", self.rank))
+        })
+    }
+
+    fn try_recv(&mut self) -> Result<Option<WireMsg>> {
+        match self.rx.try_recv() {
+            Ok(m) => Ok(Some(m)),
+            // Disconnected mirrors the original fabric's poll loop: no
+            // more messages now; a later blocking recv reports the error.
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => Ok(None),
+        }
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.barrier.wait();
+        Ok(())
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Chan
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP framing
+// ---------------------------------------------------------------------------
+
+/// Timeouts and retry policy for the TCP transport.
+#[derive(Debug, Clone)]
+pub struct TcpCfg {
+    /// Budget for establishing each connection (dial retries with
+    /// exponential backoff until this deadline) and for each handshake
+    /// read/accept.
+    pub connect_timeout: Duration,
+    /// How long a blocking receive (or barrier) waits for the next frame
+    /// before reporting a hung or dead peer.
+    pub recv_timeout: Duration,
+}
+
+impl Default for TcpCfg {
+    fn default() -> Self {
+        TcpCfg {
+            connect_timeout: Duration::from_secs(10),
+            recv_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Refuse absurd frames before allocating: 1 GiB of payload is far beyond
+/// any reduction or halo message this crate ships.
+const MAX_FRAME: usize = 1 << 30;
+
+const KIND_DATA: u8 = 0;
+const KIND_BARRIER: u8 = 1;
+const KIND_HELLO: u8 = 2;
+const KIND_ROSTER: u8 = 3;
+const KIND_ID: u8 = 4;
+
+/// A parsed frame body.
+enum Frame {
+    Data { from: usize, tag: u64, data: Vec<f64> },
+    Barrier { from: usize, epoch: u64 },
+    Hello { rank: usize, ranks: usize, addr: String },
+    Roster { addrs: Vec<String> },
+    Id { rank: usize },
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Transport("truncated frame".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn utf8(&mut self, n: usize) -> Result<String> {
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::Transport("non-utf8 address in frame".into()))
+    }
+}
+
+fn encode_data(from: usize, tag: u64, data: &[f64]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(1 + 4 + 8 + data.len() * 8);
+    body.push(KIND_DATA);
+    put_u32(&mut body, from as u32);
+    put_u64(&mut body, tag);
+    for v in data {
+        put_u64(&mut body, v.to_bits());
+    }
+    body
+}
+
+fn encode_barrier(from: usize, epoch: u64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(13);
+    body.push(KIND_BARRIER);
+    put_u32(&mut body, from as u32);
+    put_u64(&mut body, epoch);
+    body
+}
+
+fn encode_hello(rank: usize, ranks: usize, addr: &str) -> Vec<u8> {
+    let mut body = Vec::with_capacity(9 + addr.len());
+    body.push(KIND_HELLO);
+    put_u32(&mut body, rank as u32);
+    put_u32(&mut body, ranks as u32);
+    body.extend_from_slice(addr.as_bytes());
+    body
+}
+
+fn encode_roster(addrs: &[String]) -> Vec<u8> {
+    let mut body = vec![KIND_ROSTER];
+    put_u32(&mut body, addrs.len() as u32);
+    for a in addrs {
+        put_u16(&mut body, a.len() as u16);
+        body.extend_from_slice(a.as_bytes());
+    }
+    body
+}
+
+fn encode_id(rank: usize) -> Vec<u8> {
+    let mut body = Vec::with_capacity(5);
+    body.push(KIND_ID);
+    put_u32(&mut body, rank as u32);
+    body
+}
+
+fn parse_frame(body: &[u8]) -> Result<Frame> {
+    let mut c = Cursor::new(body);
+    match c.u8()? {
+        KIND_DATA => {
+            let from = c.u32()? as usize;
+            let tag = c.u64()?;
+            let rest = body.len() - c.pos;
+            if rest % 8 != 0 {
+                return Err(Error::Transport("data frame payload not 8-aligned".into()));
+            }
+            let mut data = Vec::with_capacity(rest / 8);
+            for _ in 0..rest / 8 {
+                data.push(f64::from_bits(c.u64()?));
+            }
+            Ok(Frame::Data { from, tag, data })
+        }
+        KIND_BARRIER => Ok(Frame::Barrier {
+            from: c.u32()? as usize,
+            epoch: c.u64()?,
+        }),
+        KIND_HELLO => {
+            let rank = c.u32()? as usize;
+            let ranks = c.u32()? as usize;
+            let addr = c.utf8(body.len() - c.pos)?;
+            Ok(Frame::Hello { rank, ranks, addr })
+        }
+        KIND_ROSTER => {
+            let n = c.u32()? as usize;
+            let mut addrs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let len = c.u16()? as usize;
+                addrs.push(c.utf8(len)?);
+            }
+            Ok(Frame::Roster { addrs })
+        }
+        KIND_ID => Ok(Frame::Id {
+            rank: c.u32()? as usize,
+        }),
+        k => Err(Error::Transport(format!("unknown frame kind {k}"))),
+    }
+}
+
+fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Outcome of reading one frame: a body, or a clean end-of-stream *at a
+/// frame boundary* (the peer closed after its last complete message).
+enum FrameRead {
+    Frame(Vec<u8>),
+    Eof,
+}
+
+fn read_frame(r: &mut impl Read) -> std::io::Result<FrameRead> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut len4[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(FrameRead::Eof);
+            }
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-frame",
+            ));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(FrameRead::Frame(body))
+}
+
+/// `read_frame` that treats EOF as an error — handshake streams must not
+/// close before the handshake completes.
+fn read_frame_must(r: &mut impl Read, what: &str) -> Result<Vec<u8>> {
+    match read_frame(r) {
+        Ok(FrameRead::Frame(b)) => Ok(b),
+        Ok(FrameRead::Eof) => Err(Error::Transport(format!(
+            "{what}: peer closed during handshake"
+        ))),
+        Err(e) => Err(Error::Transport(format!("{what}: {e}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TcpTransport
+// ---------------------------------------------------------------------------
+
+/// Dial `addr`, retrying with exponential backoff until `timeout`.
+fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    let addrs: Vec<SocketAddr> = addr
+        .to_socket_addrs()
+        .map_err(|e| Error::Transport(format!("cannot resolve '{addr}': {e}")))?
+        .collect();
+    if addrs.is_empty() {
+        return Err(Error::Transport(format!("'{addr}' resolves to nothing")));
+    }
+    let mut backoff = Duration::from_millis(5);
+    let mut last_err = String::new();
+    loop {
+        for sa in &addrs {
+            let remain = deadline.saturating_duration_since(Instant::now());
+            if remain.is_zero() {
+                return Err(Error::Transport(format!(
+                    "connect to {addr} timed out after {timeout:?} ({last_err})"
+                )));
+            }
+            match TcpStream::connect_timeout(sa, remain.min(Duration::from_secs(1))) {
+                Ok(s) => return Ok(s),
+                Err(e) => last_err = e.to_string(),
+            }
+        }
+        if Instant::now() + backoff >= deadline {
+            return Err(Error::Transport(format!(
+                "connect to {addr} timed out after {timeout:?} ({last_err})"
+            )));
+        }
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(Duration::from_millis(250));
+    }
+}
+
+/// Accept one connection before `deadline` (non-blocking poll loop).
+fn accept_with_deadline(l: &TcpListener, deadline: Instant) -> Result<TcpStream> {
+    l.set_nonblocking(true)
+        .map_err(|e| Error::Transport(format!("listener: {e}")))?;
+    loop {
+        match l.accept() {
+            Ok((s, _)) => {
+                l.set_nonblocking(false).ok();
+                s.set_nonblocking(false)
+                    .map_err(|e| Error::Transport(format!("accepted socket: {e}")))?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    l.set_nonblocking(false).ok();
+                    return Err(Error::Transport(
+                        "rendezvous: timed out waiting for peers to connect".into(),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                l.set_nonblocking(false).ok();
+                return Err(Error::Transport(format!("accept failed: {e}")));
+            }
+        }
+    }
+}
+
+/// The socket transport: a full mesh of framed TCP streams with per-peer
+/// reader threads. See the module docs for the wire protocol and
+/// rendezvous. Build with [`TcpTransport::host`] (rank 0) or
+/// [`TcpTransport::join`] (every other rank).
+pub struct TcpTransport {
+    rank: usize,
+    ranks: usize,
+    cfg: TcpCfg,
+    /// Write half per peer (`None` at our own slot).
+    writers: Vec<Option<TcpStream>>,
+    data_rx: Receiver<Result<WireMsg>>,
+    bar_rx: Receiver<(usize, u64)>,
+    /// Keeps `data_rx` connected even after every reader exits, so
+    /// drained queues surface as timeouts rather than disconnects.
+    _data_tx: Sender<Result<WireMsg>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    epoch: u64,
+    wait_s: f64,
+}
+
+impl TcpTransport {
+    /// Rank 0: accept `ranks − 1` hellos on `listener`, broadcast the
+    /// roster, keep the hello connections as data links.
+    pub fn host(listener: TcpListener, ranks: usize, cfg: TcpCfg) -> Result<TcpTransport> {
+        assert!(ranks >= 1, "transport: need at least one rank");
+        let my_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Transport(format!("listener address: {e}")))?
+            .to_string();
+        let mut streams: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+        let mut roster = vec![String::new(); ranks];
+        roster[0] = my_addr;
+        let deadline = Instant::now() + cfg.connect_timeout;
+        for _ in 1..ranks {
+            let mut s = accept_with_deadline(&listener, deadline)?;
+            s.set_read_timeout(Some(cfg.connect_timeout))
+                .map_err(|e| Error::Transport(format!("socket: {e}")))?;
+            let body = read_frame_must(&mut s, "rendezvous hello")?;
+            let Frame::Hello { rank, ranks: theirs, addr } = parse_frame(&body)? else {
+                return Err(Error::Transport("rendezvous: expected HELLO".into()));
+            };
+            if theirs != ranks {
+                return Err(Error::Transport(format!(
+                    "rendezvous: rank {rank} joined with --ranks {theirs}, host has {ranks}"
+                )));
+            }
+            if rank == 0 || rank >= ranks {
+                return Err(Error::Transport(format!(
+                    "rendezvous: joiner claims invalid rank {rank} (ranks {ranks})"
+                )));
+            }
+            if streams[rank].is_some() {
+                return Err(Error::Transport(format!(
+                    "rendezvous: duplicate rank {rank}"
+                )));
+            }
+            roster[rank] = addr;
+            streams[rank] = Some(s);
+        }
+        let roster_frame = encode_roster(&roster);
+        for s in streams.iter_mut().flatten() {
+            write_frame(s, &roster_frame)
+                .map_err(|e| Error::Transport(format!("roster broadcast: {e}")))?;
+        }
+        Self::finish(0, ranks, cfg, streams)
+    }
+
+    /// Rank `1..ranks`: bind a listener at `listen`, dial the rank-0
+    /// rendezvous at `host_addr`, then complete the peer mesh from the
+    /// roster (dial higher ranks, accept lower ones).
+    pub fn join(
+        rank: usize,
+        ranks: usize,
+        listen: &str,
+        host_addr: &str,
+        cfg: TcpCfg,
+    ) -> Result<TcpTransport> {
+        assert!(
+            rank >= 1 && rank < ranks,
+            "join is for ranks 1..ranks (rank 0 hosts)"
+        );
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| Error::Transport(format!("rank {rank}: cannot listen on {listen}: {e}")))?;
+        let my_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Transport(format!("listener address: {e}")))?
+            .to_string();
+        let mut s0 = connect_retry(host_addr, cfg.connect_timeout)?;
+        s0.set_read_timeout(Some(cfg.connect_timeout))
+            .map_err(|e| Error::Transport(format!("socket: {e}")))?;
+        write_frame(&mut s0, &encode_hello(rank, ranks, &my_addr))
+            .map_err(|e| Error::Transport(format!("hello to {host_addr}: {e}")))?;
+        let body = read_frame_must(&mut s0, "rendezvous roster")?;
+        let Frame::Roster { addrs } = parse_frame(&body)? else {
+            return Err(Error::Transport("rendezvous: expected ROSTER".into()));
+        };
+        if addrs.len() != ranks {
+            return Err(Error::Transport(format!(
+                "rendezvous: roster has {} entries, expected {ranks}",
+                addrs.len()
+            )));
+        }
+        let mut streams: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+        streams[0] = Some(s0);
+        // Dial every higher rank; their listeners exist (bound before the
+        // hello), and the OS accept backlog absorbs ordering races.
+        for (j, addr) in addrs.iter().enumerate().skip(rank + 1) {
+            let mut s = connect_retry(addr, cfg.connect_timeout)?;
+            write_frame(&mut s, &encode_id(rank))
+                .map_err(|e| Error::Transport(format!("id to rank {j}: {e}")))?;
+            streams[j] = Some(s);
+        }
+        // Accept every lower rank (1..rank) on our own listener.
+        let deadline = Instant::now() + cfg.connect_timeout;
+        for _ in 1..rank {
+            let mut s = accept_with_deadline(&listener, deadline)?;
+            s.set_read_timeout(Some(cfg.connect_timeout))
+                .map_err(|e| Error::Transport(format!("socket: {e}")))?;
+            let body = read_frame_must(&mut s, "mesh id")?;
+            let Frame::Id { rank: peer } = parse_frame(&body)? else {
+                return Err(Error::Transport("mesh: expected ID".into()));
+            };
+            if peer == 0 || peer >= rank || streams[peer].is_some() {
+                return Err(Error::Transport(format!(
+                    "mesh: unexpected ID from rank {peer}"
+                )));
+            }
+            streams[peer] = Some(s);
+        }
+        Self::finish(rank, ranks, cfg, streams)
+    }
+
+    /// Common tail: clear handshake timeouts, spawn one reader per peer.
+    fn finish(
+        rank: usize,
+        ranks: usize,
+        cfg: TcpCfg,
+        streams: Vec<Option<TcpStream>>,
+    ) -> Result<TcpTransport> {
+        let (data_tx, data_rx) = channel();
+        let (bar_tx, bar_rx) = channel();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut readers = Vec::new();
+        let mut writers = Vec::with_capacity(ranks);
+        for (peer, s) in streams.into_iter().enumerate() {
+            let Some(s) = s else {
+                writers.push(None);
+                continue;
+            };
+            s.set_nodelay(true).ok();
+            // Data-path reads are *blocking* on purpose: a read timeout
+            // mid-frame would lose the bytes already consumed. Timeouts
+            // are enforced at the queue (`recv_timeout`); Drop unblocks
+            // stuck readers with a socket shutdown.
+            s.set_read_timeout(None)
+                .map_err(|e| Error::Transport(format!("socket: {e}")))?;
+            let rs = s
+                .try_clone()
+                .map_err(|e| Error::Transport(format!("socket clone: {e}")))?;
+            let (q, b, sd) = (data_tx.clone(), bar_tx.clone(), shutdown.clone());
+            let h = std::thread::Builder::new()
+                .name(format!("hypipe-tcp-rx-{rank}-{peer}"))
+                .spawn(move || reader_loop(rank, peer, rs, q, b, sd))
+                .map_err(|e| Error::Transport(format!("spawn reader: {e}")))?;
+            readers.push(h);
+            writers.push(Some(s));
+        }
+        Ok(TcpTransport {
+            rank,
+            ranks,
+            cfg,
+            writers,
+            data_rx,
+            bar_rx,
+            _data_tx: data_tx,
+            readers,
+            shutdown,
+            epoch: 0,
+            wait_s: 0.0,
+        })
+    }
+
+    /// Block on the data queue with the receive timeout, charging the
+    /// blocked time to the socket-wait account and the trace's net lane.
+    fn timed_data_recv(&mut self) -> Result<WireMsg> {
+        let t0 = Instant::now();
+        let res = self.data_rx.recv_timeout(self.cfg.recv_timeout);
+        let end = Instant::now();
+        self.wait_s += end.duration_since(t0).as_secs_f64();
+        trace::record(LaneKind::Main, "socket:wait", Cat::Net, t0, end, 0);
+        match res {
+            Ok(m) => m,
+            Err(e) => Err(self.queue_err(e)),
+        }
+    }
+
+    /// Same, for the barrier queue.
+    fn timed_bar_recv(&mut self) -> Result<(usize, u64)> {
+        let t0 = Instant::now();
+        let res = self.bar_rx.recv_timeout(self.cfg.recv_timeout);
+        let end = Instant::now();
+        self.wait_s += end.duration_since(t0).as_secs_f64();
+        trace::record(LaneKind::Main, "socket:wait", Cat::Net, t0, end, 0);
+        res.map_err(|e| self.queue_err(e))
+    }
+
+    fn queue_err(&self, e: RecvTimeoutError) -> Error {
+        match e {
+            RecvTimeoutError::Timeout => Error::Transport(format!(
+                "rank {}: no frame within {:?} — peer hung or dead (raise --recv-timeout-ms \
+                 for slow interconnects)",
+                self.rank, self.cfg.recv_timeout
+            )),
+            RecvTimeoutError::Disconnected => {
+                Error::Transport(format!("rank {}: receive queue closed", self.rank))
+            }
+        }
+    }
+}
+
+fn reader_loop(
+    me: usize,
+    peer: usize,
+    stream: TcpStream,
+    q: Sender<Result<WireMsg>>,
+    bar: Sender<(usize, u64)>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut r = std::io::BufReader::new(stream);
+    loop {
+        let body = match read_frame(&mut r) {
+            Ok(FrameRead::Frame(b)) => b,
+            // Clean close at a frame boundary: the peer finished and
+            // dropped its transport. Everything it sent is already
+            // queued; exit silently (mirrors an mpsc sender dropping).
+            Ok(FrameRead::Eof) => return,
+            Err(e) => {
+                if !shutdown.load(Ordering::Relaxed) {
+                    let _ = q.send(Err(Error::Transport(format!(
+                        "rank {me}: connection to rank {peer} lost: {e}"
+                    ))));
+                }
+                return;
+            }
+        };
+        match parse_frame(&body) {
+            Ok(Frame::Data { from, tag, data }) => {
+                if from != peer {
+                    let _ = q.send(Err(Error::Transport(format!(
+                        "rank {me}: frame from rank {from} on rank {peer}'s connection"
+                    ))));
+                    return;
+                }
+                if q.send(Ok(WireMsg { from, tag, data })).is_err() {
+                    return;
+                }
+            }
+            Ok(Frame::Barrier { from, epoch }) => {
+                if bar.send((from, epoch)).is_err() {
+                    return;
+                }
+            }
+            Ok(_) => {
+                let _ = q.send(Err(Error::Transport(format!(
+                    "rank {me}: unexpected handshake frame from rank {peer} after setup"
+                ))));
+                return;
+            }
+            Err(e) => {
+                let _ = q.send(Err(e));
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<()> {
+        let body = encode_data(self.rank, tag, &data);
+        let rank = self.rank;
+        let w = self.writers[to]
+            .as_mut()
+            .unwrap_or_else(|| panic!("rank {rank}: no connection to rank {to}"));
+        write_frame(w, &body).map_err(|e| {
+            Error::Transport(format!("rank {rank}: send to rank {to} failed: {e}"))
+        })
+    }
+
+    fn recv(&mut self) -> Result<WireMsg> {
+        self.timed_data_recv()
+    }
+
+    fn try_recv(&mut self) -> Result<Option<WireMsg>> {
+        match self.data_rx.try_recv() {
+            Ok(Ok(m)) => Ok(Some(m)),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Ok(None),
+        }
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        if self.ranks == 1 {
+            return Ok(());
+        }
+        if self.rank == 0 {
+            // Collect everyone, then release everyone.
+            for _ in 1..self.ranks {
+                let (from, e) = self.timed_bar_recv()?;
+                if e != epoch {
+                    return Err(Error::Transport(format!(
+                        "barrier: rank {from} at epoch {e}, rank 0 at {epoch}"
+                    )));
+                }
+            }
+            let release = encode_barrier(0, epoch);
+            for p in 1..self.ranks {
+                let w = self.writers[p].as_mut().expect("mesh stream");
+                write_frame(w, &release)
+                    .map_err(|e| Error::Transport(format!("barrier release to {p}: {e}")))?;
+            }
+        } else {
+            let arrive = encode_barrier(self.rank, epoch);
+            let w = self.writers[0].as_mut().expect("rank-0 stream");
+            write_frame(w, &arrive)
+                .map_err(|e| Error::Transport(format!("barrier arrive: {e}")))?;
+            let (_, e) = self.timed_bar_recv()?;
+            if e != epoch {
+                return Err(Error::Transport(format!(
+                    "barrier: release for epoch {e}, expected {epoch}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn wait_s(&self) -> f64 {
+        self.wait_s
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for w in self.writers.iter().flatten() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_frames_roundtrip_bit_exactly() {
+        let vals = [0.1, -3.5e300, f64::MIN_POSITIVE, 0.0, -0.0, 1.0 / 3.0];
+        let body = encode_data(3, 0xDEAD_BEEF, &vals);
+        let Frame::Data { from, tag, data } = parse_frame(&body).unwrap() else {
+            panic!("wrong frame kind");
+        };
+        assert_eq!(from, 3);
+        assert_eq!(tag, 0xDEAD_BEEF);
+        assert_eq!(data.len(), vals.len());
+        for (a, b) in data.iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        let Frame::Hello { rank, ranks, addr } =
+            parse_frame(&encode_hello(2, 5, "127.0.0.1:4000")).unwrap()
+        else {
+            panic!("not hello");
+        };
+        assert_eq!((rank, ranks, addr.as_str()), (2, 5, "127.0.0.1:4000"));
+        let roster = vec!["a:1".to_string(), "b:22".to_string()];
+        let Frame::Roster { addrs } = parse_frame(&encode_roster(&roster)).unwrap() else {
+            panic!("not roster");
+        };
+        assert_eq!(addrs, roster);
+        let Frame::Barrier { from, epoch } = parse_frame(&encode_barrier(1, 9)).unwrap() else {
+            panic!("not barrier");
+        };
+        assert_eq!((from, epoch), (1, 9));
+        let Frame::Id { rank } = parse_frame(&encode_id(4)).unwrap() else {
+            panic!("not id");
+        };
+        assert_eq!(rank, 4);
+        assert!(parse_frame(&[42]).is_err());
+    }
+
+    fn loopback_pair(cfg: TcpCfg) -> Option<(TcpTransport, TcpTransport)> {
+        let listener = TcpListener::bind("127.0.0.1:0").ok()?;
+        let host_addr = listener.local_addr().ok()?.to_string();
+        let joiner_cfg = cfg.clone();
+        let j = std::thread::spawn(move || {
+            TcpTransport::join(1, 2, "127.0.0.1:0", &host_addr, joiner_cfg)
+        });
+        let t0 = TcpTransport::host(listener, 2, cfg).ok()?;
+        let t1 = j.join().ok()?.ok()?;
+        Some((t0, t1))
+    }
+
+    #[test]
+    fn tcp_pair_send_recv_and_barrier() {
+        let Some((mut t0, mut t1)) = loopback_pair(TcpCfg::default()) else {
+            eprintln!("loopback TCP unavailable in this sandbox; skipping");
+            return;
+        };
+        t0.send(1, 7, vec![1.5, -2.5]).unwrap();
+        let m = t1.recv().unwrap();
+        assert_eq!((m.from, m.tag), (0, 7));
+        assert_eq!(m.data, vec![1.5, -2.5]);
+        assert!(t1.try_recv().unwrap().is_none());
+        t1.send(0, 8, vec![9.0]).unwrap();
+        assert_eq!(t0.recv().unwrap().data, vec![9.0]);
+        // Barrier from both sides (different threads, same epoch).
+        let h = std::thread::spawn(move || {
+            t1.barrier().unwrap();
+            t1
+        });
+        t0.barrier().unwrap();
+        let t1 = h.join().unwrap();
+        assert!(t0.wait_s() >= 0.0 && t1.wait_s() >= 0.0);
+    }
+
+    #[test]
+    fn recv_timeout_reports_transport_error() {
+        let cfg = TcpCfg {
+            recv_timeout: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let Some((mut t0, _t1)) = loopback_pair(cfg) else {
+            eprintln!("loopback TCP unavailable in this sandbox; skipping");
+            return;
+        };
+        let err = t0.recv().unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+        assert!(t0.wait_s() >= 0.04, "blocked time not accounted");
+    }
+
+    #[test]
+    fn connect_retry_gives_up_after_timeout() {
+        // Grab a port and close it again: nothing listens there.
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").expect("loopback bind");
+            l.local_addr().unwrap().port()
+        };
+        let t0 = Instant::now();
+        let err = connect_retry(
+            &format!("127.0.0.1:{port}"),
+            Duration::from_millis(200),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+        assert!(t0.elapsed() >= Duration::from_millis(150), "gave up too early");
+    }
+}

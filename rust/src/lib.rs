@@ -55,6 +55,10 @@
 //! ablation_dist_overlap` measures the communication hiding under
 //! injected reduction latency. `SolveOpts::threads` governs the
 //! single-process methods; `--ranks` governs the distributed ones.
+//! The fabric runs over a pluggable [`dist::transport::Transport`]: the
+//! in-process channel transport, or length-prefixed framed messages over
+//! loopback/LAN TCP sockets (`--transport tcp`, `hypipe launch`) — with
+//! the same rank-ordered determinism contract on both.
 //!
 //! ## Quick start
 //!
@@ -99,6 +103,9 @@ pub enum Error {
     Config(String),
     Io(std::io::Error),
     Xla(String),
+    /// Rank-fabric transport failure (peer lost, handshake or socket
+    /// error, receive timeout).
+    Transport(String),
 }
 
 impl std::fmt::Display for Error {
@@ -112,6 +119,7 @@ impl std::fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
         }
     }
 }

@@ -3,20 +3,25 @@
 //! Subcommands:
 //!
 //! * `solve`      — solve one system with a chosen (or auto-selected) method
+//! * `suite`      — run the nine-method comparison on one matrix
+//! * `launch`     — spawn N local TCP workers and run a dist-* method
 //! * `perfmodel`  — run the §IV-C1 calibration and print the decomposition
 //! * `info`       — artifact inventory + cost-model constants
 //! * `gen`        — generate a matrix and write it as MatrixMarket
 //!
+//! Method and option parsing live in [`hypipe::cli::RunConfig`]; method
+//! execution lives in [`hypipe::runtime::Runner`] — this file only maps
+//! subcommands onto those and formats the reports.
+//!
 //! Run `hypipe help` for flags.
 
-use hypipe::baselines::{self, CpuFlavor, GpuFlavor};
-use hypipe::cli::{build_matrix, dist_opts, solve_opts, Args};
+use hypipe::cli::{build_matrix, Args, RunConfig};
 use hypipe::device::costmodel::CostModel;
-use hypipe::device::native::{GpuCompute, NativeAccel};
-use hypipe::device::{DeviceParams, GpuEngine};
-use hypipe::hybrid::{self, select::Method, HybridConfig};
+use hypipe::dist::exec::{self, LaunchCfg};
+use hypipe::hybrid::{self, HybridConfig};
 use hypipe::metrics::RunReport;
 use hypipe::precond::Jacobi;
+use hypipe::runtime::Method;
 use hypipe::sparse::MatrixStats;
 use hypipe::util::human_bytes;
 use hypipe::{runtime, Result};
@@ -29,6 +34,8 @@ USAGE: hypipe <command> [flags]
 COMMANDS
   solve       solve A x = b
   suite       run all nine methods on one matrix, print the comparison
+  launch      spawn N local worker processes over loopback TCP and run a
+              dist-* method across them (one merged report and trace)
   perfmodel   run performance modelling + 2-D decomposition for a matrix
   info        show artifact inventory and cost-model constants
   gen         generate a matrix, write MatrixMarket
@@ -54,10 +61,13 @@ COMMON FLAGS
   --reduce-latency-us L
                     injected allreduce completion latency in µs for the
                     dist-* methods (default 0; models an interconnect)
+  --transport T     chan | tcp — wire joining the fabric ranks (default
+                    chan: in-process channels; tcp: framed loopback/LAN
+                    sockets with a rank-0 rendezvous)
   --gpu-mem BYTES   simulated device memory capacity (default 5 GiB)
   --trace PATH      write a chrome-trace of the *virtual* timeline
   --trace-out PATH  write a chrome-trace of measured wall-clock spans
-                    (solver iterations, pool, halo, allreduce post→complete;
+                    (solver iterations, pool, halo, allreduce, socket waits;
                     HYPIPE_TRACE also honored)
   --telemetry-every K
                     sample the true residual every K iterations and attach
@@ -67,6 +77,18 @@ COMMON FLAGS
                     print a progress line every K iterations (default 0)
   --json            print the report as JSON
 
+MULTI-PROCESS FLAGS (workers; `launch` sets these up for you)
+  --rank R          this process's rank in a multi-process TCP job
+                    (requires --transport tcp and an explicit --ranks)
+  --listen ADDR     address this worker listens on (default 127.0.0.1:0;
+                    rank 0 must pin a port — it hosts the rendezvous)
+  --peers ADDR      the rank-0 rendezvous address (required for rank >= 1)
+  --connect-timeout-ms MS
+                    rendezvous/mesh dial timeout with retry (default 10000)
+  --recv-timeout-ms MS
+                    per-message receive timeout (default 60000; raise for
+                    slow interconnects)
+
 EXAMPLES
   hypipe solve --matrix poisson125:12 --method auto
   hypipe solve --matrix table1:gyro --method h1 --backend native
@@ -74,6 +96,8 @@ EXAMPLES
                --reduce-latency-us 200
   hypipe solve --matrix poisson2d:256x256 --method dist-pipecg-l \\
                --pipeline-depth 3 --ranks 4 --reduce-latency-us 1000
+  hypipe launch --ranks 3 --method dist-pipecg --matrix poisson2d:128x128 \\
+               --trace-out trace.json
   hypipe perfmodel --matrix banded:100000,50
 ";
 
@@ -100,6 +124,7 @@ fn run(args: Args) -> Result<()> {
     match args.command.as_str() {
         "solve" => cmd_solve(&args),
         "suite" => cmd_suite(&args),
+        "launch" => cmd_launch(&args),
         "perfmodel" => cmd_perfmodel(&args),
         "info" => cmd_info(&args),
         "gen" => cmd_gen(&args),
@@ -112,17 +137,6 @@ fn run(args: Args) -> Result<()> {
             std::process::exit(2);
         }
     }
-}
-
-fn gpu_params(args: &Args) -> Result<DeviceParams> {
-    let mut p = DeviceParams::gpu_k20m();
-    if let Some(v) = args.flag("gpu-mem") {
-        p.mem_capacity = Some(
-            v.parse()
-                .map_err(|_| hypipe::Error::Config(format!("--gpu-mem: bad bytes '{v}'")))?,
-        );
-    }
-    Ok(p)
 }
 
 /// Wall-clock tracer destination: `--trace-out PATH`, else `HYPIPE_TRACE`.
@@ -152,31 +166,6 @@ fn print_telemetry(t: &hypipe::trace::IterTelemetry) {
     );
     if let Some(g) = t.max_gap() {
         println!("residual gap    : max true/recurrence ratio {g:.3}");
-    }
-}
-
-fn backend_name(args: &Args) -> String {
-    args.flag_or(
-        "backend",
-        if runtime::artifacts_available() { "pjrt" } else { "native" },
-    )
-}
-
-/// Build the accelerator backend (full matrix resident).
-fn make_accel(
-    args: &Args,
-    a: &hypipe::sparse::Csr,
-    pc: &Jacobi,
-) -> Result<Box<dyn GpuCompute>> {
-    match backend_name(args).as_str() {
-        "native" => Ok(Box::new(NativeAccel::with_matrix(a, &pc.inv_diag))),
-        "pjrt" => {
-            let lib = std::rc::Rc::new(runtime::open_default()?);
-            let mut eng = GpuEngine::new(lib, gpu_params(args)?);
-            eng.load_matrix(a, &pc.inv_diag)?;
-            Ok(Box::new(eng))
-        }
-        other => Err(hypipe::Error::Config(format!("unknown backend '{other}'"))),
     }
 }
 
@@ -246,7 +235,17 @@ fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<(
         );
         let mut t = hypipe::util::table::Table::new(
             "per-rank comm/compute",
-            &["rank", "rows", "nnz", "compute", "halo", "reduce wait", "reduce hidden", "halo sent"],
+            &[
+                "rank",
+                "rows",
+                "nnz",
+                "compute",
+                "halo",
+                "reduce wait",
+                "reduce hidden",
+                "sock wait",
+                "halo sent",
+            ],
         );
         for m in &rep.per_rank {
             t.row(vec![
@@ -257,6 +256,7 @@ fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<(
                 hypipe::util::human_time(m.halo_s),
                 hypipe::util::human_time(m.reduce_wait_s),
                 hypipe::util::human_time(m.reduce_hidden_s()),
+                hypipe::util::human_time(m.socket_wait_s),
                 format!("{} f64", m.halo_doubles_sent),
             ]);
         }
@@ -273,191 +273,55 @@ fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<(
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
-    let spec = args.flag_or("matrix", "poisson2d:64x64");
-    let a = build_matrix(&spec)?;
+    let rc = RunConfig::from_args(args)?;
+    let a = rc.build()?;
     let b = a.mul_ones();
     let pc = Jacobi::from_matrix(&a);
-    let opts = solve_opts(args)?;
-    let cm = CostModel::default();
-    let cfg = HybridConfig {
-        opts: opts.clone(),
-        cm: cm.clone(),
-        keep_trace: args.flag("trace").is_some(),
-    };
-    let stats = MatrixStats::of(&a);
-    let gp = gpu_params(args)?;
-    let fits = gp
-        .mem_capacity
-        .map(|cap| {
-            GpuEngine::required_bytes_full(&a)
-                .map(|need| need <= cap)
-                .unwrap_or(false)
-        })
-        .unwrap_or(true);
-
-    let method = args.flag_or("method", "auto");
     let tout = trace_out(args);
     if tout.is_some() {
         hypipe::trace::reset();
         hypipe::trace::enable();
     }
-    if matches!(method.as_str(), "dist-pipecg" | "dist-pipecg-l" | "dist-pcg") {
-        let dopts = dist_opts(args)?;
-        let rep = match method.as_str() {
-            "dist-pipecg" => hypipe::dist::pipecg::solve(&a, &b, &pc, &dopts),
-            "dist-pipecg-l" => hypipe::dist::pipecg_l::solve(&a, &b, &pc, &dopts),
-            _ => hypipe::dist::pcg::solve(&a, &b, &pc, &dopts),
+    // One TCP worker of a multi-process job: run the rank body; only
+    // rank 0 gets the assembled report back.
+    if let Some(node) = &rc.node {
+        let rep = exec::run_node(rc.method, &a, &b, &pc, &rc.dist, node)?;
+        finish_trace(tout.as_deref())?;
+        return match rep {
+            Some(rep) => print_dist_report(args, &rep),
+            None => Ok(()),
         };
+    }
+    if rc.method.is_dist() {
+        let rep = rc.runner()?.run_dist(rc.method, &a, &b, &pc, &rc.dist)?;
         finish_trace(tout.as_deref())?;
         return print_dist_report(args, &rep);
     }
-    let rep = match method.as_str() {
-        "auto" | "h1" | "h2" | "h3" => {
-            let chosen = match method.as_str() {
-                "h1" => Method::Hybrid1,
-                "h2" => Method::Hybrid2,
-                "h3" => Method::Hybrid3,
-                _ => {
-                    let m = hybrid::select::select(&cm, &stats, fits);
-                    eprintln!("auto-selected {}", m.name());
-                    m
-                }
-            };
-            match chosen {
-                Method::Hybrid1 => {
-                    let mut acc = make_accel(args, &a, &pc)?;
-                    hybrid::hybrid1::solve(&a, &b, &pc, acc.as_mut(), &cfg)?
-                }
-                Method::Hybrid2 => {
-                    let mut acc = make_accel(args, &a, &pc)?;
-                    hybrid::hybrid2::solve(&a, &b, &pc, acc.as_mut(), &cfg)?
-                }
-                Method::Hybrid3 => {
-                    let budget = if fits {
-                        None
-                    } else {
-                        Some(hypipe::perfmodel::rows_fitting(
-                            &a,
-                            gp.mem_capacity.unwrap_or(u64::MAX),
-                        ))
-                    };
-                    let plan = hybrid::hybrid3::plan_capped(
-                        &a,
-                        &cfg,
-                        budget,
-                        gp.mem_capacity,
-                        None,
-                    );
-                    let mut acc: Box<dyn GpuCompute> = match backend_name(args).as_str() {
-                        "native" => Box::new(NativeAccel::with_panel(
-                            &a,
-                            plan.split.n_cpu,
-                            a.n,
-                            &pc.inv_diag,
-                        )),
-                        _ => {
-                            let lib = std::rc::Rc::new(runtime::open_default()?);
-                            let mut eng = GpuEngine::new(lib, gp.clone());
-                            eng.load_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag)?;
-                            Box::new(eng)
-                        }
-                    };
-                    hybrid::hybrid3::solve(&a, &b, &pc, acc.as_mut(), &plan, &cfg)?
-                }
-            }
-        }
-        "pipecg-rr" => {
-            // Residual-replacement PIPECG (accuracy extension; see
-            // solver::pipecg_rr) on the host reference path.
-            let wall = std::time::Instant::now();
-            let rr = hypipe::solver::pipecg_rr::solve(
-                &a,
-                &b,
-                &pc,
-                &hypipe::solver::pipecg_rr::RrOpts {
-                    base: opts.clone(),
-                    interval: args.flag_parse("rr-interval", 50)?,
-                },
-            );
-            let mut tl = hypipe::device::Timeline::new(false);
-            tl.run(
-                hypipe::device::Resource::CpuExec,
-                "pipecg-rr",
-                0.0,
-                &[],
-            );
-            let tr = rr.true_residual(&a, &b);
-            RunReport::from_timeline(
-                "PIPECG-RR",
-                "cpu-only",
-                a.n,
-                a.nnz(),
-                rr,
-                tr,
-                tl,
-                0.0,
-                wall.elapsed().as_secs_f64(),
-                false,
-            )
-        }
-        "pipecg-cpu" => baselines::run_cpu(&a, &b, CpuFlavor::PipecgOpenMp, &opts, &cm),
-        "pcg-cpu-paralution" => baselines::run_cpu(&a, &b, CpuFlavor::ParalutionOpenMp, &opts, &cm),
-        "pcg-cpu-petsc" => baselines::run_cpu(&a, &b, CpuFlavor::PetscMpi, &opts, &cm),
-        "pcg-gpu-paralution" | "pcg-gpu-petsc" | "pipecg-gpu-petsc" => {
-            let flavor = match method.as_str() {
-                "pcg-gpu-paralution" => GpuFlavor::ParalutionPcg,
-                "pcg-gpu-petsc" => GpuFlavor::PetscPcg,
-                _ => GpuFlavor::PetscPipecg,
-            };
-            let mut acc = make_accel(args, &a, &pc)?;
-            baselines::run_gpu(&a, &b, flavor, acc.as_mut(), &opts, &cm)?
-        }
-        other => {
-            return Err(hypipe::Error::Config(format!("unknown method '{other}'")));
-        }
-    };
+    let runner = rc.runner()?;
+    let chosen = runner.resolve(rc.method, &a);
+    if rc.method == Method::Auto {
+        eprintln!("auto-selected {chosen}");
+    }
+    let rep = runner.run(chosen, &a, &b, &pc)?;
     finish_trace(tout.as_deref())?;
     print_report(args, &rep)
 }
 
-/// Run every method on one system and print the comparison table.
+/// Run every single-process method on one system and print the comparison
+/// table (first row — PIPECG-OpenMP — is the speedup baseline).
 fn cmd_suite(args: &Args) -> Result<()> {
-    let spec = args.flag_or("matrix", "poisson125:12");
-    let a = build_matrix(&spec)?;
+    let mut rc = RunConfig::from_args(args)?;
+    if args.flag("matrix").is_none() {
+        rc.matrix = "poisson125:12".into();
+    }
+    let spec = rc.matrix.clone();
+    let a = rc.build()?;
     let b = a.mul_ones();
     let pc = Jacobi::from_matrix(&a);
-    let cfg = HybridConfig {
-        opts: solve_opts(args)?,
-        ..Default::default()
-    };
+    let runner = rc.runner()?;
     let mut set = hypipe::metrics::ReportSet::new(&spec);
-    set.push(baselines::run_cpu(&a, &b, CpuFlavor::PipecgOpenMp, &cfg.opts, &cfg.cm));
-    set.push(baselines::run_cpu(&a, &b, CpuFlavor::ParalutionOpenMp, &cfg.opts, &cfg.cm));
-    set.push(baselines::run_cpu(&a, &b, CpuFlavor::PetscMpi, &cfg.opts, &cfg.cm));
-    for flavor in [GpuFlavor::PetscPipecg, GpuFlavor::PetscPcg, GpuFlavor::ParalutionPcg] {
-        let mut acc = make_accel(args, &a, &pc)?;
-        set.push(baselines::run_gpu(&a, &b, flavor, acc.as_mut(), &cfg.opts, &cfg.cm)?);
-    }
-    {
-        let mut acc = make_accel(args, &a, &pc)?;
-        set.push(hybrid::hybrid1::solve(&a, &b, &pc, acc.as_mut(), &cfg)?);
-    }
-    {
-        let mut acc = make_accel(args, &a, &pc)?;
-        set.push(hybrid::hybrid2::solve(&a, &b, &pc, acc.as_mut(), &cfg)?);
-    }
-    {
-        let plan = hybrid::hybrid3::plan(&a, &cfg, None, None);
-        let mut acc: Box<dyn GpuCompute> = match backend_name(args).as_str() {
-            "native" => Box::new(NativeAccel::with_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag)),
-            _ => {
-                let lib = std::rc::Rc::new(runtime::open_default()?);
-                let mut eng = GpuEngine::new(lib, gpu_params(args)?);
-                eng.load_panel(&a, plan.split.n_cpu, a.n, &pc.inv_diag)?;
-                Box::new(eng)
-            }
-        };
-        set.push(hybrid::hybrid3::solve(&a, &b, &pc, acc.as_mut(), &plan, &cfg)?);
+    for m in Method::suite() {
+        set.push(runner.run(*m, &a, &b, &pc)?);
     }
     let mut t = hypipe::util::table::Table::new(
         &format!("all methods on {spec} (n={}, nnz={})", a.n, a.nnz()),
@@ -476,6 +340,56 @@ fn cmd_suite(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Flags forwarded verbatim to every spawned worker: everything the user
+/// gave except the placement/transport flags the launcher owns.
+fn passthrough_flags(args: &Args) -> Vec<String> {
+    const STRIP: &[&str] = &["ranks", "transport", "rank", "listen", "peers", "trace-out"];
+    let mut out = Vec::new();
+    for (k, v) in &args.flags {
+        if STRIP.contains(&k.as_str()) {
+            continue;
+        }
+        out.push(format!("--{k}"));
+        out.push(v.clone());
+    }
+    for s in &args.switches {
+        if STRIP.contains(&s.as_str()) {
+            continue;
+        }
+        out.push(format!("--{s}"));
+    }
+    out
+}
+
+/// Spawn `--ranks` copies of this executable as loopback-TCP workers for
+/// one dist-* solve; rank 0's report (and the merged trace) surface here.
+fn cmd_launch(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args)?;
+    if !rc.method.is_dist() {
+        return Err(hypipe::Error::Config(format!(
+            "launch runs the dist-* methods across worker processes (got --method {}; \
+             use `hypipe solve` for the single-process methods)",
+            rc.method
+        )));
+    }
+    let ranks = if rc.dist.ranks == 0 {
+        hypipe::dist::default_ranks()
+    } else {
+        rc.dist.ranks
+    };
+    let cfg = LaunchCfg {
+        ranks,
+        exe: std::env::current_exe()?,
+        passthrough: passthrough_flags(args),
+        trace_out: trace_out(args),
+    };
+    exec::launch(&cfg)?;
+    if let Some(t) = &cfg.trace_out {
+        eprintln!("merged wall-clock trace written to {t}");
+    }
     Ok(())
 }
 

@@ -179,6 +179,11 @@ pub struct RankMetrics {
     pub reduces: u64,
     /// Halo f64 entries shipped by this rank over the whole solve.
     pub halo_doubles_sent: u64,
+    /// Wall seconds the transport spent blocked on the wire (socket reads
+    /// for TCP; zero for the in-process channel transport). A subset of
+    /// the waits already counted in `halo_s`/`reduce_wait_s` — reported
+    /// separately so real network stalls are attributable.
+    pub socket_wait_s: f64,
 }
 
 impl RankMetrics {
@@ -205,6 +210,7 @@ impl RankMetrics {
             ("reduce_hidden_s", n(self.reduce_hidden_s())),
             ("reduces", n(self.reduces as f64)),
             ("halo_doubles_sent", n(self.halo_doubles_sent as f64)),
+            ("socket_wait_s", n(self.socket_wait_s)),
         ])
     }
 }
@@ -428,6 +434,7 @@ mod tests {
                     reduce_inflight_s: 2.0,
                     reduces: 10,
                     halo_doubles_sent: 40,
+                    ..Default::default()
                 },
                 RankMetrics {
                     rank: 1,

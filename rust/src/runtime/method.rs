@@ -1,0 +1,420 @@
+//! Unified method dispatch: every solver the CLI, the suite, and the
+//! examples can run, as one [`Method`] enum driven by one [`Runner`] —
+//! replacing the string-matching dispatch that used to be duplicated
+//! across `cmd_solve` and `cmd_suite` in the binary.
+//!
+//! [`Method`] is the *name* surface: `FromStr` accepts exactly the CLI
+//! tokens (`h1`, `dist-pipecg`, …) and an unknown token's error lists
+//! every valid name. [`Runner`] is the *execution* surface: it owns the
+//! backend choice, the device parameters, and the [`HybridConfig`], and
+//! knows how to build the right accelerator for each method — so callers
+//! hold one value instead of re-deriving budgets/plans/accelerators per
+//! call site.
+
+use crate::baselines::{self, CpuFlavor, GpuFlavor};
+use crate::device::native::{GpuCompute, NativeAccel};
+use crate::device::{DeviceParams, GpuEngine, Resource, Timeline};
+use crate::hybrid::{self, select, HybridConfig};
+use crate::metrics::{DistReport, RunReport};
+use crate::precond::Jacobi;
+use crate::sparse::{Csr, MatrixStats};
+use crate::{dist, Error, Result};
+
+/// Every solve method the framework exposes, named by its CLI token.
+///
+/// `Auto` resolves to one of the hybrids via the §IV-C2 selection model
+/// ([`Runner::resolve`]); the `Dist*` methods run over the rank fabric
+/// and go through [`Runner::run_dist`] instead of [`Runner::run`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Cost-model selection among the three hybrids (§IV-C2).
+    Auto,
+    /// Hybrid-PIPECG-1: full matrix on the accelerator.
+    Hybrid1,
+    /// Hybrid-PIPECG-2: accelerator compute, host reductions.
+    Hybrid2,
+    /// Hybrid-PIPECG-3: 2-D split across CPU and accelerator panels.
+    Hybrid3,
+    /// Host PIPECG baseline (PIPECG-OpenMP analogue).
+    PipecgCpu,
+    /// Host PCG baseline (PARALUTION-OpenMP analogue).
+    PcgCpuParalution,
+    /// Host PCG baseline (PETSc-MPI analogue).
+    PcgCpuPetsc,
+    /// Device PIPECG baseline (PETSc analogue).
+    PipecgGpuPetsc,
+    /// Device PCG baseline (PETSc analogue).
+    PcgGpuPetsc,
+    /// Device PCG baseline (PARALUTION analogue).
+    PcgGpuParalution,
+    /// Residual-replacement PIPECG (accuracy extension) on the host.
+    PipecgRr,
+    /// Distributed PIPECG over the rank fabric.
+    DistPipecg,
+    /// Distributed deep-pipelined p(l)-CG.
+    DistPipecgL,
+    /// Distributed blocking PCG (the no-overlap baseline).
+    DistPcg,
+}
+
+impl Method {
+    /// The CLI token (`--method` value) naming this method.
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Auto => "auto",
+            Method::Hybrid1 => "h1",
+            Method::Hybrid2 => "h2",
+            Method::Hybrid3 => "h3",
+            Method::PipecgCpu => "pipecg-cpu",
+            Method::PcgCpuParalution => "pcg-cpu-paralution",
+            Method::PcgCpuPetsc => "pcg-cpu-petsc",
+            Method::PipecgGpuPetsc => "pipecg-gpu-petsc",
+            Method::PcgGpuPetsc => "pcg-gpu-petsc",
+            Method::PcgGpuParalution => "pcg-gpu-paralution",
+            Method::PipecgRr => "pipecg-rr",
+            Method::DistPipecg => "dist-pipecg",
+            Method::DistPipecgL => "dist-pipecg-l",
+            Method::DistPcg => "dist-pcg",
+        }
+    }
+
+    /// All methods, in help-text order.
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Auto,
+            Method::Hybrid1,
+            Method::Hybrid2,
+            Method::Hybrid3,
+            Method::PipecgCpu,
+            Method::PcgCpuParalution,
+            Method::PcgCpuPetsc,
+            Method::PipecgGpuPetsc,
+            Method::PcgGpuPetsc,
+            Method::PcgGpuParalution,
+            Method::PipecgRr,
+            Method::DistPipecg,
+            Method::DistPipecgL,
+            Method::DistPcg,
+        ]
+    }
+
+    /// The nine single-process methods of the paper's comparison suite,
+    /// in its table order (first entry is the speedup baseline).
+    pub fn suite() -> &'static [Method] {
+        &[
+            Method::PipecgCpu,
+            Method::PcgCpuParalution,
+            Method::PcgCpuPetsc,
+            Method::PipecgGpuPetsc,
+            Method::PcgGpuPetsc,
+            Method::PcgGpuParalution,
+            Method::Hybrid1,
+            Method::Hybrid2,
+            Method::Hybrid3,
+        ]
+    }
+
+    /// True for the methods that run over the rank fabric (and therefore
+    /// dispatch through [`Runner::run_dist`] / `dist::exec`).
+    pub fn is_dist(self) -> bool {
+        matches!(
+            self,
+            Method::DistPipecg | Method::DistPipecgL | Method::DistPcg
+        )
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Method> {
+        for m in Method::all() {
+            if s == m.name() {
+                return Ok(*m);
+            }
+        }
+        let valid: Vec<&str> = Method::all().iter().map(|m| m.name()).collect();
+        Err(Error::Config(format!(
+            "unknown method '{s}' (valid: {})",
+            valid.join(", ")
+        )))
+    }
+}
+
+/// Executes [`Method`]s: owns the backend choice (`native` | `pjrt`), the
+/// simulated device parameters, and the [`HybridConfig`], and builds the
+/// appropriate accelerator (full-matrix or panel-resident) per method.
+pub struct Runner {
+    backend: String,
+    gp: DeviceParams,
+    cfg: HybridConfig,
+    rr_interval: usize,
+}
+
+impl Runner {
+    /// Build a runner. `backend` must be `"native"` or `"pjrt"`.
+    pub fn new(backend: &str, gp: DeviceParams, cfg: HybridConfig) -> Result<Runner> {
+        if backend != "native" && backend != "pjrt" {
+            return Err(Error::Config(format!(
+                "unknown backend '{backend}' (valid: native, pjrt)"
+            )));
+        }
+        Ok(Runner {
+            backend: backend.to_string(),
+            gp,
+            cfg,
+            rr_interval: 50,
+        })
+    }
+
+    /// Residual-replacement interval for [`Method::PipecgRr`] (default 50).
+    pub fn with_rr_interval(mut self, interval: usize) -> Runner {
+        self.rr_interval = interval;
+        self
+    }
+
+    /// The backend this runner builds accelerators on.
+    pub fn backend(&self) -> &str {
+        &self.backend
+    }
+
+    /// Solve options shared by every method this runner executes.
+    pub fn opts(&self) -> &crate::solver::SolveOpts {
+        &self.cfg.opts
+    }
+
+    /// Whether the whole matrix fits in the simulated device memory (the
+    /// Hybrid-1/2 precondition; Hybrid-3 exists for when it does not).
+    pub fn fits_gpu(&self, a: &Csr) -> bool {
+        self.gp
+            .mem_capacity
+            .map(|cap| {
+                GpuEngine::required_bytes_full(a)
+                    .map(|need| need <= cap)
+                    .unwrap_or(false)
+            })
+            .unwrap_or(true)
+    }
+
+    /// Resolve [`Method::Auto`] to a concrete hybrid via the §IV-C2
+    /// selection model. Any other method resolves to itself.
+    pub fn resolve(&self, m: Method, a: &Csr) -> Method {
+        if m != Method::Auto {
+            return m;
+        }
+        let stats = MatrixStats::of(a);
+        match select::select(&self.cfg.cm, &stats, self.fits_gpu(a)) {
+            select::Method::Hybrid1 => Method::Hybrid1,
+            select::Method::Hybrid2 => Method::Hybrid2,
+            select::Method::Hybrid3 => Method::Hybrid3,
+        }
+    }
+
+    /// Accelerator with the full matrix resident (hybrids 1–2, GPU
+    /// baselines).
+    fn accel_full(&self, a: &Csr, pc: &Jacobi) -> Result<Box<dyn GpuCompute>> {
+        match self.backend.as_str() {
+            "native" => Ok(Box::new(NativeAccel::with_matrix(a, &pc.inv_diag))),
+            _ => {
+                let lib = std::rc::Rc::new(super::open_default()?);
+                let mut eng = GpuEngine::new(lib, self.gp.clone());
+                eng.load_matrix(a, &pc.inv_diag)?;
+                Ok(Box::new(eng))
+            }
+        }
+    }
+
+    /// Accelerator with only the row panel `[r0, a.n)` resident (hybrid 3).
+    fn accel_panel(&self, a: &Csr, r0: usize, pc: &Jacobi) -> Result<Box<dyn GpuCompute>> {
+        match self.backend.as_str() {
+            "native" => Ok(Box::new(NativeAccel::with_panel(a, r0, a.n, &pc.inv_diag))),
+            _ => {
+                let lib = std::rc::Rc::new(super::open_default()?);
+                let mut eng = GpuEngine::new(lib, self.gp.clone());
+                eng.load_panel(a, r0, a.n, &pc.inv_diag)?;
+                Ok(Box::new(eng))
+            }
+        }
+    }
+
+    /// Run a single-process method. [`Method::Auto`] resolves first; the
+    /// distributed methods are rejected — use [`Runner::run_dist`].
+    pub fn run(&self, m: Method, a: &Csr, b: &[f64], pc: &Jacobi) -> Result<RunReport> {
+        match m {
+            Method::Auto => self.run(self.resolve(m, a), a, b, pc),
+            Method::Hybrid1 => {
+                let mut acc = self.accel_full(a, pc)?;
+                hybrid::hybrid1::solve(a, b, pc, acc.as_mut(), &self.cfg)
+            }
+            Method::Hybrid2 => {
+                let mut acc = self.accel_full(a, pc)?;
+                hybrid::hybrid2::solve(a, b, pc, acc.as_mut(), &self.cfg)
+            }
+            Method::Hybrid3 => {
+                let budget = if self.fits_gpu(a) {
+                    None
+                } else {
+                    Some(crate::perfmodel::rows_fitting(
+                        a,
+                        self.gp.mem_capacity.unwrap_or(u64::MAX),
+                    ))
+                };
+                let plan =
+                    hybrid::hybrid3::plan_capped(a, &self.cfg, budget, self.gp.mem_capacity, None);
+                let mut acc = self.accel_panel(a, plan.split.n_cpu, pc)?;
+                hybrid::hybrid3::solve(a, b, pc, acc.as_mut(), &plan, &self.cfg)
+            }
+            Method::PipecgCpu => Ok(baselines::run_cpu(
+                a,
+                b,
+                CpuFlavor::PipecgOpenMp,
+                &self.cfg.opts,
+                &self.cfg.cm,
+            )),
+            Method::PcgCpuParalution => Ok(baselines::run_cpu(
+                a,
+                b,
+                CpuFlavor::ParalutionOpenMp,
+                &self.cfg.opts,
+                &self.cfg.cm,
+            )),
+            Method::PcgCpuPetsc => Ok(baselines::run_cpu(
+                a,
+                b,
+                CpuFlavor::PetscMpi,
+                &self.cfg.opts,
+                &self.cfg.cm,
+            )),
+            Method::PipecgGpuPetsc | Method::PcgGpuPetsc | Method::PcgGpuParalution => {
+                let flavor = match m {
+                    Method::PcgGpuParalution => GpuFlavor::ParalutionPcg,
+                    Method::PcgGpuPetsc => GpuFlavor::PetscPcg,
+                    _ => GpuFlavor::PetscPipecg,
+                };
+                let mut acc = self.accel_full(a, pc)?;
+                baselines::run_gpu(a, b, flavor, acc.as_mut(), &self.cfg.opts, &self.cfg.cm)
+            }
+            Method::PipecgRr => {
+                // Residual-replacement PIPECG (accuracy extension; see
+                // solver::pipecg_rr) on the host reference path.
+                let wall = std::time::Instant::now();
+                let rr = crate::solver::pipecg_rr::solve(
+                    a,
+                    b,
+                    pc,
+                    &crate::solver::pipecg_rr::RrOpts {
+                        base: self.cfg.opts.clone(),
+                        interval: self.rr_interval,
+                    },
+                );
+                let mut tl = Timeline::new(false);
+                tl.run(Resource::CpuExec, "pipecg-rr", 0.0, &[]);
+                let tr = rr.true_residual(a, b);
+                Ok(RunReport::from_timeline(
+                    "PIPECG-RR",
+                    "cpu-only",
+                    a.n,
+                    a.nnz(),
+                    rr,
+                    tr,
+                    tl,
+                    0.0,
+                    wall.elapsed().as_secs_f64(),
+                    false,
+                ))
+            }
+            Method::DistPipecg | Method::DistPipecgL | Method::DistPcg => {
+                Err(Error::Config(format!(
+                    "method '{m}' is distributed — use Runner::run_dist (CLI: \
+                     `hypipe solve --method {m} --ranks N` or `hypipe launch`)"
+                )))
+            }
+        }
+    }
+
+    /// Run a distributed method over the in-process fabric (or TCP, per
+    /// `d.transport`). Non-distributed methods are rejected.
+    pub fn run_dist(
+        &self,
+        m: Method,
+        a: &Csr,
+        b: &[f64],
+        pc: &Jacobi,
+        d: &dist::DistOpts,
+    ) -> Result<DistReport> {
+        match m {
+            Method::DistPipecg => Ok(dist::pipecg::solve(a, b, pc, d)),
+            Method::DistPipecgL => Ok(dist::pipecg_l::solve(a, b, pc, d)),
+            Method::DistPcg => Ok(dist::pcg::solve(a, b, pc, d)),
+            other => Err(Error::Config(format!(
+                "method '{other}' is not distributed — use Runner::run"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_through_fromstr() {
+        for m in Method::all() {
+            let parsed: Method = m.name().parse().unwrap();
+            assert_eq!(parsed, *m);
+            assert_eq!(format!("{m}"), m.name());
+        }
+    }
+
+    #[test]
+    fn unknown_method_error_lists_valid_names() {
+        let err = "pipeg".parse::<Method>().unwrap_err().to_string();
+        assert!(err.contains("unknown method 'pipeg'"), "{err}");
+        for m in Method::all() {
+            assert!(err.contains(m.name()), "missing {} in: {err}", m.name());
+        }
+    }
+
+    #[test]
+    fn dist_flags_and_suite_shape() {
+        let dist: Vec<Method> = Method::all().iter().copied().filter(|m| m.is_dist()).collect();
+        assert_eq!(
+            dist,
+            vec![Method::DistPipecg, Method::DistPipecgL, Method::DistPcg]
+        );
+        assert_eq!(Method::suite().len(), 9);
+        assert!(Method::suite().iter().all(|m| !m.is_dist()));
+        assert_eq!(Method::suite()[0], Method::PipecgCpu);
+    }
+
+    #[test]
+    fn runner_rejects_unknown_backend_and_wrong_dispatch() {
+        assert!(Runner::new("opencl", DeviceParams::gpu_k20m(), HybridConfig::default()).is_err());
+        let r = Runner::new("native", DeviceParams::gpu_k20m(), HybridConfig::default()).unwrap();
+        let a = crate::sparse::gen::poisson2d_5pt(4, 4);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
+        let err = r.run(Method::DistPipecg, &a, &b, &pc).unwrap_err().to_string();
+        assert!(err.contains("run_dist"), "{err}");
+        let err = r
+            .run_dist(Method::Hybrid1, &a, &b, &pc, &dist::DistOpts::with_ranks(1))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not distributed"), "{err}");
+    }
+
+    #[test]
+    fn auto_resolves_to_a_hybrid() {
+        let r = Runner::new("native", DeviceParams::gpu_k20m(), HybridConfig::default()).unwrap();
+        let a = crate::sparse::gen::poisson2d_5pt(8, 8);
+        let m = r.resolve(Method::Auto, &a);
+        assert!(matches!(m, Method::Hybrid1 | Method::Hybrid2 | Method::Hybrid3));
+        assert_eq!(r.resolve(Method::PipecgCpu, &a), Method::PipecgCpu);
+    }
+}

@@ -2,11 +2,17 @@
 //! `manifest.json`, produced once by `make artifacts`) and executes them on
 //! the CPU PJRT client. This is the only module that talks to the `xla`
 //! crate; Python never runs on the request path.
+//!
+//! It also hosts the framework-level dispatch surface: [`Method`] names
+//! every solve method by its CLI token, and [`Runner`] executes them —
+//! see [`method`].
 
 pub mod artifacts;
 pub mod buckets;
+pub mod method;
 
 pub use artifacts::{ArtifactLibrary, ArtifactMeta, TensorMeta};
+pub use method::{Method, Runner};
 
 /// Locate the artifacts directory: `$HYPIPE_ARTIFACTS`, else `./artifacts`,
 /// else `../artifacts` (for tests running inside `rust/`).

@@ -5,10 +5,17 @@
 //! rounding otherwise), and a fixed rank count must reproduce identical
 //! bits run after run — with or without injected reduction latency.
 
+//! The transport-conformance suite at the bottom runs the same fabric
+//! contracts (tagged out-of-order p2p, barrier, out-of-order allreduce
+//! completion, bitwise-identical solves) over every [`TransportKind`] —
+//! in-process channels always, loopback TCP when the environment can
+//! bind a socket.
+
 use std::time::Duration;
 
 use hypipe::dist::fabric::{self, FabricCfg};
 use hypipe::dist::part::DistPlan;
+use hypipe::dist::transport::TransportKind;
 use hypipe::dist::{self, DistOpts};
 use hypipe::precond::Jacobi;
 use hypipe::solver::{self, SolveOpts};
@@ -180,6 +187,7 @@ fn injected_latency_changes_timing_not_bits() {
             },
             ranks: 2,
             reduce_latency: Duration::from_micros(200),
+            ..Default::default()
         },
     );
     assert_eq!(slow.result.iterations, fast.result.iterations);
@@ -279,6 +287,7 @@ fn dist_pipecg_l_latency_changes_timing_not_bits() {
             },
             ranks: 2,
             reduce_latency: Duration::from_micros(200),
+            ..Default::default()
         },
     );
     assert_eq!(slow.result.iterations, fast.result.iterations);
@@ -312,4 +321,173 @@ fn per_rank_metrics_account_for_the_whole_system() {
     let plan = DistPlan::build(&a, 4);
     let exchanges = 2 + rep.result.iterations as u64; // init u, init m, one per iter
     assert_eq!(sent, plan.halo_total() as u64 * exchanges);
+}
+
+// ---------------------------------------------------------------------------
+// Transport-conformance suite: every TransportKind must honour the same
+// fabric contracts. Chan always runs; TCP runs when loopback networking is
+// available (it is skipped, loudly, in sandboxes that forbid binding).
+// ---------------------------------------------------------------------------
+
+fn transports() -> Vec<TransportKind> {
+    let mut kinds = vec![TransportKind::Chan];
+    match std::net::TcpListener::bind("127.0.0.1:0") {
+        Ok(_) => kinds.push(TransportKind::Tcp),
+        Err(e) => eprintln!("skipping TCP transport conformance: no loopback networking ({e})"),
+    }
+    kinds
+}
+
+fn fabric_cfg(kind: TransportKind) -> FabricCfg {
+    FabricCfg {
+        transport: kind,
+        ..Default::default()
+    }
+}
+
+fn dist_opts(kind: TransportKind, ranks: usize) -> DistOpts {
+    DistOpts {
+        base: serial_opts(),
+        ranks,
+        transport: kind,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn conformance_tagged_p2p_delivers_out_of_order() {
+    for kind in transports() {
+        let outs = fabric::run(2, &fabric_cfg(kind), |ctx| {
+            if ctx.rank() == 0 {
+                ctx.send(1, 7, vec![1.5, -2.25]);
+                ctx.send(1, 9, vec![std::f64::consts::PI]);
+                Vec::new()
+            } else {
+                // Ask for the later tag first: the transport must stash the
+                // tag-7 message and still deliver it afterwards, intact.
+                let hi = ctx.recv(0, 9);
+                let lo = ctx.recv(0, 7);
+                [hi, lo].concat()
+            }
+        });
+        assert_eq!(
+            outs[1],
+            vec![std::f64::consts::PI, 1.5, -2.25],
+            "{kind:?}: tagged delivery reordered or corrupted"
+        );
+    }
+}
+
+#[test]
+fn conformance_barrier_holds_all_ranks() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    for kind in transports() {
+        for ranks in [2usize, 3] {
+            let arrived = AtomicUsize::new(0);
+            fabric::run(ranks, &fabric_cfg(kind), |ctx| {
+                for round in 1..=3usize {
+                    arrived.fetch_add(1, Ordering::SeqCst);
+                    ctx.barrier();
+                    // Everyone incremented before anyone passed; the second
+                    // barrier keeps the next round's increments out.
+                    assert_eq!(
+                        arrived.load(Ordering::SeqCst),
+                        ranks * round,
+                        "{kind:?} ranks={ranks}: barrier let a rank through early"
+                    );
+                    ctx.barrier();
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn conformance_six_inflight_allreduces_complete_out_of_order() {
+    for kind in transports() {
+        for ranks in [2usize, 3, 4] {
+            let outs = fabric::run(ranks, &fabric_cfg(kind), |ctx| {
+                let me = ctx.rank() as f64;
+                let mut pending: Vec<_> = (0..6)
+                    .map(|i| ctx.iallreduce(&[me + 10.0 * i as f64, -me]))
+                    .collect();
+                // Complete newest-first: contributions for the not-yet-waited
+                // handles arrive interleaved and must be stashed by sequence.
+                let mut sums = vec![0.0; 6];
+                while let Some(h) = pending.pop() {
+                    let i = pending.len();
+                    sums[i] = ctx.wait(h)[0];
+                }
+                sums
+            });
+            let rank_sum: f64 = (0..ranks).map(|r| r as f64).sum();
+            let expect: Vec<f64> = (0..6)
+                .map(|i| rank_sum + 10.0 * i as f64 * ranks as f64)
+                .collect();
+            for (r, sums) in outs.iter().enumerate() {
+                assert_eq!(sums, &expect, "{kind:?} ranks={ranks} rank={r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_pipecg_is_bitwise_identical_across_transports() {
+    if !transports().contains(&TransportKind::Tcp) {
+        return; // nothing to compare against
+    }
+    let a = gen::poisson2d_5pt(18, 18);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    for ranks in [2usize, 3, 4] {
+        let chan = dist::pipecg::solve(&a, &b, &pc, &dist_opts(TransportKind::Chan, ranks));
+        let tcp = dist::pipecg::solve(&a, &b, &pc, &dist_opts(TransportKind::Tcp, ranks));
+        assert!(chan.result.converged && tcp.result.converged, "ranks={ranks}");
+        assert_eq!(chan.result.iterations, tcp.result.iterations, "ranks={ranks}");
+        for (c, t) in chan.result.x.iter().zip(&tcp.result.x) {
+            assert_eq!(c.to_bits(), t.to_bits(), "ranks={ranks}: solution differs");
+        }
+        assert_eq!(chan.result.history.len(), tcp.result.history.len());
+        for (c, t) in chan.result.history.iter().zip(&tcp.result.history) {
+            assert_eq!(c.to_bits(), t.to_bits(), "ranks={ranks}: history differs");
+        }
+        // The wire path was really exercised, and its stalls are attributed.
+        for m in &tcp.per_rank {
+            assert!(m.socket_wait_s >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn deep_pipeline_abandons_cleanly_over_tcp() {
+    if !transports().contains(&TransportKind::Tcp) {
+        return;
+    }
+    // PIPECG(l) leaves l-1 reductions in flight at convergence and abandons
+    // them; over TCP the late contributions still arrive on the sockets and
+    // must be discarded without wedging shutdown.
+    let a = gen::poisson2d_5pt(16, 16);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let opts = DistOpts {
+        base: deep_opts(3),
+        ranks: 2,
+        transport: TransportKind::Tcp,
+        ..Default::default()
+    };
+    let rep = dist::pipecg_l::solve(&a, &b, &pc, &opts);
+    assert!(rep.result.converged);
+    let chan = dist::pipecg_l::solve(
+        &a,
+        &b,
+        &pc,
+        &DistOpts {
+            transport: TransportKind::Chan,
+            ..opts
+        },
+    );
+    assert_eq!(rep.result.iterations, chan.result.iterations);
+    for (t, c) in rep.result.x.iter().zip(&chan.result.x) {
+        assert_eq!(t.to_bits(), c.to_bits());
+    }
 }
