@@ -107,6 +107,9 @@ pub struct RunConfig {
     pub gpu_mem: Option<u64>,
     /// Keep the virtual timeline for `--trace` output.
     pub keep_trace: bool,
+    /// `Some(path)` enables the metrics registry and writes a Prometheus
+    /// text snapshot there after the run (`--metrics-out`).
+    pub metrics_out: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -120,6 +123,7 @@ impl Default for RunConfig {
             rr_interval: 50,
             gpu_mem: None,
             keep_trace: false,
+            metrics_out: None,
         }
     }
 }
@@ -188,6 +192,7 @@ impl RunConfig {
             rr_interval: args.flag_parse("rr-interval", 50)?,
             gpu_mem,
             keep_trace: args.flag("trace").is_some(),
+            metrics_out: args.flag("metrics-out").map(str::to_string),
         })
     }
 
@@ -355,20 +360,6 @@ fn node_from_args(args: &Args, method: Method, dist: &DistOpts) -> Result<Option
         listen,
         host,
     }))
-}
-
-/// Deprecated shim kept for one release: the solver options are now part
-/// of [`RunConfig`] (`RunConfig::from_args(args)?.opts()`).
-#[deprecated(note = "use RunConfig::from_args; this reads the same flags")]
-pub fn solve_opts(args: &Args) -> Result<SolveOpts> {
-    solve_from_args(args)
-}
-
-/// Deprecated shim kept for one release: the distribution options are now
-/// part of [`RunConfig`] (`RunConfig::from_args(args)?.dist`).
-#[deprecated(note = "use RunConfig::from_args; this reads the same flags")]
-pub fn dist_opts(args: &Args) -> Result<DistOpts> {
-    dist_from_args(args)
 }
 
 /// Build a matrix from a spec string (see module docs for the grammar).
@@ -611,13 +602,13 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_read_the_same_flags() {
-        let a = Args::parse(argv("solve --tol 1e-7 --ranks 3 --transport tcp")).unwrap();
-        assert_eq!(solve_opts(&a).unwrap().tol, solve_from_args(&a).unwrap().tol);
-        let d = dist_opts(&a).unwrap();
-        assert_eq!(d.ranks, 3);
-        assert_eq!(d.transport, TransportKind::Tcp);
+    fn run_config_metrics_out() {
+        let rc = RunConfig::from_args(&Args::parse(argv("solve")).unwrap()).unwrap();
+        assert!(rc.metrics_out.is_none());
+        let rc =
+            RunConfig::from_args(&Args::parse(argv("solve --metrics-out m.prom")).unwrap())
+                .unwrap();
+        assert_eq!(rc.metrics_out.as_deref(), Some("m.prom"));
     }
 
     #[test]

@@ -8,6 +8,12 @@
 //! per-rank metrics to rank 0 over ordinary tagged fabric messages —
 //! so only rank 0 returns a [`DistReport`], exactly one report per job.
 //!
+//! The **matrix spec rides the rendezvous roster**: rank 0 builds its
+//! matrix from its own `--matrix` flag and broadcasts the spec string as
+//! the roster's job meta; every worker builds the identical system from
+//! that, so a launch cannot desynchronize by handing workers different
+//! flags (workers no longer re-derive the problem from their own CLI).
+//!
 //! [`launch`] is the convenience spawner for loopback runs: it picks a
 //! free rendezvous port, spawns `--ranks` copies of the current
 //! executable as `solve --rank R ...` workers, supervises them, and (when
@@ -23,11 +29,10 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::process::{Command, Stdio};
 use std::time::{Duration, Instant};
 
-use crate::metrics::{DistReport, RankMetrics};
+use crate::metrics::{DistReport, RankMetrics, WireLink};
 use crate::precond::Jacobi;
 use crate::runtime::Method;
 use crate::solver::StopReason;
-use crate::sparse::Csr;
 use crate::trace;
 use crate::util::json::{self, arr, obj, s, Json};
 use crate::{Error, Result};
@@ -57,15 +62,16 @@ pub struct NodeCfg {
     pub host: String,
 }
 
-/// Run one rank of a distributed solve as a TCP worker. Returns
-/// `Ok(Some(report))` on rank 0, `Ok(None)` on every other rank, and
-/// `Err` if the method is not distributed, the node config is
-/// inconsistent, or the fabric fails (peer lost, rendezvous timeout).
+/// Run one rank of a distributed solve as a TCP worker. `spec` is the
+/// matrix spec (`cli::build_matrix` grammar): rank 0 builds from it and
+/// broadcasts it in the roster; workers ignore their own `spec` and build
+/// from the roster meta instead. Returns `Ok(Some(report))` on rank 0,
+/// `Ok(None)` on every other rank, and `Err` if the method is not
+/// distributed, the node config is inconsistent, or the fabric fails
+/// (peer lost, rendezvous timeout).
 pub fn run_node(
     m: Method,
-    a: &Csr,
-    b: &[f64],
-    pc: &Jacobi,
+    spec: &str,
     opts: &DistOpts,
     node: &NodeCfg,
 ) -> Result<Option<DistReport>> {
@@ -83,16 +89,10 @@ pub fn run_node(
             node.rank, node.ranks
         )));
     }
-    if node.ranks > a.n {
-        return Err(Error::Config(format!(
-            "node: {} ranks for a {}-row system (workers cannot share rows)",
-            node.ranks, a.n
-        )));
-    }
     // The rank body reports transport failures by panicking with a
     // `FabricFailure` (it has no Result channel of its own); unwrap that
     // back into the error it carries.
-    match catch_unwind(AssertUnwindSafe(|| run_node_inner(m, a, b, pc, opts, node))) {
+    match catch_unwind(AssertUnwindSafe(|| run_node_inner(m, spec, opts, node))) {
         Ok(r) => r,
         Err(p) => match p.downcast::<FabricFailure>() {
             Ok(f) => Err(f.0),
@@ -103,28 +103,47 @@ pub fn run_node(
 
 fn run_node_inner(
     m: Method,
-    a: &Csr,
-    b: &[f64],
-    pc: &Jacobi,
+    spec: &str,
     opts: &DistOpts,
     node: &NodeCfg,
 ) -> Result<Option<DistReport>> {
     let wall = Instant::now();
-    let plan = DistPlan::build(a, node.ranks);
-    let tp = if node.rank == 0 {
+    // Rank 0 needs the matrix before hosting (to reject bad rank counts
+    // without stranding workers mid-handshake); workers connect first and
+    // build from the roster meta so every rank provably solves the same
+    // system.
+    let (a, tp) = if node.rank == 0 {
+        let a = crate::cli::build_matrix(spec)?;
+        if node.ranks > a.n {
+            return Err(Error::Config(format!(
+                "node: {} ranks for a {}-row system (workers cannot share rows)",
+                node.ranks, a.n
+            )));
+        }
         let listener = std::net::TcpListener::bind(&node.listen).map_err(|e| {
             Error::Transport(format!("rank 0: cannot bind rendezvous {}: {e}", node.listen))
         })?;
-        TcpTransport::host(listener, node.ranks, opts.tcp.clone())?
+        let tp = TcpTransport::host(listener, node.ranks, opts.tcp.clone(), spec)?;
+        (a, tp)
     } else {
-        TcpTransport::join(
+        let tp = TcpTransport::join(
             node.rank,
             node.ranks,
             &node.listen,
             &node.host,
             opts.tcp.clone(),
-        )?
+        )?;
+        if tp.meta().is_empty() {
+            return Err(Error::Config(
+                "node: roster carried no matrix spec (host predates the meta roster?)".into(),
+            ));
+        }
+        let a = crate::cli::build_matrix(tp.meta())?;
+        (a, tp)
     };
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let plan = DistPlan::build(&a, node.ranks);
     let cfg = FabricCfg {
         reduce_latency: opts.reduce_latency,
         transport: TransportKind::Tcp,
@@ -132,7 +151,7 @@ fn run_node_inner(
     };
     let mut ctx = RankCtx::from_transport(Box::new(tp), cfg);
     trace::label_thread(node.rank as u32 + 1, &format!("rank {}", node.rank));
-    let out = solve_rank_for(m, &mut ctx, &plan.blocks[node.rank], b, pc, &opts.base);
+    let out = solve_rank_for(m, &mut ctx, &plan.blocks[node.rank], &b, &pc, &opts.base);
 
     if node.rank != 0 {
         // Ship our slice and accounting to rank 0, then sync the epilogue
@@ -151,8 +170,8 @@ fn run_node_inner(
     ctx.barrier();
     let report = assemble(
         &dist_label(m, &opts.base),
-        a,
-        b,
+        &a,
+        &b,
         outs,
         wall.elapsed().as_secs_f64(),
         opts.reduce_latency,
@@ -184,9 +203,11 @@ fn stop_from_code(c: f64) -> Result<StopReason> {
 
 /// Outcome + metrics of one rank as a flat f64 vector. Counters ride as
 /// exact small integers (f64 is exact through 2⁵³); history/telemetry are
-/// bit-identical on every rank, so only rank 0's copies are kept.
+/// bit-identical on every rank, so only rank 0's copies are kept. Layout:
+/// 11 head fields, then `[11] = link count`, then 5 fields per
+/// [`WireLink`] (`peer, tx_bytes, tx_msgs, rx_bytes, rx_msgs`).
 fn encode_out(o: &RankOut) -> Vec<f64> {
-    vec![
+    let mut v = vec![
         o.iterations as f64,
         o.final_norm,
         if o.converged { 1.0 } else { 0.0 },
@@ -198,16 +219,45 @@ fn encode_out(o: &RankOut) -> Vec<f64> {
         o.metrics.reduces as f64,
         o.metrics.halo_doubles_sent as f64,
         o.metrics.socket_wait_s,
-    ]
+        o.metrics.links.len() as f64,
+    ];
+    for l in &o.metrics.links {
+        v.extend_from_slice(&[
+            l.peer as f64,
+            l.tx_bytes as f64,
+            l.tx_msgs as f64,
+            l.rx_bytes as f64,
+            l.rx_msgs as f64,
+        ]);
+    }
+    v
 }
 
 fn decode_out(rank: usize, plan: &DistPlan, x: Vec<f64>, v: &[f64]) -> Result<RankOut> {
-    if v.len() != 11 {
+    if v.len() < 12 {
         return Err(Error::Transport(format!(
-            "gather: rank {rank} metrics frame has {} fields, expected 11",
+            "gather: rank {rank} metrics frame has {} fields, expected at least 12",
             v.len()
         )));
     }
+    let nlinks = v[11] as usize;
+    if v.len() != 12 + 5 * nlinks {
+        return Err(Error::Transport(format!(
+            "gather: rank {rank} metrics frame has {} fields, expected {} for {nlinks} links",
+            v.len(),
+            12 + 5 * nlinks
+        )));
+    }
+    let links = v[12..]
+        .chunks_exact(5)
+        .map(|c| WireLink {
+            peer: c[0] as usize,
+            tx_bytes: c[1] as u64,
+            tx_msgs: c[2] as u64,
+            rx_bytes: c[3] as u64,
+            rx_msgs: c[4] as u64,
+        })
+        .collect();
     let blk = &plan.blocks[rank];
     if x.len() != blk.nloc() {
         return Err(Error::Transport(format!(
@@ -234,6 +284,7 @@ fn decode_out(rank: usize, plan: &DistPlan, x: Vec<f64>, v: &[f64]) -> Result<Ra
             reduces: v[8] as u64,
             halo_doubles_sent: v[9] as u64,
             socket_wait_s: v[10],
+            links,
         },
         telemetry: None,
     })
@@ -254,6 +305,10 @@ pub struct LaunchCfg {
     /// When set, each worker writes `<path>.rank<R>` and the launcher
     /// merges them into `<path>` (one chrome trace, pid lane = rank + 1).
     pub trace_out: Option<String>,
+    /// When set, each worker writes a Prometheus text snapshot to
+    /// `<path>.rank<R>` and the launcher merges them into `<path>`
+    /// (`# TYPE` lines deduplicated; the `rank` label keeps series apart).
+    pub metrics_out: Option<String>,
 }
 
 /// Pick a free loopback port by binding an ephemeral listener and
@@ -279,8 +334,16 @@ pub fn launch(cfg: &LaunchCfg) -> Result<()> {
     let mut children = Vec::with_capacity(cfg.ranks);
     for r in 0..cfg.ranks {
         let mut cmd = Command::new(&cfg.exe);
+        // The matrix spec reaches workers through the rendezvous roster;
+        // only rank 0 (which hosts it) needs the `--matrix` flag. Dropping
+        // it from the other workers exercises that path on every launch.
+        let passthrough: Vec<&String> = if r == 0 {
+            cfg.passthrough.iter().collect()
+        } else {
+            strip_matrix_flag(&cfg.passthrough)
+        };
         cmd.arg("solve")
-            .args(&cfg.passthrough)
+            .args(passthrough)
             .args(["--transport", "tcp"])
             .args(["--ranks", &cfg.ranks.to_string()])
             .args(["--rank", &r.to_string()])
@@ -288,6 +351,9 @@ pub fn launch(cfg: &LaunchCfg) -> Result<()> {
             .args(["--peers", &host]);
         if let Some(t) = &cfg.trace_out {
             cmd.args(["--trace-out", &format!("{t}.rank{r}")]);
+        }
+        if let Some(m) = &cfg.metrics_out {
+            cmd.args(["--metrics-out", &format!("{m}.rank{r}")]);
         }
         if r != 0 {
             cmd.stdout(Stdio::null());
@@ -344,6 +410,42 @@ pub fn launch(cfg: &LaunchCfg) -> Result<()> {
     if let Some(t) = &cfg.trace_out {
         merge_traces(t, cfg.ranks)?;
     }
+    if let Some(m) = &cfg.metrics_out {
+        merge_metrics(m, cfg.ranks)?;
+    }
+    Ok(())
+}
+
+/// Drop `--matrix <spec>` from a worker's passthrough flags (the spec
+/// arrives via the roster instead).
+fn strip_matrix_flag(flags: &[String]) -> Vec<&String> {
+    let mut out = Vec::with_capacity(flags.len());
+    let mut skip = false;
+    for f in flags {
+        if skip {
+            skip = false;
+            continue;
+        }
+        if f == "--matrix" {
+            skip = true;
+            continue;
+        }
+        out.push(f);
+    }
+    out
+}
+
+/// Merge the per-rank Prometheus snapshots `<base>.rank<R>` into `<base>`
+/// and remove the parts. Series are already disjoint (every sample
+/// carries its `rank` label); only the `# TYPE` headers need dedup.
+fn merge_metrics(base: &str, ranks: usize) -> Result<()> {
+    let mut texts = Vec::with_capacity(ranks);
+    for r in 0..ranks {
+        let part = format!("{base}.rank{r}");
+        texts.push(std::fs::read_to_string(&part)?);
+        let _ = std::fs::remove_file(&part);
+    }
+    std::fs::write(base, crate::obs::merge_prometheus_texts(&texts))?;
     Ok(())
 }
 
@@ -401,6 +503,22 @@ mod tests {
                 reduces: 18,
                 halo_doubles_sent: 34,
                 socket_wait_s: 0.0625,
+                links: vec![
+                    WireLink {
+                        peer: 0,
+                        tx_bytes: 272,
+                        tx_msgs: 19,
+                        rx_bytes: 800,
+                        rx_msgs: 21,
+                    },
+                    WireLink {
+                        peer: 2,
+                        tx_bytes: 0,
+                        tx_msgs: 0,
+                        rx_bytes: 8,
+                        rx_msgs: 1,
+                    },
+                ],
             },
             telemetry: None,
         }
@@ -412,6 +530,7 @@ mod tests {
         let plan = DistPlan::build(&a, 8);
         let o = out_for_test();
         let v = encode_out(&o);
+        assert_eq!(v.len(), 12 + 5 * 2, "11 head fields + count + 5 per link");
         let blk = &plan.blocks[1];
         let x = vec![0.5; blk.nloc()];
         let d = decode_out(1, &plan, x.clone(), &v).unwrap();
@@ -424,17 +543,21 @@ mod tests {
         assert_eq!(d.metrics.halo_doubles_sent, 34);
         assert_eq!(d.metrics.socket_wait_s, 0.0625);
         assert_eq!(d.metrics.rows, blk.nloc());
+        assert_eq!(d.metrics.links, o.metrics.links, "wire links survive the gather");
+        assert_eq!(d.metrics.wire_tx_bytes(), 272);
+        assert_eq!(d.metrics.wire_rx_bytes(), 808);
         // Wrong shapes are errors, not panics.
         assert!(decode_out(1, &plan, vec![0.0; 1], &v).is_err());
         assert!(decode_out(1, &plan, vec![0.5; blk.nloc()], &v[..10]).is_err());
+        assert!(
+            decode_out(1, &plan, x, &v[..14]).is_err(),
+            "truncated link list is an error"
+        );
         assert!(stop_from_code(9.0).is_err());
     }
 
     #[test]
     fn run_node_rejects_bad_configs() {
-        let a = gen::poisson2d_5pt(4, 4);
-        let b = a.mul_ones();
-        let pc = Jacobi::from_matrix(&a);
         let opts = DistOpts::default();
         let node = |rank, ranks| NodeCfg {
             rank,
@@ -442,19 +565,18 @@ mod tests {
             listen: "127.0.0.1:0".into(),
             host: "127.0.0.1:1".into(),
         };
-        let err = run_node(Method::Hybrid1, &a, &b, &pc, &opts, &node(0, 2))
+        let err = run_node(Method::Hybrid1, "poisson2d:4x4", &opts, &node(0, 2))
             .unwrap_err()
             .to_string();
         assert!(err.contains("not distributed"), "{err}");
-        assert!(run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node(2, 2)).is_err());
-        assert!(run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node(0, 1000)).is_err());
+        assert!(run_node(Method::DistPipecg, "poisson2d:4x4", &opts, &node(2, 2)).is_err());
+        assert!(run_node(Method::DistPipecg, "poisson2d:4x4", &opts, &node(0, 1000)).is_err());
+        // Rank 0 parses the spec before it even binds a listener.
+        assert!(run_node(Method::DistPipecg, "nonsense:9", &opts, &node(0, 2)).is_err());
     }
 
     #[test]
     fn join_against_dead_rendezvous_is_an_error_not_a_panic() {
-        let a = gen::poisson2d_5pt(4, 4);
-        let b = a.mul_ones();
-        let pc = Jacobi::from_matrix(&a);
         let opts = DistOpts {
             tcp: crate::dist::transport::TcpCfg {
                 connect_timeout: Duration::from_millis(200),
@@ -476,7 +598,7 @@ mod tests {
             listen: "127.0.0.1:0".into(),
             host,
         };
-        let err = run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node).unwrap_err();
+        let err = run_node(Method::DistPipecg, "poisson2d:4x4", &opts, &node).unwrap_err();
         assert!(matches!(err, Error::Transport(_)), "{err}");
     }
 
@@ -489,9 +611,6 @@ mod tests {
             eprintln!("skipping: no loopback networking in this environment");
             return;
         };
-        let a = gen::poisson2d_5pt(12, 12);
-        let b = a.mul_ones();
-        let pc = Jacobi::from_matrix(&a);
         let opts = DistOpts {
             base: SolveOpts {
                 threads: 1,
@@ -508,7 +627,10 @@ mod tests {
                     listen: "127.0.0.1:0".into(),
                     host: host.clone(),
                 };
-                run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node)
+                // Workers take the matrix spec from the rendezvous roster,
+                // not from their own flags: hand rank 1 a bogus spec and it
+                // must still solve the host's system.
+                run_node(Method::DistPipecg, "unused-on-workers", &opts, &node)
             });
             let node0 = NodeCfg {
                 rank: 0,
@@ -516,7 +638,7 @@ mod tests {
                 listen: host.clone(),
                 host: host.clone(),
             };
-            let r0 = run_node(Method::DistPipecg, &a, &b, &pc, &opts, &node0);
+            let r0 = run_node(Method::DistPipecg, "poisson2d:12x12", &opts, &node0);
             (r0, h1.join().unwrap())
         });
         let rep = rep0.unwrap().expect("rank 0 returns the report");
@@ -524,10 +646,19 @@ mod tests {
         assert!(rep.result.converged);
         assert_eq!(rep.ranks, 2);
         assert_eq!(rep.per_rank.len(), 2);
+        let a = gen::poisson2d_5pt(12, 12);
+        let b = a.mul_ones();
+        let pc = Jacobi::from_matrix(&a);
         let chan = super::super::pipecg::solve(&a, &b, &pc, &opts);
         assert_eq!(rep.result.iterations, chan.result.iterations);
         for (t, c) in rep.result.x.iter().zip(&chan.result.x) {
             assert_eq!(t.to_bits(), c.to_bits());
+        }
+        // The wire books are transport-independent: payload frames only,
+        // so TCP and the in-process channel fabric report identical links.
+        for (t, c) in rep.per_rank.iter().zip(&chan.per_rank) {
+            assert_eq!(t.links, c.links, "rank {} links differ", t.rank);
+            assert!(t.wire_tx_bytes() > 0 && t.wire_rx_bytes() > 0);
         }
     }
 

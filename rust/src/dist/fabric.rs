@@ -53,8 +53,9 @@ use std::time::{Duration, Instant};
 use crate::dist::transport::{
     ChanTransport, TcpCfg, TcpTransport, Transport, TransportKind, WireMsg,
 };
-use crate::metrics::RankMetrics;
-use crate::trace::{self, Cat, LaneKind};
+use crate::metrics::{RankMetrics, WireLink};
+use crate::obs;
+use crate::trace::{self, labels, Cat, LaneKind};
 
 /// Fabric-wide configuration.
 #[derive(Debug, Clone, Default)]
@@ -98,6 +99,10 @@ pub struct Allreduce {
     local: Vec<f64>,
     posted: Instant,
     armed: bool,
+    /// In-flight depth gauge, decremented exactly once — by [`RankCtx::wait`]
+    /// or [`Allreduce::abandon`], whichever consumes the handle. Present
+    /// only when the `obs` registry was live at posting time.
+    inflight: Option<obs::Gauge>,
 }
 
 impl Allreduce {
@@ -111,6 +116,9 @@ impl Allreduce {
     /// abandons the same in-flight tail, so the streams stay aligned.
     pub fn abandon(mut self) {
         self.armed = false;
+        if let Some(g) = self.inflight.take() {
+            g.dec();
+        }
     }
 }
 
@@ -128,6 +136,40 @@ impl Drop for Allreduce {
     }
 }
 
+/// Registry handles for the fabric's hot-path metrics, created per rank
+/// when the `obs` registry is enabled at fabric construction. All labelled
+/// `rank="<r>"`.
+pub(crate) struct CtxObs {
+    /// `hypipe_halo_pack_bytes`: payload bytes packed and posted by halo
+    /// exchanges.
+    pub halo_pack: obs::Counter,
+    /// `hypipe_halo_unpack_bytes`: payload bytes received and scattered
+    /// into the ghost buffer.
+    pub halo_unpack: obs::Counter,
+    /// `hypipe_allreduce_payload_bytes`: bytes this rank contributed to
+    /// the wire per reduction (payload × remote-peer count).
+    pub reduce_payload: obs::Counter,
+    /// `hypipe_allreduce_inflight`: reductions currently posted but not
+    /// completed (the pipeline depth, live).
+    pub inflight: obs::Gauge,
+}
+
+impl CtxObs {
+    fn for_rank(rank: usize) -> Option<CtxObs> {
+        if !obs::enabled() {
+            return None;
+        }
+        let r = rank.to_string();
+        let labels: &[(&str, &str)] = &[("rank", &r)];
+        Some(CtxObs {
+            halo_pack: obs::counter("hypipe_halo_pack_bytes", labels),
+            halo_unpack: obs::counter("hypipe_halo_unpack_bytes", labels),
+            reduce_payload: obs::counter("hypipe_allreduce_payload_bytes", labels),
+            inflight: obs::gauge("hypipe_allreduce_inflight", labels),
+        })
+    }
+}
+
 /// One rank's endpoint of the fabric.
 pub struct RankCtx {
     cfg: FabricCfg,
@@ -140,6 +182,8 @@ pub struct RankCtx {
     /// Per-rank communication accounting, filled in as the fabric is used
     /// (reduction waits here; halo timing by `part::RankBlock::exchange`).
     pub stats: RankMetrics,
+    /// Registry instruments (`None` when `obs` was disabled at build).
+    pub(crate) obs: Option<CtxObs>,
 }
 
 impl RankCtx {
@@ -157,6 +201,7 @@ impl RankCtx {
                 rank,
                 ..Default::default()
             },
+            obs: CtxObs::for_rank(rank),
         }
     }
 
@@ -174,6 +219,12 @@ impl RankCtx {
     /// (socket waits; zero on the channel transport).
     pub fn transport_wait_s(&self) -> f64 {
         self.tp.wait_s()
+    }
+
+    /// Per-peer payload traffic counted by the transport's wire book
+    /// (one [`WireLink`] per remote rank, ascending peer order).
+    pub fn transport_wire(&self) -> Vec<WireLink> {
+        self.tp.wire()
     }
 
     /// The wire this context runs over.
@@ -243,12 +294,19 @@ impl RankCtx {
             }
         }
         self.stats.reduces += 1;
-        trace::mark("allreduce:post", Cat::Net, seq);
+        trace::mark(labels::ALLREDUCE_POST, Cat::Net, seq);
+        let inflight = self.obs.as_ref().map(|o| {
+            o.reduce_payload
+                .add(8 * vals.len() as u64 * self.tp.ranks().saturating_sub(1) as u64);
+            o.inflight.inc();
+            o.inflight.clone()
+        });
         Allreduce {
             seq,
             local: vals.to_vec(),
             posted,
             armed: true,
+            inflight,
         }
     }
 
@@ -301,8 +359,18 @@ impl RankCtx {
         let end = Instant::now();
         self.stats.reduce_wait_s += end.duration_since(t0).as_secs_f64();
         self.stats.reduce_inflight_s += end.duration_since(h.posted).as_secs_f64();
-        trace::record(LaneKind::Main, "allreduce:wait", Cat::Net, t0, end, h.seq);
-        trace::record(LaneKind::Fabric, "allreduce:inflight", Cat::Net, h.posted, end, h.seq);
+        if let Some(g) = h.inflight.take() {
+            g.dec();
+        }
+        trace::record(LaneKind::Main, labels::ALLREDUCE_WAIT, Cat::Net, t0, end, h.seq);
+        trace::record(
+            LaneKind::Fabric,
+            labels::ALLREDUCE_INFLIGHT,
+            Cat::Net,
+            h.posted,
+            end,
+            h.seq,
+        );
         let slot = self.pend_reduce.remove(&h.seq);
         let mut out = vec![0.0; h.local.len()];
         for p in 0..self.ranks() {
@@ -406,7 +474,9 @@ where
             run_with(ranks, cfg, f, |rank| {
                 if rank == 0 {
                     let l = slot.lock().unwrap().take().expect("listener taken twice");
-                    Ok(Box::new(TcpTransport::host(l, ranks, cfg.tcp.clone())?)
+                    // In-process fabrics carry no roster meta: every rank
+                    // already shares the caller's matrix by reference.
+                    Ok(Box::new(TcpTransport::host(l, ranks, cfg.tcp.clone(), "")?)
                         as Box<dyn Transport>)
                 } else {
                     Ok(Box::new(TcpTransport::join(

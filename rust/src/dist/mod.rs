@@ -149,6 +149,7 @@ pub(crate) fn finish_rank(
     metrics.rows = blk.nloc();
     metrics.nnz = blk.panel.nnz();
     metrics.socket_wait_s = ctx.transport_wait_s();
+    metrics.links = ctx.transport_wire();
     metrics.compute_s =
         (started.elapsed().as_secs_f64() - metrics.halo_s - metrics.reduce_wait_s).max(0.0);
     RankOut {

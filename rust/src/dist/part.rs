@@ -30,7 +30,7 @@ use std::time::Instant;
 
 use crate::decomp::RowPartition;
 use crate::sparse::Csr;
-use crate::trace::{self, Cat};
+use crate::trace::{self, labels, Cat};
 
 use super::fabric::RankCtx;
 
@@ -76,31 +76,41 @@ impl RankBlock {
     /// Time and volume are charged to the rank's comm stats.
     pub fn exchange(&self, ctx: &mut RankCtx, xbuf: &mut [f64]) {
         let t0 = Instant::now();
-        let whole = trace::span("halo:exchange", Cat::Halo);
+        let whole = trace::span(labels::HALO_EXCHANGE, Cat::Halo);
         // Post all sends first (non-blocking), then drain receives: no
         // ordering constraints between ranks, so no deadlock.
         {
-            let _pack = trace::span_arg("halo:pack+send", Cat::Halo, self.send_count() as u64);
+            let _pack = trace::span_arg(labels::HALO_PACK, Cat::Halo, self.send_count() as u64);
+            let mut packed = 0u64;
             for p in 0..ctx.ranks() {
                 if p == self.rank || self.send[p].is_empty() {
                     continue;
                 }
                 let data: Vec<f64> = self.send[p].iter().map(|&g| xbuf[g]).collect();
                 ctx.stats.halo_doubles_sent += data.len() as u64;
+                packed += 8 * data.len() as u64;
                 ctx.send(p, TAG_HALO, data);
+            }
+            if let Some(o) = &ctx.obs {
+                o.halo_pack.add(packed);
             }
         }
         {
-            let _unpack = trace::span_arg("halo:recv+unpack", Cat::Halo, self.halo_count() as u64);
+            let _unpack = trace::span_arg(labels::HALO_UNPACK, Cat::Halo, self.halo_count() as u64);
+            let mut unpacked = 0u64;
             for p in 0..ctx.ranks() {
                 if p == self.rank || self.recv[p].is_empty() {
                     continue;
                 }
                 let data = ctx.recv(p, TAG_HALO);
                 assert_eq!(data.len(), self.recv[p].len(), "halo length mismatch");
+                unpacked += 8 * data.len() as u64;
                 for (&g, v) in self.recv[p].iter().zip(data) {
                     xbuf[g] = v;
                 }
+            }
+            if let Some(o) = &ctx.obs {
+                o.halo_unpack.add(unpacked);
             }
         }
         drop(whole);

@@ -25,7 +25,9 @@
 //! 0 DATA    [from: u32][tag: u64][n × f64 little-endian payload]
 //! 1 BARRIER [from: u32][epoch: u64]
 //! 2 HELLO   [rank: u32][ranks: u32][listen addr, utf-8]
-//! 3 ROSTER  [ranks: u32] then per rank [len: u16][listen addr, utf-8]
+//! 3 ROSTER  [ranks: u32] then per rank [len: u16][listen addr, utf-8],
+//!           then [len: u32][job meta, utf-8] (the matrix spec — workers
+//!           build their panel from the roster, not from re-parsed flags)
 //! 4 ID      [rank: u32]
 //! ```
 //!
@@ -48,12 +50,14 @@
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
-use crate::trace::{self, Cat, LaneKind};
+use crate::metrics::WireLink;
+use crate::obs;
+use crate::trace::{self, labels, Cat, LaneKind};
 use crate::{Error, Result};
 
 /// Which transport the fabric should run over.
@@ -85,6 +89,101 @@ impl std::str::FromStr for TransportKind {
                 "unknown transport '{other}' (valid: chan, tcp)"
             ))),
         }
+    }
+}
+
+/// Always-on per-peer wire accounting. Only payload (DATA) frames count,
+/// and the byte figure is `8 × f64s` — payload bytes, not transport
+/// framing — so the in-process channel transport and the TCP transport
+/// produce **identical** books for the same solve. The plain atomic cells
+/// feed [`WireLink`]s into the per-rank report; when the [`obs`] registry
+/// was enabled at construction time the book additionally feeds the
+/// process-wide `hypipe_wire_{tx,rx}_{bytes,msgs}` counters, labelled
+/// `{rank, peer}`.
+pub struct WireBook {
+    rank: usize,
+    cells: Vec<WireCell>,
+}
+
+struct WireCell {
+    tx_bytes: AtomicU64,
+    tx_msgs: AtomicU64,
+    rx_bytes: AtomicU64,
+    rx_msgs: AtomicU64,
+    /// Registry handles, present only when `obs::enabled()` held at
+    /// endpoint construction (registration takes a lock and allocates;
+    /// the plain cells above are free).
+    obs: Option<WireObs>,
+}
+
+struct WireObs {
+    tx_bytes: obs::Counter,
+    tx_msgs: obs::Counter,
+    rx_bytes: obs::Counter,
+    rx_msgs: obs::Counter,
+}
+
+impl WireBook {
+    fn new(rank: usize, ranks: usize) -> WireBook {
+        let with_obs = obs::enabled();
+        let cells = (0..ranks)
+            .map(|peer| WireCell {
+                tx_bytes: AtomicU64::new(0),
+                tx_msgs: AtomicU64::new(0),
+                rx_bytes: AtomicU64::new(0),
+                rx_msgs: AtomicU64::new(0),
+                obs: (with_obs && peer != rank).then(|| {
+                    let (r, p) = (rank.to_string(), peer.to_string());
+                    let labels: &[(&str, &str)] = &[("rank", &r), ("peer", &p)];
+                    WireObs {
+                        tx_bytes: obs::counter("hypipe_wire_tx_bytes", labels),
+                        tx_msgs: obs::counter("hypipe_wire_tx_msgs", labels),
+                        rx_bytes: obs::counter("hypipe_wire_rx_bytes", labels),
+                        rx_msgs: obs::counter("hypipe_wire_rx_msgs", labels),
+                    }
+                }),
+            })
+            .collect();
+        WireBook { rank, cells }
+    }
+
+    fn sent(&self, to: usize, doubles: usize) {
+        let bytes = 8 * doubles as u64;
+        let c = &self.cells[to];
+        c.tx_bytes.fetch_add(bytes, Ordering::Relaxed);
+        c.tx_msgs.fetch_add(1, Ordering::Relaxed);
+        if let Some(o) = &c.obs {
+            o.tx_bytes.add(bytes);
+            o.tx_msgs.inc();
+        }
+    }
+
+    fn received(&self, from: usize, doubles: usize) {
+        let bytes = 8 * doubles as u64;
+        let c = &self.cells[from];
+        c.rx_bytes.fetch_add(bytes, Ordering::Relaxed);
+        c.rx_msgs.fetch_add(1, Ordering::Relaxed);
+        if let Some(o) = &c.obs {
+            o.rx_bytes.add(bytes);
+            o.rx_msgs.inc();
+        }
+    }
+
+    /// One [`WireLink`] per remote rank, ascending peer order (the self
+    /// slot is omitted) — the same link set on every transport.
+    fn links(&self) -> Vec<WireLink> {
+        self.cells
+            .iter()
+            .enumerate()
+            .filter(|(peer, _)| *peer != self.rank)
+            .map(|(peer, c)| WireLink {
+                peer,
+                tx_bytes: c.tx_bytes.load(Ordering::Relaxed),
+                tx_msgs: c.tx_msgs.load(Ordering::Relaxed),
+                rx_bytes: c.rx_bytes.load(Ordering::Relaxed),
+                rx_msgs: c.rx_msgs.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 }
 
@@ -126,6 +225,11 @@ pub trait Transport: Send {
     }
     /// Transport flavor, for labels and reports.
     fn kind(&self) -> TransportKind;
+    /// Per-peer payload traffic (one [`WireLink`] per remote rank,
+    /// ascending peer order). Default: no accounting.
+    fn wire(&self) -> Vec<WireLink> {
+        Vec::new()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -141,6 +245,7 @@ pub struct ChanTransport {
     tx: Vec<Sender<WireMsg>>,
     rx: Receiver<WireMsg>,
     barrier: Arc<Barrier>,
+    book: WireBook,
 }
 
 impl ChanTransport {
@@ -169,6 +274,7 @@ impl ChanTransport {
                     tx,
                     rx,
                     barrier: barrier.clone(),
+                    book: WireBook::new(rank, ranks),
                 }
             })
             .collect()
@@ -185,6 +291,7 @@ impl Transport for ChanTransport {
     }
 
     fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<()> {
+        let doubles = data.len();
         self.tx[to]
             .send(WireMsg {
                 from: self.rank,
@@ -196,18 +303,25 @@ impl Transport for ChanTransport {
                     "rank {}: peer rank {to} hung up",
                     self.rank
                 ))
-            })
+            })?;
+        self.book.sent(to, doubles);
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<WireMsg> {
-        self.rx.recv().map_err(|_| {
+        let m = self.rx.recv().map_err(|_| {
             Error::Transport(format!("rank {}: all peers hung up", self.rank))
-        })
+        })?;
+        self.book.received(m.from, m.data.len());
+        Ok(m)
     }
 
     fn try_recv(&mut self) -> Result<Option<WireMsg>> {
         match self.rx.try_recv() {
-            Ok(m) => Ok(Some(m)),
+            Ok(m) => {
+                self.book.received(m.from, m.data.len());
+                Ok(Some(m))
+            }
             // Disconnected mirrors the original fabric's poll loop: no
             // more messages now; a later blocking recv reports the error.
             Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => Ok(None),
@@ -221,6 +335,10 @@ impl Transport for ChanTransport {
 
     fn kind(&self) -> TransportKind {
         TransportKind::Chan
+    }
+
+    fn wire(&self) -> Vec<WireLink> {
+        self.book.links()
     }
 }
 
@@ -264,7 +382,7 @@ enum Frame {
     Data { from: usize, tag: u64, data: Vec<f64> },
     Barrier { from: usize, epoch: u64 },
     Hello { rank: usize, ranks: usize, addr: String },
-    Roster { addrs: Vec<String> },
+    Roster { addrs: Vec<String>, meta: String },
     Id { rank: usize },
 }
 
@@ -349,13 +467,15 @@ fn encode_hello(rank: usize, ranks: usize, addr: &str) -> Vec<u8> {
     body
 }
 
-fn encode_roster(addrs: &[String]) -> Vec<u8> {
+fn encode_roster(addrs: &[String], meta: &str) -> Vec<u8> {
     let mut body = vec![KIND_ROSTER];
     put_u32(&mut body, addrs.len() as u32);
     for a in addrs {
         put_u16(&mut body, a.len() as u16);
         body.extend_from_slice(a.as_bytes());
     }
+    put_u32(&mut body, meta.len() as u32);
+    body.extend_from_slice(meta.as_bytes());
     body
 }
 
@@ -399,7 +519,9 @@ fn parse_frame(body: &[u8]) -> Result<Frame> {
                 let len = c.u16()? as usize;
                 addrs.push(c.utf8(len)?);
             }
-            Ok(Frame::Roster { addrs })
+            let mlen = c.u32()? as usize;
+            let meta = c.utf8(mlen)?;
+            Ok(Frame::Roster { addrs, meta })
         }
         KIND_ID => Ok(Frame::Id {
             rank: c.u32()? as usize,
@@ -548,12 +670,20 @@ pub struct TcpTransport {
     shutdown: Arc<AtomicBool>,
     epoch: u64,
     wait_s: f64,
+    book: WireBook,
+    meta: String,
 }
 
 impl TcpTransport {
     /// Rank 0: accept `ranks − 1` hellos on `listener`, broadcast the
-    /// roster, keep the hello connections as data links.
-    pub fn host(listener: TcpListener, ranks: usize, cfg: TcpCfg) -> Result<TcpTransport> {
+    /// roster (carrying `meta` — the job's matrix spec — to every
+    /// worker), keep the hello connections as data links.
+    pub fn host(
+        listener: TcpListener,
+        ranks: usize,
+        cfg: TcpCfg,
+        meta: &str,
+    ) -> Result<TcpTransport> {
         assert!(ranks >= 1, "transport: need at least one rank");
         let my_addr = listener
             .local_addr()
@@ -589,12 +719,12 @@ impl TcpTransport {
             roster[rank] = addr;
             streams[rank] = Some(s);
         }
-        let roster_frame = encode_roster(&roster);
+        let roster_frame = encode_roster(&roster, meta);
         for s in streams.iter_mut().flatten() {
             write_frame(s, &roster_frame)
                 .map_err(|e| Error::Transport(format!("roster broadcast: {e}")))?;
         }
-        Self::finish(0, ranks, cfg, streams)
+        Self::finish(0, ranks, cfg, streams, meta.to_string())
     }
 
     /// Rank `1..ranks`: bind a listener at `listen`, dial the rank-0
@@ -623,7 +753,7 @@ impl TcpTransport {
         write_frame(&mut s0, &encode_hello(rank, ranks, &my_addr))
             .map_err(|e| Error::Transport(format!("hello to {host_addr}: {e}")))?;
         let body = read_frame_must(&mut s0, "rendezvous roster")?;
-        let Frame::Roster { addrs } = parse_frame(&body)? else {
+        let Frame::Roster { addrs, meta } = parse_frame(&body)? else {
             return Err(Error::Transport("rendezvous: expected ROSTER".into()));
         };
         if addrs.len() != ranks {
@@ -659,7 +789,13 @@ impl TcpTransport {
             }
             streams[peer] = Some(s);
         }
-        Self::finish(rank, ranks, cfg, streams)
+        Self::finish(rank, ranks, cfg, streams, meta)
+    }
+
+    /// Job metadata the rank-0 roster carried (the matrix spec for
+    /// multi-process runs; empty for in-process fabrics).
+    pub fn meta(&self) -> &str {
+        &self.meta
     }
 
     /// Common tail: clear handshake timeouts, spawn one reader per peer.
@@ -668,6 +804,7 @@ impl TcpTransport {
         ranks: usize,
         cfg: TcpCfg,
         streams: Vec<Option<TcpStream>>,
+        meta: String,
     ) -> Result<TcpTransport> {
         let (data_tx, data_rx) = channel();
         let (bar_tx, bar_rx) = channel();
@@ -709,6 +846,8 @@ impl TcpTransport {
             shutdown,
             epoch: 0,
             wait_s: 0.0,
+            book: WireBook::new(rank, ranks),
+            meta,
         })
     }
 
@@ -719,7 +858,7 @@ impl TcpTransport {
         let res = self.data_rx.recv_timeout(self.cfg.recv_timeout);
         let end = Instant::now();
         self.wait_s += end.duration_since(t0).as_secs_f64();
-        trace::record(LaneKind::Main, "socket:wait", Cat::Net, t0, end, 0);
+        trace::record(LaneKind::Main, labels::SOCKET_WAIT, Cat::Net, t0, end, 0);
         match res {
             Ok(m) => m,
             Err(e) => Err(self.queue_err(e)),
@@ -732,7 +871,7 @@ impl TcpTransport {
         let res = self.bar_rx.recv_timeout(self.cfg.recv_timeout);
         let end = Instant::now();
         self.wait_s += end.duration_since(t0).as_secs_f64();
-        trace::record(LaneKind::Main, "socket:wait", Cat::Net, t0, end, 0);
+        trace::record(LaneKind::Main, labels::SOCKET_WAIT, Cat::Net, t0, end, 0);
         res.map_err(|e| self.queue_err(e))
     }
 
@@ -823,16 +962,26 @@ impl Transport for TcpTransport {
             .unwrap_or_else(|| panic!("rank {rank}: no connection to rank {to}"));
         write_frame(w, &body).map_err(|e| {
             Error::Transport(format!("rank {rank}: send to rank {to} failed: {e}"))
-        })
+        })?;
+        self.book.sent(to, data.len());
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<WireMsg> {
-        self.timed_data_recv()
+        // Counted at delivery (on the consuming thread, like the channel
+        // transport), not in the reader threads, so the rx figures line up
+        // with what the fabric actually absorbed.
+        let m = self.timed_data_recv()?;
+        self.book.received(m.from, m.data.len());
+        Ok(m)
     }
 
     fn try_recv(&mut self) -> Result<Option<WireMsg>> {
         match self.data_rx.try_recv() {
-            Ok(Ok(m)) => Ok(Some(m)),
+            Ok(Ok(m)) => {
+                self.book.received(m.from, m.data.len());
+                Ok(Some(m))
+            }
             Ok(Err(e)) => Err(e),
             Err(_) => Ok(None),
         }
@@ -882,6 +1031,10 @@ impl Transport for TcpTransport {
     fn kind(&self) -> TransportKind {
         TransportKind::Tcp
     }
+
+    fn wire(&self) -> Vec<WireLink> {
+        self.book.links()
+    }
 }
 
 impl Drop for TcpTransport {
@@ -924,10 +1077,17 @@ mod tests {
         };
         assert_eq!((rank, ranks, addr.as_str()), (2, 5, "127.0.0.1:4000"));
         let roster = vec!["a:1".to_string(), "b:22".to_string()];
-        let Frame::Roster { addrs } = parse_frame(&encode_roster(&roster)).unwrap() else {
+        let Frame::Roster { addrs, meta } =
+            parse_frame(&encode_roster(&roster, "poisson2d:64x64")).unwrap()
+        else {
             panic!("not roster");
         };
         assert_eq!(addrs, roster);
+        assert_eq!(meta, "poisson2d:64x64");
+        let Frame::Roster { meta, .. } = parse_frame(&encode_roster(&roster, "")).unwrap() else {
+            panic!("not roster");
+        };
+        assert!(meta.is_empty());
         let Frame::Barrier { from, epoch } = parse_frame(&encode_barrier(1, 9)).unwrap() else {
             panic!("not barrier");
         };
@@ -946,7 +1106,7 @@ mod tests {
         let j = std::thread::spawn(move || {
             TcpTransport::join(1, 2, "127.0.0.1:0", &host_addr, joiner_cfg)
         });
-        let t0 = TcpTransport::host(listener, 2, cfg).ok()?;
+        let t0 = TcpTransport::host(listener, 2, cfg, "banded:100").ok()?;
         let t1 = j.join().ok()?.ok()?;
         Some((t0, t1))
     }
@@ -957,6 +1117,8 @@ mod tests {
             eprintln!("loopback TCP unavailable in this sandbox; skipping");
             return;
         };
+        assert_eq!(t1.meta(), "banded:100", "roster meta reaches the joiner");
+        assert_eq!(t0.meta(), "banded:100");
         t0.send(1, 7, vec![1.5, -2.5]).unwrap();
         let m = t1.recv().unwrap();
         assert_eq!((m.from, m.tag), (0, 7));
@@ -972,6 +1134,37 @@ mod tests {
         t0.barrier().unwrap();
         let t1 = h.join().unwrap();
         assert!(t0.wait_s() >= 0.0 && t1.wait_s() >= 0.0);
+        // Wire book: payload frames only — the barrier frames above must
+        // not appear; bytes are 8 × f64 count.
+        let w0 = t0.wire();
+        let w1 = t1.wire();
+        assert_eq!(w0.len(), 1);
+        assert_eq!(w0[0].peer, 1);
+        assert_eq!((w0[0].tx_bytes, w0[0].tx_msgs), (16, 1));
+        assert_eq!((w0[0].rx_bytes, w0[0].rx_msgs), (8, 1));
+        assert_eq!((w1[0].tx_bytes, w1[0].tx_msgs), (8, 1));
+        assert_eq!((w1[0].rx_bytes, w1[0].rx_msgs), (16, 1));
+    }
+
+    #[test]
+    fn chan_wire_book_counts_payload_frames() {
+        let mut eps = ChanTransport::fabric(3);
+        let mut t2 = eps.pop().unwrap();
+        let mut t1 = eps.pop().unwrap();
+        let mut t0 = eps.pop().unwrap();
+        t0.send(1, 1, vec![0.0; 4]).unwrap();
+        t0.send(2, 1, vec![0.0; 2]).unwrap();
+        t1.send(0, 1, vec![0.0; 8]).unwrap();
+        assert_eq!(t1.recv().unwrap().data.len(), 4);
+        assert_eq!(t2.recv().unwrap().data.len(), 2);
+        assert_eq!(t0.recv().unwrap().data.len(), 8);
+        let w0 = t0.wire();
+        assert_eq!(w0.len(), 2, "one link per remote rank");
+        assert_eq!((w0[0].peer, w0[0].tx_bytes, w0[0].rx_bytes), (1, 32, 64));
+        assert_eq!((w0[1].peer, w0[1].tx_bytes, w0[1].rx_bytes), (2, 16, 0));
+        let w1 = t1.wire();
+        assert_eq!((w1[0].tx_msgs, w1[0].rx_msgs), (1, 1));
+        assert_eq!(w1[1], WireLink { peer: 2, ..Default::default() });
     }
 
     #[test]

@@ -83,6 +83,7 @@ pub mod device;
 pub mod dist;
 pub mod hybrid;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod precond;
 pub mod runtime;

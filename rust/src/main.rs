@@ -2,12 +2,14 @@
 //!
 //! Subcommands:
 //!
-//! * `solve`      — solve one system with a chosen (or auto-selected) method
-//! * `suite`      — run the nine-method comparison on one matrix
-//! * `launch`     — spawn N local TCP workers and run a dist-* method
-//! * `perfmodel`  — run the §IV-C1 calibration and print the decomposition
-//! * `info`       — artifact inventory + cost-model constants
-//! * `gen`        — generate a matrix and write it as MatrixMarket
+//! * `solve`         — solve one system with a chosen (or auto-selected) method
+//! * `suite`         — run the nine-method comparison on one matrix
+//! * `launch`        — spawn N local TCP workers and run a dist-* method
+//! * `analyze`       — phase stats, critical path and overlap from a trace
+//! * `bench-compare` — diff two bench JSON reports, fail on regressions
+//! * `perfmodel`     — run the §IV-C1 calibration and print the decomposition
+//! * `info`          — artifact inventory + cost-model constants
+//! * `gen`           — generate a matrix and write it as MatrixMarket
 //!
 //! Method and option parsing live in [`hypipe::cli::RunConfig`]; method
 //! execution lives in [`hypipe::runtime::Runner`] — this file only maps
@@ -36,6 +38,13 @@ COMMANDS
   suite       run all nine methods on one matrix, print the comparison
   launch      spawn N local worker processes over loopback TCP and run a
               dist-* method across them (one merged report and trace)
+  analyze     read chrome-trace files (--trace-out / launch output) and print
+              per-phase duration stats, per-rank critical paths and the
+              overlap efficiency; --json for machine output
+  bench-compare
+              diff a baseline and a candidate bench report (BENCH_*.json);
+              exits nonzero when a time regresses beyond --threshold
+              (default 0.25 = 25%) — the CI regression gate
   perfmodel   run performance modelling + 2-D decomposition for a matrix
   info        show artifact inventory and cost-model constants
   gen         generate a matrix, write MatrixMarket
@@ -69,6 +78,12 @@ COMMON FLAGS
   --trace-out PATH  write a chrome-trace of measured wall-clock spans
                     (solver iterations, pool, halo, allreduce, socket waits;
                     HYPIPE_TRACE also honored)
+  --metrics-out PATH
+                    enable the metrics registry and write a Prometheus text
+                    snapshot (wire bytes/messages per link, halo pack/unpack
+                    bytes, allreduce payload + in-flight depth, pool task
+                    latencies) after the run; under `launch` the per-rank
+                    snapshots are merged into PATH
   --telemetry-every K
                     sample the true residual every K iterations and attach
                     per-iteration telemetry to the report (default 0 = off;
@@ -89,6 +104,10 @@ MULTI-PROCESS FLAGS (workers; `launch` sets these up for you)
                     per-message receive timeout (default 60000; raise for
                     slow interconnects)
 
+ANALYSIS FLAGS
+  --threshold F     bench-compare: relative slowdown tolerated before a time
+                    metric counts as a regression (default 0.25)
+
 EXAMPLES
   hypipe solve --matrix poisson125:12 --method auto
   hypipe solve --matrix table1:gyro --method h1 --backend native
@@ -97,7 +116,9 @@ EXAMPLES
   hypipe solve --matrix poisson2d:256x256 --method dist-pipecg-l \\
                --pipeline-depth 3 --ranks 4 --reduce-latency-us 1000
   hypipe launch --ranks 3 --method dist-pipecg --matrix poisson2d:128x128 \\
-               --trace-out trace.json
+               --trace-out trace.json --metrics-out metrics.prom
+  hypipe analyze trace.json
+  hypipe bench-compare BENCH_baseline.json BENCH_candidate.json
   hypipe perfmodel --matrix banded:100000,50
 ";
 
@@ -125,6 +146,8 @@ fn run(args: Args) -> Result<()> {
         "solve" => cmd_solve(&args),
         "suite" => cmd_suite(&args),
         "launch" => cmd_launch(&args),
+        "analyze" => cmd_analyze(&args),
+        "bench-compare" => cmd_bench_compare(&args),
         "perfmodel" => cmd_perfmodel(&args),
         "info" => cmd_info(&args),
         "gen" => cmd_gen(&args),
@@ -153,6 +176,17 @@ fn finish_trace(path: Option<&str>) -> Result<()> {
         hypipe::trace::write(std::path::Path::new(p))?;
         hypipe::trace::disable();
         eprintln!("wall-clock trace written to {p}");
+    }
+    Ok(())
+}
+
+/// Write the Prometheus registry snapshot to `path`. No-op when
+/// `--metrics-out` was not given (the registry was never enabled, so every
+/// handle stayed a single-branch no-op).
+fn finish_metrics(path: Option<&str>) -> Result<()> {
+    if let Some(p) = path {
+        std::fs::write(p, hypipe::obs::snapshot().prometheus_text())?;
+        eprintln!("metrics written to {p}");
     }
     Ok(())
 }
@@ -208,7 +242,15 @@ fn print_report(args: &Args, rep: &RunReport) -> Result<()> {
 
 fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<()> {
     if args.has("json") {
-        println!("{}", rep.to_json().to_pretty());
+        let mut j = rep.to_json();
+        // Fold the live registry into the machine report so one document
+        // carries both the solve outcome and the wire/latency metrics.
+        if hypipe::obs::enabled() {
+            if let hypipe::util::json::Json::Obj(m) = &mut j {
+                m.insert("metrics".to_string(), hypipe::obs::snapshot().to_json());
+            }
+        }
+        println!("{}", j.to_pretty());
     } else {
         println!("method          : {} [{} ranks]", rep.method, rep.ranks);
         println!("system          : n={} nnz={}", rep.n, rep.nnz);
@@ -245,6 +287,8 @@ fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<(
                 "reduce hidden",
                 "sock wait",
                 "halo sent",
+                "wire tx",
+                "wire rx",
             ],
         );
         for m in &rep.per_rank {
@@ -258,6 +302,8 @@ fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<(
                 hypipe::util::human_time(m.reduce_hidden_s()),
                 hypipe::util::human_time(m.socket_wait_s),
                 format!("{} f64", m.halo_doubles_sent),
+                format!("{} /{} msg", human_bytes(m.wire_tx_bytes()), m.wire_tx_msgs()),
+                format!("{} /{} msg", human_bytes(m.wire_rx_bytes()), m.wire_rx_msgs()),
             ]);
         }
         println!("{}", t.render());
@@ -274,27 +320,36 @@ fn print_dist_report(args: &Args, rep: &hypipe::metrics::DistReport) -> Result<(
 
 fn cmd_solve(args: &Args) -> Result<()> {
     let rc = RunConfig::from_args(args)?;
-    let a = rc.build()?;
-    let b = a.mul_ones();
-    let pc = Jacobi::from_matrix(&a);
     let tout = trace_out(args);
     if tout.is_some() {
         hypipe::trace::reset();
         hypipe::trace::enable();
     }
-    // One TCP worker of a multi-process job: run the rank body; only
-    // rank 0 gets the assembled report back.
+    // Enable metrics before anything hot is constructed: transports and
+    // fabric contexts only create their registry handles when the switch
+    // is already on.
+    if rc.metrics_out.is_some() {
+        hypipe::obs::enable();
+    }
+    // One TCP worker of a multi-process job: the rank body builds the
+    // system itself — rank 0 from the spec, every other rank from the
+    // spec the rendezvous roster carried. Only rank 0 gets the report.
     if let Some(node) = &rc.node {
-        let rep = exec::run_node(rc.method, &a, &b, &pc, &rc.dist, node)?;
+        let rep = exec::run_node(rc.method, &rc.matrix, &rc.dist, node)?;
         finish_trace(tout.as_deref())?;
+        finish_metrics(rc.metrics_out.as_deref())?;
         return match rep {
             Some(rep) => print_dist_report(args, &rep),
             None => Ok(()),
         };
     }
+    let a = rc.build()?;
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
     if rc.method.is_dist() {
         let rep = rc.runner()?.run_dist(rc.method, &a, &b, &pc, &rc.dist)?;
         finish_trace(tout.as_deref())?;
+        finish_metrics(rc.metrics_out.as_deref())?;
         return print_dist_report(args, &rep);
     }
     let runner = rc.runner()?;
@@ -304,6 +359,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     }
     let rep = runner.run(chosen, &a, &b, &pc)?;
     finish_trace(tout.as_deref())?;
+    finish_metrics(rc.metrics_out.as_deref())?;
     print_report(args, &rep)
 }
 
@@ -346,7 +402,15 @@ fn cmd_suite(args: &Args) -> Result<()> {
 /// Flags forwarded verbatim to every spawned worker: everything the user
 /// gave except the placement/transport flags the launcher owns.
 fn passthrough_flags(args: &Args) -> Vec<String> {
-    const STRIP: &[&str] = &["ranks", "transport", "rank", "listen", "peers", "trace-out"];
+    const STRIP: &[&str] = &[
+        "ranks",
+        "transport",
+        "rank",
+        "listen",
+        "peers",
+        "trace-out",
+        "metrics-out",
+    ];
     let mut out = Vec::new();
     for (k, v) in &args.flags {
         if STRIP.contains(&k.as_str()) {
@@ -385,10 +449,80 @@ fn cmd_launch(args: &Args) -> Result<()> {
         exe: std::env::current_exe()?,
         passthrough: passthrough_flags(args),
         trace_out: trace_out(args),
+        metrics_out: rc.metrics_out.clone(),
     };
     exec::launch(&cfg)?;
     if let Some(t) = &cfg.trace_out {
         eprintln!("merged wall-clock trace written to {t}");
+    }
+    if let Some(m) = &cfg.metrics_out {
+        eprintln!("merged metrics written to {m}");
+    }
+    Ok(())
+}
+
+/// `hypipe analyze <trace.json>...` — offline analytics over chrome-trace
+/// files from `--trace-out` or a `launch` run's merged trace.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        return Err(hypipe::Error::Config(
+            "analyze: give at least one chrome-trace file (written by --trace-out or launch)"
+                .into(),
+        ));
+    }
+    let mut docs = Vec::new();
+    for p in &args.positional {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| hypipe::Error::Config(format!("analyze: cannot read {p}: {e}")))?;
+        let doc = hypipe::util::json::parse(&text)
+            .map_err(|e| hypipe::Error::Config(format!("analyze: {p}: {e}")))?;
+        docs.push(doc);
+    }
+    let analysis = hypipe::obs::analyze::analyze(&docs)?;
+    if args.has("json") {
+        println!("{}", analysis.to_json().to_pretty());
+    } else {
+        println!("{}", analysis.render());
+    }
+    Ok(())
+}
+
+/// `hypipe bench-compare <baseline.json> <candidate.json>` — the CI
+/// regression gate: nonzero exit when a time metric slows beyond the
+/// threshold.
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    if args.positional.len() != 2 {
+        return Err(hypipe::Error::Config(
+            "bench-compare: exactly two files — <baseline.json> <candidate.json>".into(),
+        ));
+    }
+    let threshold: f64 =
+        args.flag_parse("threshold", hypipe::obs::bench_compare::DEFAULT_THRESHOLD)?;
+    if !threshold.is_finite() || threshold < 0.0 {
+        return Err(hypipe::Error::Config(
+            "--threshold: must be a non-negative fraction (0.25 = 25% slower allowed)".into(),
+        ));
+    }
+    let read = |p: &str| -> Result<hypipe::util::json::Json> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| hypipe::Error::Config(format!("bench-compare: cannot read {p}: {e}")))?;
+        hypipe::util::json::parse(&text)
+            .map_err(|e| hypipe::Error::Config(format!("bench-compare: {p}: {e}")))
+    };
+    let base = read(&args.positional[0])?;
+    let cand = read(&args.positional[1])?;
+    let cmp = hypipe::obs::bench_compare::compare(&base, &cand, threshold);
+    if args.has("json") {
+        println!("{}", cmp.to_json().to_pretty());
+    } else {
+        println!("{}", cmp.render());
+    }
+    if !cmp.passed() {
+        return Err(hypipe::Error::Config(format!(
+            "bench-compare: {} metric(s) regressed beyond {:.0}%",
+            cmp.regressions().len(),
+            100.0 * threshold
+        )));
     }
     Ok(())
 }

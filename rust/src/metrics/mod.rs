@@ -152,6 +152,33 @@ impl ReportSet {
     }
 }
 
+/// Per-peer wire traffic of one rank, as counted by the transport. Only
+/// DATA payload frames count (8 bytes per `f64`, one message per send);
+/// barrier and handshake control frames are excluded, so the in-process
+/// channel transport and the TCP transport report **identical** numbers
+/// for the same solve — the conformance suite relies on that.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireLink {
+    /// The remote rank this link talks to.
+    pub peer: usize,
+    pub tx_bytes: u64,
+    pub tx_msgs: u64,
+    pub rx_bytes: u64,
+    pub rx_msgs: u64,
+}
+
+impl WireLink {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("peer", n(self.peer as f64)),
+            ("tx_bytes", n(self.tx_bytes as f64)),
+            ("tx_msgs", n(self.tx_msgs as f64)),
+            ("rx_bytes", n(self.rx_bytes as f64)),
+            ("rx_msgs", n(self.rx_msgs as f64)),
+        ])
+    }
+}
+
 /// Per-rank communication/computation accounting of one distributed solve
 /// (`dist`). Filled in by the rank fabric (reduction waits), the halo
 /// exchange (volume + time) and the distributed solvers (compute).
@@ -184,12 +211,35 @@ pub struct RankMetrics {
     /// the waits already counted in `halo_s`/`reduce_wait_s` — reported
     /// separately so real network stalls are attributable.
     pub socket_wait_s: f64,
+    /// Per-peer wire traffic (payload frames only), one entry per remote
+    /// rank in ascending peer order — same link set on every transport.
+    pub links: Vec<WireLink>,
 }
 
 impl RankMetrics {
     /// Seconds spent communicating (halo + reduction waits).
     pub fn comm_s(&self) -> f64 {
         self.halo_s + self.reduce_wait_s
+    }
+
+    /// Payload bytes this rank put on the wire, all peers.
+    pub fn wire_tx_bytes(&self) -> u64 {
+        self.links.iter().map(|l| l.tx_bytes).sum()
+    }
+
+    /// Payload bytes this rank took off the wire, all peers.
+    pub fn wire_rx_bytes(&self) -> u64 {
+        self.links.iter().map(|l| l.rx_bytes).sum()
+    }
+
+    /// Payload messages sent, all peers.
+    pub fn wire_tx_msgs(&self) -> u64 {
+        self.links.iter().map(|l| l.tx_msgs).sum()
+    }
+
+    /// Payload messages received, all peers.
+    pub fn wire_rx_msgs(&self) -> u64 {
+        self.links.iter().map(|l| l.rx_msgs).sum()
     }
 
     /// Reduction seconds hidden behind local work (in flight but not
@@ -211,6 +261,14 @@ impl RankMetrics {
             ("reduces", n(self.reduces as f64)),
             ("halo_doubles_sent", n(self.halo_doubles_sent as f64)),
             ("socket_wait_s", n(self.socket_wait_s)),
+            ("wire_tx_bytes", n(self.wire_tx_bytes() as f64)),
+            ("wire_tx_msgs", n(self.wire_tx_msgs() as f64)),
+            ("wire_rx_bytes", n(self.wire_rx_bytes() as f64)),
+            ("wire_rx_msgs", n(self.wire_rx_msgs() as f64)),
+            (
+                "links",
+                arr(self.links.iter().map(|l| l.to_json()).collect()),
+            ),
         ])
     }
 }
@@ -496,6 +554,38 @@ mod tests {
         let lanes: std::collections::BTreeSet<u32> =
             tl.events().iter().map(|e| e.tid).collect();
         assert_eq!(lanes.len(), 6, "two lanes per rank");
+    }
+
+    #[test]
+    fn wire_link_aggregates_sum_over_peers() {
+        let m = RankMetrics {
+            rank: 1,
+            links: vec![
+                WireLink {
+                    peer: 0,
+                    tx_bytes: 800,
+                    tx_msgs: 10,
+                    rx_bytes: 160,
+                    rx_msgs: 2,
+                },
+                WireLink {
+                    peer: 2,
+                    tx_bytes: 80,
+                    tx_msgs: 1,
+                    rx_bytes: 240,
+                    rx_msgs: 3,
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(m.wire_tx_bytes(), 880);
+        assert_eq!(m.wire_tx_msgs(), 11);
+        assert_eq!(m.wire_rx_bytes(), 400);
+        assert_eq!(m.wire_rx_msgs(), 5);
+        let j = m.to_json();
+        assert_eq!(j.get("wire_tx_bytes").as_f64(), Some(880.0));
+        assert_eq!(j.get("links").as_arr().map(|a| a.len()), Some(2));
+        assert_eq!(j.get("links").as_arr().unwrap()[1].get("peer").as_f64(), Some(2.0));
     }
 
     #[test]

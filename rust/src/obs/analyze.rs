@@ -1,0 +1,561 @@
+//! Offline chrome-trace analytics: `hypipe analyze <trace.json>...`.
+//!
+//! Consumes the wall-clock traces the span tracer writes (`crate::trace`,
+//! `--trace-out`, or the merged multi-process trace from `hypipe launch`)
+//! and answers the questions the raw spans only imply:
+//!
+//! * **Per-phase duration stats** — count / p50 / p95 / p99 / total / max
+//!   per span label, across all ranks (nearest-rank quantiles over the
+//!   exact durations, not histogram approximations).
+//! * **Per-rank overlap efficiency** — exposed `allreduce:wait` versus
+//!   posted `allreduce:inflight` time, the same
+//!   `1 - wait/inflight` formula as
+//!   [`DistReport::overlap_efficiency`](crate::metrics::DistReport::overlap_efficiency),
+//!   so the analyzer and the live report cross-check each other (pinned
+//!   within 1% in `tests/obs_analytics.rs`).
+//! * **Critical path** — per rank, the *self time* of every phase on the
+//!   rank's main lane (span tree time minus child time, computed with a
+//!   containment stack), ranked; the top entry is the phase bounding the
+//!   rank's makespan. Self times plus the untraced gap sum back to the
+//!   makespan by construction.
+//!
+//! Chrome-trace specifics this relies on (see `trace::chrome_trace`):
+//! `"X"` complete events with `ts`/`dur` in microseconds, `pid` = rank+1
+//! (0 for non-fabric local threads), one `tid` per lane. Lanes are
+//! classified structurally — the main lane carries `iter` spans, the
+//! fabric lane carries `allreduce:inflight` — so the analyzer needs no
+//! thread-name metadata.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::trace::labels;
+use crate::util::json::{self, Json};
+use crate::util::table::Table;
+use crate::{Error, Result};
+
+/// One `"X"` (complete) event pulled out of a trace document.
+#[derive(Debug, Clone)]
+struct Ev {
+    name: String,
+    pid: i64,
+    tid: i64,
+    /// Start, microseconds.
+    ts: f64,
+    /// Duration, microseconds.
+    dur: f64,
+}
+
+impl Ev {
+    fn end(&self) -> f64 {
+        self.ts + self.dur
+    }
+}
+
+/// Duration statistics for one span label, across every rank.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub name: String,
+    pub count: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub total_s: f64,
+    pub max_s: f64,
+}
+
+/// One critical-path component: a phase and its main-lane self time.
+#[derive(Debug, Clone)]
+pub struct PathEntry {
+    pub phase: String,
+    pub self_s: f64,
+    /// Fraction of the rank's makespan.
+    pub share: f64,
+}
+
+/// Per-rank (per-pid) analysis.
+#[derive(Debug, Clone)]
+pub struct RankPath {
+    pub pid: i64,
+    /// `pid - 1` for fabric ranks; -1 for the local (pid 0) process.
+    pub rank: i64,
+    pub makespan_s: f64,
+    /// Number of `iter` spans on the main lane.
+    pub iters: usize,
+    pub reduce_wait_s: f64,
+    pub reduce_inflight_s: f64,
+    pub socket_wait_s: f64,
+    pub overlap_efficiency: f64,
+    /// Makespan not covered by any top-level main-lane span.
+    pub untraced_s: f64,
+    /// Phases by main-lane self time, descending; `critical_path[0]` is
+    /// the phase bounding this rank's makespan.
+    pub critical_path: Vec<PathEntry>,
+}
+
+/// Full analysis of one or more (merged) traces.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub phases: Vec<PhaseStat>,
+    pub ranks: Vec<RankPath>,
+    pub overall_reduce_wait_s: f64,
+    pub overall_reduce_inflight_s: f64,
+    /// Overlap efficiency over the summed per-rank wait/inflight — the
+    /// exact `DistReport::overlap_efficiency` aggregation.
+    pub overall_overlap_efficiency: f64,
+}
+
+/// `1` when nothing was in flight, else `clamp(1 - wait/inflight, 0, 1)` —
+/// kept textually in sync with `DistReport::overlap_efficiency`.
+fn efficiency(wait_s: f64, inflight_s: f64) -> f64 {
+    if inflight_s <= 0.0 {
+        1.0
+    } else {
+        (1.0 - wait_s / inflight_s).clamp(0.0, 1.0)
+    }
+}
+
+fn events_of(doc: &Json) -> Result<Vec<Ev>> {
+    let list = doc
+        .get("traceEvents")
+        .as_arr()
+        .ok_or_else(|| Error::Config("trace document has no traceEvents array".into()))?;
+    let mut out = Vec::new();
+    for e in list {
+        if e.get("ph").as_str() != Some("X") {
+            continue;
+        }
+        let (Some(name), Some(ts)) = (e.get("name").as_str(), e.get("ts").as_f64()) else {
+            continue;
+        };
+        out.push(Ev {
+            name: name.to_string(),
+            pid: e.get("pid").as_f64().unwrap_or(0.0) as i64,
+            tid: e.get("tid").as_f64().unwrap_or(0.0) as i64,
+            ts,
+            dur: e.get("dur").as_f64().unwrap_or(0.0).max(0.0),
+        });
+    }
+    Ok(out)
+}
+
+/// Nearest-rank quantile over an ascending-sorted slice.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Main-lane self time per label plus the total top-level covered time
+/// (all in microseconds). Events must belong to one lane, where spans
+/// nest or are disjoint (the tracer's per-lane invariant).
+fn self_times(evs: &[&Ev]) -> (BTreeMap<String, f64>, f64) {
+    struct Frame {
+        end: f64,
+        dur: f64,
+        name: String,
+        child: f64,
+    }
+    fn close(stack: &mut Vec<Frame>, selfs: &mut BTreeMap<String, f64>, toplevel: &mut f64) {
+        let f = stack.pop().unwrap();
+        *selfs.entry(f.name).or_insert(0.0) += (f.dur - f.child).max(0.0);
+        match stack.last_mut() {
+            Some(p) => p.child += f.dur,
+            None => *toplevel += f.dur,
+        }
+    }
+    let mut sorted: Vec<&Ev> = evs.to_vec();
+    sorted.sort_by(|a, b| a.ts.total_cmp(&b.ts).then(b.end().total_cmp(&a.end())));
+    let mut selfs = BTreeMap::new();
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut toplevel = 0.0;
+    for e in sorted {
+        while stack.last().map(|f| f.end <= e.ts).unwrap_or(false) {
+            close(&mut stack, &mut selfs, &mut toplevel);
+        }
+        stack.push(Frame {
+            end: e.end(),
+            dur: e.dur,
+            name: e.name.clone(),
+            child: 0.0,
+        });
+    }
+    while !stack.is_empty() {
+        close(&mut stack, &mut selfs, &mut toplevel);
+    }
+    (selfs, toplevel)
+}
+
+/// Analyze one or more trace documents (merged as one event set).
+pub fn analyze(docs: &[Json]) -> Result<Analysis> {
+    let mut evs = Vec::new();
+    for d in docs {
+        evs.extend(events_of(d)?);
+    }
+    if evs.is_empty() {
+        return Err(Error::Config(
+            "no complete ('X') span events in the trace(s) — was tracing enabled \
+             (--trace-out / HYPIPE_TRACE)?"
+                .into(),
+        ));
+    }
+
+    // Per-phase stats across every rank.
+    let mut by_name: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for e in &evs {
+        by_name.entry(&e.name).or_default().push(e.dur * 1e-6);
+    }
+    let phases = by_name
+        .into_iter()
+        .map(|(name, mut durs)| {
+            durs.sort_by(f64::total_cmp);
+            PhaseStat {
+                name: name.to_string(),
+                count: durs.len(),
+                p50_s: quantile(&durs, 0.50),
+                p95_s: quantile(&durs, 0.95),
+                p99_s: quantile(&durs, 0.99),
+                total_s: durs.iter().sum(),
+                max_s: durs.last().copied().unwrap_or(0.0),
+            }
+        })
+        .collect();
+
+    // Per-rank (per-pid) critical path + overlap.
+    let pids: BTreeSet<i64> = evs.iter().map(|e| e.pid).collect();
+    let mut ranks = Vec::new();
+    let (mut all_wait, mut all_inflight) = (0.0, 0.0);
+    for pid in pids {
+        let of_pid: Vec<&Ev> = evs.iter().filter(|e| e.pid == pid).collect();
+        let t0 = of_pid.iter().map(|e| e.ts).fold(f64::INFINITY, f64::min);
+        let t1 = of_pid.iter().map(|e| e.end()).fold(0.0, f64::max);
+        let makespan_us = (t1 - t0).max(0.0);
+        let sum_of = |label: &str| -> f64 {
+            of_pid
+                .iter()
+                .filter(|e| e.name == label)
+                .map(|e| e.dur * 1e-6)
+                .sum()
+        };
+        let wait_s = sum_of(labels::ALLREDUCE_WAIT);
+        let inflight_s = sum_of(labels::ALLREDUCE_INFLIGHT);
+        let socket_s = sum_of(labels::SOCKET_WAIT);
+        all_wait += wait_s;
+        all_inflight += inflight_s;
+
+        // The fabric lane carries the in-flight spans; the main lane
+        // carries the iteration spans (fallback: busiest non-fabric lane).
+        let fabric_tids: BTreeSet<i64> = of_pid
+            .iter()
+            .filter(|e| e.name == labels::ALLREDUCE_INFLIGHT)
+            .map(|e| e.tid)
+            .collect();
+        let mut iter_count: BTreeMap<i64, usize> = BTreeMap::new();
+        let mut busy: BTreeMap<i64, f64> = BTreeMap::new();
+        for e in &of_pid {
+            if e.name == labels::ITER {
+                *iter_count.entry(e.tid).or_insert(0) += 1;
+            }
+            if !fabric_tids.contains(&e.tid) {
+                *busy.entry(e.tid).or_insert(0.0) += e.dur;
+            }
+        }
+        let main_tid = iter_count
+            .iter()
+            .max_by_key(|(_, c)| **c)
+            .map(|(t, _)| *t)
+            .or_else(|| {
+                busy.iter()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(t, _)| *t)
+            });
+        let main_evs: Vec<&Ev> = match main_tid {
+            Some(t) => of_pid.iter().copied().filter(|e| e.tid == t).collect(),
+            None => Vec::new(),
+        };
+        let iters = main_evs.iter().filter(|e| e.name == labels::ITER).count();
+        let (selfs_us, toplevel_us) = self_times(&main_evs);
+        let makespan_s = makespan_us * 1e-6;
+        let mut critical_path: Vec<PathEntry> = selfs_us
+            .into_iter()
+            .map(|(phase, us)| PathEntry {
+                phase,
+                self_s: us * 1e-6,
+                share: if makespan_s > 0.0 {
+                    us * 1e-6 / makespan_s
+                } else {
+                    0.0
+                },
+            })
+            .collect();
+        critical_path.sort_by(|a, b| b.self_s.total_cmp(&a.self_s));
+        ranks.push(RankPath {
+            pid,
+            rank: pid - 1,
+            makespan_s,
+            iters,
+            reduce_wait_s: wait_s,
+            reduce_inflight_s: inflight_s,
+            socket_wait_s: socket_s,
+            overlap_efficiency: efficiency(wait_s, inflight_s),
+            untraced_s: (makespan_us - toplevel_us).max(0.0) * 1e-6,
+            critical_path,
+        });
+    }
+
+    Ok(Analysis {
+        phases,
+        ranks,
+        overall_reduce_wait_s: all_wait,
+        overall_reduce_inflight_s: all_inflight,
+        overall_overlap_efficiency: efficiency(all_wait, all_inflight),
+    })
+}
+
+impl Analysis {
+    /// Machine output for `hypipe analyze --json`.
+    pub fn to_json(&self) -> Json {
+        let phases = self
+            .phases
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("phase", json::s(&p.name)),
+                    ("count", json::n(p.count as f64)),
+                    ("p50_s", json::n(p.p50_s)),
+                    ("p95_s", json::n(p.p95_s)),
+                    ("p99_s", json::n(p.p99_s)),
+                    ("total_s", json::n(p.total_s)),
+                    ("max_s", json::n(p.max_s)),
+                ])
+            })
+            .collect();
+        let ranks = self
+            .ranks
+            .iter()
+            .map(|r| {
+                let path = r
+                    .critical_path
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("phase", json::s(&p.phase)),
+                            ("self_s", json::n(p.self_s)),
+                            ("share", json::n(p.share)),
+                        ])
+                    })
+                    .collect();
+                json::obj(vec![
+                    ("pid", json::n(r.pid as f64)),
+                    ("rank", json::n(r.rank as f64)),
+                    ("makespan_s", json::n(r.makespan_s)),
+                    ("iters", json::n(r.iters as f64)),
+                    ("reduce_wait_s", json::n(r.reduce_wait_s)),
+                    ("reduce_inflight_s", json::n(r.reduce_inflight_s)),
+                    ("socket_wait_s", json::n(r.socket_wait_s)),
+                    ("overlap_efficiency", json::n(r.overlap_efficiency)),
+                    ("untraced_s", json::n(r.untraced_s)),
+                    ("critical_path", json::arr(path)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("phases", json::arr(phases)),
+            ("ranks", json::arr(ranks)),
+            (
+                "overall",
+                json::obj(vec![
+                    ("reduce_wait_s", json::n(self.overall_reduce_wait_s)),
+                    ("reduce_inflight_s", json::n(self.overall_reduce_inflight_s)),
+                    (
+                        "overlap_efficiency",
+                        json::n(self.overall_overlap_efficiency),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human output: phase-stat and critical-path tables.
+    pub fn render(&self) -> String {
+        use crate::util::human_time as ht;
+        let mut t = Table::new(
+            "per-phase durations (all ranks)",
+            &["phase", "count", "p50", "p95", "p99", "total", "max"],
+        );
+        for p in &self.phases {
+            t.row(vec![
+                p.name.clone(),
+                p.count.to_string(),
+                ht(p.p50_s),
+                ht(p.p95_s),
+                ht(p.p99_s),
+                ht(p.total_s),
+                ht(p.max_s),
+            ]);
+        }
+        let mut r = Table::new(
+            "per-rank critical path & overlap",
+            &[
+                "rank",
+                "makespan",
+                "iters",
+                "bounding phase",
+                "self",
+                "share",
+                "reduce wait",
+                "inflight",
+                "sock wait",
+                "overlap",
+            ],
+        );
+        for rk in &self.ranks {
+            let (phase, self_s, share) = rk
+                .critical_path
+                .first()
+                .map(|p| (p.phase.clone(), p.self_s, p.share))
+                .unwrap_or(("-".into(), 0.0, 0.0));
+            r.row(vec![
+                if rk.rank < 0 {
+                    "local".into()
+                } else {
+                    rk.rank.to_string()
+                },
+                ht(rk.makespan_s),
+                rk.iters.to_string(),
+                phase,
+                ht(self_s),
+                format!("{:.1}%", 100.0 * share),
+                ht(rk.reduce_wait_s),
+                ht(rk.reduce_inflight_s),
+                ht(rk.socket_wait_s),
+                format!("{:.1}%", 100.0 * rk.overlap_efficiency),
+            ]);
+        }
+        let mut out = format!("{}\n{}", t.render(), r.render());
+        for rk in &self.ranks {
+            let top: Vec<String> = rk
+                .critical_path
+                .iter()
+                .take(4)
+                .map(|p| format!("{} {:.1}%", p.phase, 100.0 * p.share))
+                .collect();
+            let who = if rk.rank < 0 {
+                "local".to_string()
+            } else {
+                format!("rank {}", rk.rank)
+            };
+            out.push_str(&format!(
+                "{who} path: {} | untraced {:.1}%\n",
+                top.join(" > "),
+                100.0 * rk.untraced_s / rk.makespan_s.max(1e-30)
+            ));
+        }
+        out.push_str(&format!(
+            "overall reduce overlap: {:.1}% hidden ({} exposed of {} in flight)\n",
+            100.0 * self.overall_overlap_efficiency,
+            ht(self.overall_reduce_wait_s),
+            ht(self.overall_reduce_inflight_s)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, pid: f64, tid: f64, ts: f64, dur: f64) -> Json {
+        json::obj(vec![
+            ("ph", json::s("X")),
+            ("name", json::s(name)),
+            ("pid", json::n(pid)),
+            ("tid", json::n(tid)),
+            ("ts", json::n(ts)),
+            ("dur", json::n(dur)),
+        ])
+    }
+
+    fn doc(events: Vec<Json>) -> Json {
+        json::obj(vec![("traceEvents", json::arr(events))])
+    }
+
+    #[test]
+    fn self_time_uses_containment_not_totals() {
+        // iter [0,100] contains spmv [10,40] and halo [50,90]:
+        // iter self = 100 - 30 - 40 = 30.
+        let d = doc(vec![
+            ev("iter", 1.0, 1.0, 0.0, 100.0),
+            ev("spmv", 1.0, 1.0, 10.0, 30.0),
+            ev("halo", 1.0, 1.0, 50.0, 40.0),
+        ]);
+        let a = analyze(&[d]).unwrap();
+        assert_eq!(a.ranks.len(), 1);
+        let r = &a.ranks[0];
+        assert_eq!(r.rank, 0);
+        let get = |name: &str| {
+            r.critical_path
+                .iter()
+                .find(|p| p.phase == name)
+                .map(|p| p.self_s)
+                .unwrap()
+        };
+        assert!((get("halo") - 40e-6).abs() < 1e-12);
+        assert!((get("spmv") - 30e-6).abs() < 1e-12);
+        assert!((get("iter") - 30e-6).abs() < 1e-12);
+        // bounding phase is halo (largest self time)
+        assert_eq!(r.critical_path[0].phase, "halo");
+        // self sums + untraced == makespan
+        let sum: f64 = r.critical_path.iter().map(|p| p.self_s).sum();
+        assert!((sum + r.untraced_s - r.makespan_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_efficiency_matches_dist_formula() {
+        // 10us exposed of 100us in flight -> 90% hidden.
+        let d = doc(vec![
+            ev("iter", 1.0, 1.0, 0.0, 200.0),
+            ev("allreduce:wait", 1.0, 1.0, 150.0, 10.0),
+            ev("allreduce:inflight", 1.0, 2.0, 60.0, 100.0),
+        ]);
+        let a = analyze(&[d]).unwrap();
+        let r = &a.ranks[0];
+        assert!((r.overlap_efficiency - 0.9).abs() < 1e-12, "{}", r.overlap_efficiency);
+        assert!((a.overall_overlap_efficiency - 0.9).abs() < 1e-12);
+        // the fabric lane (tid 2) must not be mistaken for the main lane
+        assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn phase_quantiles_are_nearest_rank() {
+        let events = (1..=100)
+            .map(|i| ev("spmv", 1.0, 1.0, i as f64 * 1000.0, i as f64))
+            .collect();
+        let a = analyze(&[doc(events)]).unwrap();
+        let p = a.phases.iter().find(|p| p.name == "spmv").unwrap();
+        assert_eq!(p.count, 100);
+        assert!((p.p50_s - 50e-6).abs() < 1e-12);
+        assert!((p.p95_s - 95e-6).abs() < 1e-12);
+        assert!((p.p99_s - 99e-6).abs() < 1e-12);
+        assert!((p.max_s - 100e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merges_multiple_documents_and_pids() {
+        let d1 = doc(vec![ev("iter", 1.0, 1.0, 0.0, 10.0)]);
+        let d2 = doc(vec![ev("iter", 2.0, 1.0, 0.0, 20.0)]);
+        let a = analyze(&[d1, d2]).unwrap();
+        assert_eq!(a.ranks.len(), 2);
+        assert_eq!(a.phases[0].count, 2);
+        let j = a.to_json();
+        assert_eq!(j.get("ranks").as_arr().unwrap().len(), 2);
+        assert!(!a.render().is_empty());
+    }
+
+    #[test]
+    fn empty_trace_is_an_error() {
+        assert!(analyze(&[doc(vec![])]).is_err());
+        assert!(analyze(&[json::obj(vec![])]).is_err());
+    }
+}

@@ -1,0 +1,363 @@
+//! Bench regression gate: `hypipe bench-compare <baseline> <candidate>`.
+//!
+//! Diffs two `BENCH_<name>.json` documents (the machine output every
+//! bench writes via `bench::write_json`) by walking matching numeric
+//! paths (`sweep[2].pipecg_per_iter_s`, ...) and classifying each leaf by
+//! name:
+//!
+//! * **time** (`*_s`, `*_us`, `*_ns`, `*_seconds`, `*wall*`, `*_time`) —
+//!   regressed when the candidate exceeds the baseline by more than the
+//!   noise threshold;
+//! * **speedup** (`*speedup*`) — regressed when the candidate falls short
+//!   of the baseline by more than the threshold;
+//! * **info** (counts, sizes, fractions, configuration) — compared for
+//!   the report, never a failure.
+//!
+//! Paths present on only one side are warnings, not failures — bench
+//! schemas evolve. The CLI exits nonzero iff any regression survives,
+//! which is the whole point: CI runs a bench twice (or against a stored
+//! baseline) and gates the merge on it.
+
+use std::collections::BTreeSet;
+
+use crate::util::json::{self, Json};
+use crate::util::table::Table;
+
+/// Default relative noise threshold: wall-clock benches on shared CI
+/// runners jitter; 25% separates real regressions from scheduler noise.
+pub const DEFAULT_THRESHOLD: f64 = 0.25;
+
+/// How a numeric leaf is judged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Lower is better; regression when candidate grows past threshold.
+    Time,
+    /// Higher is better; regression when candidate shrinks past threshold.
+    Speedup,
+    /// Compared for the report only, never a failure.
+    Info,
+}
+
+impl Kind {
+    fn name(&self) -> &'static str {
+        match self {
+            Kind::Time => "time",
+            Kind::Speedup => "speedup",
+            Kind::Info => "info",
+        }
+    }
+}
+
+/// One compared numeric leaf.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    /// Dotted path into the documents, e.g. `sweep[0].pcg_per_iter_s`.
+    pub path: String,
+    pub kind: Kind,
+    pub base: f64,
+    pub cand: f64,
+    pub regressed: bool,
+}
+
+impl Delta {
+    /// `cand / base`; 1 when both are 0, +inf when only the base is 0.
+    pub fn ratio(&self) -> f64 {
+        if self.base != 0.0 {
+            self.cand / self.base
+        } else if self.cand == 0.0 {
+            1.0
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// The full diff of two bench documents.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub threshold: f64,
+    pub deltas: Vec<Delta>,
+    /// Paths present on only one side (schema drift), reported not failed.
+    pub missing: Vec<String>,
+}
+
+/// Classify a leaf field by its name (the last path segment, index
+/// brackets stripped).
+pub fn classify(leaf: &str) -> Kind {
+    let l = leaf.to_ascii_lowercase();
+    if l.contains("speedup") {
+        Kind::Speedup
+    } else if l.ends_with("_s")
+        || l.ends_with("_us")
+        || l.ends_with("_ns")
+        || l.ends_with("_seconds")
+        || l.ends_with("_time")
+        || l.contains("wall")
+    {
+        Kind::Time
+    } else {
+        Kind::Info
+    }
+}
+
+fn leaf_of(path: &str) -> &str {
+    let seg = path.rsplit('.').next().unwrap_or(path);
+    match seg.find('[') {
+        Some(i) => &seg[..i],
+        None => seg,
+    }
+}
+
+fn walk(path: &str, base: &Json, cand: &Json, out: &mut Comparison) {
+    match (base, cand) {
+        (Json::Obj(bo), Json::Obj(co)) => {
+            let keys: BTreeSet<&String> = bo.keys().chain(co.keys()).collect();
+            for k in keys {
+                let sub = if path.is_empty() {
+                    k.to_string()
+                } else {
+                    format!("{path}.{k}")
+                };
+                match (bo.get(k), co.get(k)) {
+                    (Some(b), Some(c)) => walk(&sub, b, c, out),
+                    (Some(_), None) => out.missing.push(format!("{sub} (missing in candidate)")),
+                    (None, Some(_)) => out.missing.push(format!("{sub} (missing in baseline)")),
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        (Json::Arr(ba), Json::Arr(ca)) => {
+            for i in 0..ba.len().min(ca.len()) {
+                walk(&format!("{path}[{i}]"), &ba[i], &ca[i], out);
+            }
+            if ba.len() != ca.len() {
+                out.missing.push(format!(
+                    "{path} (length {} in baseline vs {} in candidate)",
+                    ba.len(),
+                    ca.len()
+                ));
+            }
+        }
+        (Json::Num(b), Json::Num(c)) => {
+            let kind = classify(leaf_of(path));
+            let regressed = match kind {
+                Kind::Time => *b > 0.0 && *c > *b * (1.0 + out.threshold),
+                Kind::Speedup => *b > 0.0 && *c < *b * (1.0 - out.threshold),
+                Kind::Info => false,
+            };
+            out.deltas.push(Delta {
+                path: path.to_string(),
+                kind,
+                base: *b,
+                cand: *c,
+                regressed,
+            });
+        }
+        // Equal-typed non-numeric leaves (names, flags) carry no verdict;
+        // a type mismatch is schema drift.
+        (b, c) => {
+            if std::mem::discriminant(b) != std::mem::discriminant(c) {
+                out.missing.push(format!("{path} (type mismatch)"));
+            }
+        }
+    }
+}
+
+/// Diff `base` against `cand` with a relative noise `threshold`
+/// (0.25 = 25%).
+pub fn compare(base: &Json, cand: &Json, threshold: f64) -> Comparison {
+    let mut out = Comparison {
+        threshold,
+        deltas: Vec::new(),
+        missing: Vec::new(),
+    };
+    walk("", base, cand, &mut out);
+    out
+}
+
+impl Comparison {
+    pub fn regressions(&self) -> Vec<&Delta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    /// True when no time/speedup leaf regressed beyond the threshold.
+    pub fn passed(&self) -> bool {
+        self.deltas.iter().all(|d| !d.regressed)
+    }
+
+    /// Human report: regression table (or the worst movers when clean)
+    /// plus schema-drift warnings.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let regs = self.regressions();
+        let mut t = Table::new(
+            &format!(
+                "{} (threshold {:.0}%, {} compared values)",
+                if regs.is_empty() {
+                    "bench-compare: no regressions"
+                } else {
+                    "bench-compare: REGRESSIONS"
+                },
+                100.0 * self.threshold,
+                self.deltas.len()
+            ),
+            &["path", "kind", "baseline", "candidate", "ratio", "verdict"],
+        );
+        let mut shown: Vec<&Delta> = if regs.is_empty() {
+            // Clean run: show the biggest movers for context.
+            let mut judged: Vec<&Delta> = self
+                .deltas
+                .iter()
+                .filter(|d| d.kind != Kind::Info)
+                .collect();
+            judged.sort_by(|a, b| {
+                (b.ratio() - 1.0)
+                    .abs()
+                    .total_cmp(&(a.ratio() - 1.0).abs())
+            });
+            judged.truncate(10);
+            judged
+        } else {
+            regs
+        };
+        shown.sort_by(|a, b| a.path.cmp(&b.path));
+        for d in shown {
+            t.row(vec![
+                d.path.clone(),
+                d.kind.name().to_string(),
+                format!("{:.4e}", d.base),
+                format!("{:.4e}", d.cand),
+                format!("{:.3}x", d.ratio()),
+                if d.regressed { "REGRESSED" } else { "ok" }.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        for m in &self.missing {
+            out.push_str(&format!("warning: {m}\n"));
+        }
+        out
+    }
+
+    /// Machine output for `hypipe bench-compare --json`.
+    pub fn to_json(&self) -> Json {
+        let regs = self
+            .regressions()
+            .iter()
+            .map(|d| {
+                json::obj(vec![
+                    ("path", json::s(&d.path)),
+                    ("kind", json::s(d.kind.name())),
+                    ("baseline", json::n(d.base)),
+                    ("candidate", json::n(d.cand)),
+                    ("ratio", json::n(d.ratio())),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("threshold", json::n(self.threshold)),
+            ("compared", json::n(self.deltas.len() as f64)),
+            ("passed", Json::Bool(self.passed())),
+            ("regressions", json::arr(regs)),
+            (
+                "missing",
+                json::arr(self.missing.iter().map(|m| json::s(m)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bench_doc(per_iter: f64, speedup: f64) -> Json {
+        json::obj(vec![
+            ("bench", json::s("ablation_dist_overlap")),
+            ("n", json::n(65536.0)),
+            (
+                "sweep",
+                json::arr(vec![json::obj(vec![
+                    ("reduce_latency_us", json::n(200.0)),
+                    ("pipecg_per_iter_s", json::n(per_iter)),
+                    ("pipecg_speedup", json::n(speedup)),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn self_compare_passes() {
+        let d = bench_doc(1e-4, 1.8);
+        let c = compare(&d, &d, 0.0);
+        assert!(c.passed());
+        assert!(c.missing.is_empty());
+        assert!(c.deltas.len() >= 4);
+        assert!(c.render().contains("no regressions"));
+    }
+
+    #[test]
+    fn time_regression_flags_and_speedup_drop_flags() {
+        let base = bench_doc(1e-4, 2.0);
+        // 2x slower per-iter: past a 25% threshold.
+        let slow = compare(&base, &bench_doc(2e-4, 2.0), DEFAULT_THRESHOLD);
+        assert!(!slow.passed());
+        let regs = slow.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].path, "sweep[0].pipecg_per_iter_s");
+        assert_eq!(regs[0].kind, Kind::Time);
+        assert!(slow.render().contains("REGRESSED"));
+        // speedup halves: also a regression
+        let worse = compare(&base, &bench_doc(1e-4, 1.0), DEFAULT_THRESHOLD);
+        assert!(!worse.passed());
+        assert_eq!(worse.regressions()[0].kind, Kind::Speedup);
+        // within threshold: passes both directions
+        let ok = compare(&base, &bench_doc(1.1e-4, 1.9), DEFAULT_THRESHOLD);
+        assert!(ok.passed(), "{}", ok.render());
+    }
+
+    #[test]
+    fn faster_candidate_never_fails() {
+        let c = compare(&bench_doc(1e-3, 1.0), &bench_doc(1e-5, 9.0), 0.01);
+        assert!(c.passed());
+    }
+
+    #[test]
+    fn info_fields_never_fail() {
+        let mut b = bench_doc(1e-4, 2.0);
+        let mut c = bench_doc(1e-4, 2.0);
+        if let Json::Obj(o) = &mut b {
+            o.insert("iters".into(), json::n(40.0));
+        }
+        if let Json::Obj(o) = &mut c {
+            o.insert("iters".into(), json::n(400.0));
+        }
+        assert!(compare(&b, &c, 0.0).passed());
+    }
+
+    #[test]
+    fn missing_paths_warn_not_fail() {
+        let base = bench_doc(1e-4, 2.0);
+        let mut cand = bench_doc(1e-4, 2.0);
+        if let Json::Obj(o) = &mut cand {
+            o.remove("n");
+            o.insert("new_field_s".into(), json::n(1.0));
+        }
+        let c = compare(&base, &cand, DEFAULT_THRESHOLD);
+        assert!(c.passed());
+        assert_eq!(c.missing.len(), 2, "{:?}", c.missing);
+        let j = c.to_json();
+        assert_eq!(j.get("passed").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn classification_rules() {
+        assert_eq!(classify("pcg_per_iter_s"), Kind::Time);
+        assert_eq!(classify("reduce_latency_us"), Kind::Time);
+        assert_eq!(classify("wall_seconds"), Kind::Time);
+        assert_eq!(classify("pipecg_speedup"), Kind::Speedup);
+        assert_eq!(classify("nnz"), Kind::Info);
+        assert_eq!(classify("pcg_comm_fraction"), Kind::Info);
+        assert_eq!(leaf_of("sweep[0].pcg_per_iter_s"), "pcg_per_iter_s");
+        assert_eq!(leaf_of("history[3]"), "history");
+    }
+}

@@ -1,0 +1,691 @@
+//! Observability analytics: a process-wide metrics registry plus the
+//! offline tooling built on it (`hypipe analyze`, `hypipe bench-compare`).
+//!
+//! The registry mirrors the tracer's cost contract (`crate::trace`): every
+//! hot-path entry point — [`Counter::add`], [`Gauge::add`],
+//! [`Histo::observe_ns`] — is gated on **one relaxed atomic load** and
+//! performs no allocation, so a disabled registry costs a branch
+//! (`tests/trace_obs.rs` proves it with a counting allocator).
+//! Registration (name + label set → handle) allocates and takes a mutex,
+//! so it happens once at construction time (transport build, pool build,
+//! fabric entry), never per operation. Handles are `Arc`-backed and
+//! cloneable; re-registering the same name + labels returns the same
+//! underlying cell, so repeated runs in one process accumulate.
+//!
+//! Histograms use base-2 log buckets over nanoseconds (bucket 0 holds the
+//! value 0, bucket `i >= 1` holds `[2^(i-1), 2^i)` ns): bucketing is one
+//! `leading_zeros`, merging is element-wise addition, and the totals are
+//! deterministic under any thread interleaving (counts are order-free —
+//! pinned across thread counts in `tests/obs_analytics.rs`).
+//!
+//! Export: [`snapshot`] freezes every registered metric;
+//! [`Snapshot::prometheus_text`] renders the conventional text exposition
+//! (`--metrics-out`), [`Snapshot::to_json`] feeds the `--json` reports.
+//!
+//! Metric catalog wired through the hot layers:
+//!
+//! | metric | labels | source |
+//! |---|---|---|
+//! | `hypipe_wire_tx_bytes` / `_tx_msgs` / `_rx_bytes` / `_rx_msgs` | `rank`, `peer` | `dist::transport` (payload frames, both transports) |
+//! | `hypipe_halo_pack_bytes` / `hypipe_halo_unpack_bytes` | `rank` | `dist::part::RankBlock::exchange` |
+//! | `hypipe_allreduce_payload_bytes` | `rank` | `dist::fabric::RankCtx::iallreduce` |
+//! | `hypipe_allreduce_inflight` (gauge) | `rank` | posted-not-yet-waited reductions |
+//! | `hypipe_pool_task_seconds` (histogram) | `threads` | `util::pool` per-task latency |
+
+pub mod analyze;
+pub mod bench_compare;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use crate::util::json::Json;
+
+/// Number of base-2 histogram buckets: the last bucket holds everything at
+/// or above `2^38` ns (~4.6 min) — far beyond any per-task latency.
+pub const HIST_BUCKETS: usize = 40;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is metrics recording on? One relaxed load — the gate every handle
+/// checks before touching its cell.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Switch recording on (existing handles start counting immediately).
+pub fn enable() {
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Switch recording off (handles go back to a single-branch no-op).
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Zero every registered metric. Registrations and outstanding handles
+/// stay valid — only the stored values reset.
+pub fn reset() {
+    for entry in registry().lock().unwrap_or_else(PoisonError::into_inner).values() {
+        match &entry.slot {
+            Slot::Counter(c) => c.store(0, Ordering::SeqCst),
+            Slot::Gauge(g) => g.store(0, Ordering::SeqCst),
+            Slot::Histo(h) => {
+                for b in &h.buckets {
+                    b.store(0, Ordering::SeqCst);
+                }
+                h.count.store(0, Ordering::SeqCst);
+                h.sum_ns.store(0, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handles
+// ---------------------------------------------------------------------------
+
+/// Monotone counter handle. `add` is wait-free and allocation-free; when
+/// the registry is disabled it is one relaxed load and a branch.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value (reads even while disabled).
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge handle (e.g. in-flight reduction depth).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    #[inline]
+    pub fn add(&self, n: i64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared atomic histogram cell (base-2 ns buckets).
+struct HistoCell {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl HistoCell {
+    fn new() -> HistoCell {
+        HistoCell {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index for a nanosecond value: 0 holds the value 0, bucket
+/// `i >= 1` holds `[2^(i-1), 2^i)`, the last bucket is open-ended.
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    (64 - ns.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Log-bucketed latency histogram handle.
+#[derive(Clone)]
+pub struct Histo(Arc<HistoCell>);
+
+impl Histo {
+    #[inline]
+    pub fn observe_ns(&self, ns: u64) {
+        if enabled() {
+            self.0.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+            self.0.count.fetch_add(1, Ordering::Relaxed);
+            self.0.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+
+    /// Observe a duration in seconds (negative values clamp to 0).
+    #[inline]
+    pub fn observe(&self, secs: f64) {
+        if enabled() {
+            self.observe_ns((secs.max(0.0) * 1e9) as u64);
+        }
+    }
+
+    /// Freeze the cell into a plain mergeable [`Hist`].
+    pub fn get(&self) -> Hist {
+        let mut h = Hist::new();
+        for (i, b) in self.0.buckets.iter().enumerate() {
+            h.buckets[i] = b.load(Ordering::Relaxed);
+        }
+        h.count = self.0.count.load(Ordering::Relaxed);
+        h.sum_ns = self.0.sum_ns.load(Ordering::Relaxed);
+        h
+    }
+}
+
+/// Plain (non-atomic) histogram snapshot: mergeable, comparable, and
+/// usable offline without the registry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hist {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            buckets: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+        }
+    }
+
+    pub fn observe_ns(&mut self, ns: u64) {
+        self.buckets[bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+    }
+
+    /// Element-wise merge; commutative and associative, so any merge order
+    /// over any partition of the observations yields identical bits.
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+    }
+
+    /// Nearest-rank quantile, reported as the upper edge (`2^i` ns) of the
+    /// bucket holding that rank. `q` in `[0, 1]`; 0 on an empty histogram.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        1u64 << (HIST_BUCKETS - 1)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+enum Slot {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicI64>),
+    Histo(Arc<HistoCell>),
+}
+
+struct RegEntry {
+    name: &'static str,
+    /// Rendered label pairs, e.g. `rank="0",peer="1"` (empty when none).
+    labels: String,
+    slot: Slot,
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, RegEntry>> {
+    static REG: OnceLock<Mutex<BTreeMap<String, RegEntry>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn fmt_labels(labels: &[(&str, &str)]) -> String {
+    let mut s = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        s.push_str(v);
+        s.push('"');
+    }
+    s
+}
+
+fn make_key(name: &str, labels: &str) -> String {
+    if labels.is_empty() {
+        name.to_string()
+    } else {
+        format!("{name}{{{labels}}}")
+    }
+}
+
+fn register<T>(
+    name: &'static str,
+    labels: &[(&str, &str)],
+    wrap: impl Fn(&Slot) -> Option<T>,
+    fresh: impl Fn() -> (Slot, T),
+) -> T {
+    let labels = fmt_labels(labels);
+    let key = make_key(name, &labels);
+    let mut reg = registry().lock().unwrap_or_else(PoisonError::into_inner);
+    if let Some(existing) = reg.get(&key) {
+        return wrap(&existing.slot).unwrap_or_else(|| {
+            panic!("metric '{key}' already registered with a different kind")
+        });
+    }
+    let (slot, handle) = fresh();
+    reg.insert(key, RegEntry { name, labels, slot });
+    handle
+}
+
+/// Register (or look up) a counter under `name` + `labels`.
+pub fn counter(name: &'static str, labels: &[(&str, &str)]) -> Counter {
+    register(
+        name,
+        labels,
+        |s| match s {
+            Slot::Counter(c) => Some(Counter(c.clone())),
+            _ => None,
+        },
+        || {
+            let c = Arc::new(AtomicU64::new(0));
+            (Slot::Counter(c.clone()), Counter(c))
+        },
+    )
+}
+
+/// Register (or look up) a gauge under `name` + `labels`.
+pub fn gauge(name: &'static str, labels: &[(&str, &str)]) -> Gauge {
+    register(
+        name,
+        labels,
+        |s| match s {
+            Slot::Gauge(g) => Some(Gauge(g.clone())),
+            _ => None,
+        },
+        || {
+            let g = Arc::new(AtomicI64::new(0));
+            (Slot::Gauge(g.clone()), Gauge(g))
+        },
+    )
+}
+
+/// Register (or look up) a histogram under `name` + `labels`.
+pub fn histo(name: &'static str, labels: &[(&str, &str)]) -> Histo {
+    register(
+        name,
+        labels,
+        |s| match s {
+            Slot::Histo(h) => Some(Histo(h.clone())),
+            _ => None,
+        },
+        || {
+            let h = Arc::new(HistoCell::new());
+            (Slot::Histo(h.clone()), Histo(h))
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot + export
+// ---------------------------------------------------------------------------
+
+/// One frozen metric value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Counter(u64),
+    Gauge(i64),
+    Histo(Hist),
+}
+
+/// One frozen metric: name, rendered labels, value.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub labels: String,
+    pub value: Value,
+}
+
+impl Entry {
+    /// The registry key (`name{labels}`).
+    pub fn key(&self) -> String {
+        make_key(&self.name, &self.labels)
+    }
+}
+
+/// A point-in-time copy of every registered metric, sorted by
+/// (name, labels) so same-name series group together.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub entries: Vec<Entry>,
+}
+
+/// Freeze every registered metric.
+pub fn snapshot() -> Snapshot {
+    let reg = registry().lock().unwrap_or_else(PoisonError::into_inner);
+    let mut entries: Vec<Entry> = reg
+        .values()
+        .map(|e| Entry {
+            name: e.name.to_string(),
+            labels: e.labels.clone(),
+            value: match &e.slot {
+                Slot::Counter(c) => Value::Counter(c.load(Ordering::Relaxed)),
+                Slot::Gauge(g) => Value::Gauge(g.load(Ordering::Relaxed)),
+                Slot::Histo(h) => Value::Histo(Histo(h.clone()).get()),
+            },
+        })
+        .collect();
+    entries.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+    Snapshot { entries }
+}
+
+impl Snapshot {
+    /// Prometheus text exposition: `# TYPE` per metric name, one sample
+    /// line per label set; histograms expand to cumulative `_bucket`
+    /// series (`le` = the bucket's upper edge `2^i` ns, in seconds)
+    /// plus `_sum` (seconds) and `_count`.
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut last_name = "";
+        for e in &self.entries {
+            if e.name != last_name {
+                let kind = match e.value {
+                    Value::Counter(_) => "counter",
+                    Value::Gauge(_) => "gauge",
+                    Value::Histo(_) => "histogram",
+                };
+                let _ = writeln!(out, "# TYPE {} {kind}", e.name);
+                last_name = &e.name;
+            }
+            let braced = |extra: &str| -> String {
+                match (e.labels.is_empty(), extra.is_empty()) {
+                    (true, true) => String::new(),
+                    (true, false) => format!("{{{extra}}}"),
+                    (false, true) => format!("{{{}}}", e.labels),
+                    (false, false) => format!("{{{},{extra}}}", e.labels),
+                }
+            };
+            match &e.value {
+                Value::Counter(v) => {
+                    let _ = writeln!(out, "{}{} {v}", e.name, braced(""));
+                }
+                Value::Gauge(v) => {
+                    let _ = writeln!(out, "{}{} {v}", e.name, braced(""));
+                }
+                Value::Histo(h) => {
+                    let top = h
+                        .buckets
+                        .iter()
+                        .rposition(|&b| b > 0)
+                        .unwrap_or(0)
+                        .min(HIST_BUCKETS - 2);
+                    let mut cum = 0u64;
+                    for (i, b) in h.buckets.iter().enumerate().take(top + 1) {
+                        cum += b;
+                        let le = (1u64 << i) as f64 * 1e-9;
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {cum}",
+                            e.name,
+                            braced(&format!("le=\"{le:e}\""))
+                        );
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{}_bucket{} {}",
+                        e.name,
+                        braced("le=\"+Inf\""),
+                        h.count
+                    );
+                    let _ = writeln!(
+                        out,
+                        "{}_sum{} {}",
+                        e.name,
+                        braced(""),
+                        h.sum_ns as f64 * 1e-9
+                    );
+                    let _ = writeln!(out, "{}_count{} {}", e.name, braced(""), h.count);
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON object keyed `name{labels}`; counters/gauges as numbers,
+    /// histograms as `{count, sum_s, p50_s, p99_s}`.
+    pub fn to_json(&self) -> Json {
+        let mut map = BTreeMap::new();
+        for e in &self.entries {
+            let v = match &e.value {
+                Value::Counter(v) => Json::Num(*v as f64),
+                Value::Gauge(v) => Json::Num(*v as f64),
+                Value::Histo(h) => {
+                    let mut o = BTreeMap::new();
+                    o.insert("count".to_string(), Json::Num(h.count as f64));
+                    o.insert("sum_s".to_string(), Json::Num(h.sum_ns as f64 * 1e-9));
+                    o.insert(
+                        "p50_s".to_string(),
+                        Json::Num(h.quantile_ns(0.50) as f64 * 1e-9),
+                    );
+                    o.insert(
+                        "p99_s".to_string(),
+                        Json::Num(h.quantile_ns(0.99) as f64 * 1e-9),
+                    );
+                    Json::Obj(o)
+                }
+            };
+            map.insert(e.key(), v);
+        }
+        Json::Obj(map)
+    }
+}
+
+/// Merge several Prometheus text expositions (e.g. one per launched
+/// worker) into one: `# TYPE` lines dedupe by name, sample lines append
+/// in order. Assumes label sets are disjoint across inputs (each worker
+/// labels its series with its own `rank`), as `hypipe launch` guarantees.
+pub fn merge_prometheus_texts(texts: &[String]) -> String {
+    let mut seen_types = std::collections::BTreeSet::new();
+    let mut out = String::new();
+    for t in texts {
+        for line in t.lines() {
+            if line.starts_with("# TYPE ") && !seen_types.insert(line.to_string()) {
+                continue;
+            }
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::MutexGuard;
+
+    /// The registry switch is process-global; serialize the tests.
+    fn lock() -> MutexGuard<'static, ()> {
+        static M: Mutex<()> = Mutex::new(());
+        M.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn disabled_handles_record_nothing() {
+        let _g = lock();
+        disable();
+        let c = counter("hypipe_test_disabled_total", &[]);
+        let g = gauge("hypipe_test_disabled_gauge", &[]);
+        let h = histo("hypipe_test_disabled_hist", &[]);
+        reset();
+        c.add(5);
+        g.add(3);
+        h.observe_ns(1000);
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0);
+        assert_eq!(h.get().count, 0);
+    }
+
+    #[test]
+    fn registration_dedupes_and_accumulates() {
+        let _g = lock();
+        enable();
+        let c1 = counter("hypipe_test_dedupe_total", &[("rank", "0")]);
+        let c2 = counter("hypipe_test_dedupe_total", &[("rank", "0")]);
+        let other = counter("hypipe_test_dedupe_total", &[("rank", "1")]);
+        c1.add(2);
+        c2.add(3);
+        other.inc();
+        assert_eq!(c1.get(), 5, "same name+labels share one cell");
+        assert_eq!(other.get(), 1);
+        disable();
+        reset();
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_clash_panics() {
+        let _g = lock();
+        let _c = counter("hypipe_test_clash", &[]);
+        let _h = histo("hypipe_test_clash", &[]);
+    }
+
+    #[test]
+    fn histogram_buckets_are_base2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        let mut h = Hist::new();
+        for ns in [0u64, 1, 3, 3, 900, 1 << 20] {
+            h.observe_ns(ns);
+        }
+        assert_eq!(h.count, 6);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[2], 2);
+        assert_eq!(h.quantile_ns(0.5), 1 << 2);
+        assert!(h.quantile_ns(1.0) >= 1 << 20);
+    }
+
+    #[test]
+    fn hist_merge_is_order_free() {
+        let vals: Vec<u64> = (0..200).map(|i| (i * 37) % 10_000).collect();
+        let mut whole = Hist::new();
+        for &v in &vals {
+            whole.observe_ns(v);
+        }
+        let mut fwd = Hist::new();
+        let mut rev = Hist::new();
+        let (a, b) = vals.split_at(67);
+        let (mut ha, mut hb) = (Hist::new(), Hist::new());
+        for &v in a {
+            ha.observe_ns(v);
+        }
+        for &v in b {
+            hb.observe_ns(v);
+        }
+        fwd.merge(&ha);
+        fwd.merge(&hb);
+        rev.merge(&hb);
+        rev.merge(&ha);
+        assert_eq!(fwd, whole);
+        assert_eq!(rev, whole);
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let _g = lock();
+        enable();
+        let c = counter("hypipe_test_prom_total", &[("rank", "0")]);
+        let h = histo("hypipe_test_prom_seconds", &[]);
+        reset();
+        c.add(7);
+        h.observe_ns(1000);
+        h.observe_ns(2000);
+        disable();
+        let txt = snapshot().prometheus_text();
+        assert!(txt.contains("# TYPE hypipe_test_prom_total counter"), "{txt}");
+        assert!(txt.contains("hypipe_test_prom_total{rank=\"0\"} 7"), "{txt}");
+        assert!(txt.contains("# TYPE hypipe_test_prom_seconds histogram"), "{txt}");
+        assert!(txt.contains("hypipe_test_prom_seconds_bucket{le=\"+Inf\"} 2"), "{txt}");
+        assert!(txt.contains("hypipe_test_prom_seconds_count 2"), "{txt}");
+        // one TYPE line per name even with several label sets
+        let types = txt.matches("# TYPE hypipe_test_prom_total").count();
+        assert_eq!(types, 1);
+        reset();
+    }
+
+    #[test]
+    fn merge_prometheus_dedupes_types() {
+        let a = "# TYPE hypipe_x counter\nhypipe_x{rank=\"0\"} 1\n".to_string();
+        let b = "# TYPE hypipe_x counter\nhypipe_x{rank=\"1\"} 2\n".to_string();
+        let m = merge_prometheus_texts(&[a, b]);
+        assert_eq!(m.matches("# TYPE hypipe_x counter").count(), 1);
+        assert!(m.contains("hypipe_x{rank=\"0\"} 1"));
+        assert!(m.contains("hypipe_x{rank=\"1\"} 2"));
+    }
+
+    #[test]
+    fn snapshot_json_is_parseable() {
+        let _g = lock();
+        enable();
+        let c = counter("hypipe_test_json_total", &[]);
+        reset();
+        c.add(3);
+        disable();
+        let doc = crate::util::json::parse(&snapshot().to_json().to_string()).unwrap();
+        assert_eq!(doc.get("hypipe_test_json_total").as_f64(), Some(3.0));
+        reset();
+    }
+}

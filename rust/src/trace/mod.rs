@@ -32,6 +32,32 @@
 pub mod ring;
 pub mod telemetry;
 
+/// Canonical span-label strings, shared by the instrumentation sites and
+/// the offline analyzer ([`crate::obs::analyze`]) so the two can never
+/// drift apart silently.
+pub mod labels {
+    /// One solver iteration (main lane, `args.n` = iteration index).
+    pub const ITER: &str = "iter";
+    /// Allreduce posted (instantaneous mark, `args.n` = sequence).
+    pub const ALLREDUCE_POST: &str = "allreduce:post";
+    /// Exposed allreduce completion wait (main lane).
+    pub const ALLREDUCE_WAIT: &str = "allreduce:wait";
+    /// Post-to-completion interval (fabric lane; overlaps compute).
+    pub const ALLREDUCE_INFLIGHT: &str = "allreduce:inflight";
+    /// Time blocked on a socket receive (TCP transport).
+    pub const SOCKET_WAIT: &str = "socket:wait";
+    /// Whole halo exchange (contains pack+send and recv+unpack).
+    pub const HALO_EXCHANGE: &str = "halo:exchange";
+    /// Packing and sending the outgoing halo slices.
+    pub const HALO_PACK: &str = "halo:pack+send";
+    /// Receiving and scattering the incoming halo slices.
+    pub const HALO_UNPACK: &str = "halo:recv+unpack";
+    /// Pool caller span around one parallel region.
+    pub const POOL_RUN: &str = "pool:run";
+    /// Pool worker span draining tasks of one region.
+    pub const POOL_DRAIN: &str = "pool:drain";
+}
+
 pub use ring::{Cat, Span};
 pub use telemetry::{Health, IterSample, IterTelemetry, Probe};
 

@@ -21,8 +21,10 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
+use std::time::Instant;
 
-use crate::trace::{self, Cat};
+use crate::obs;
+use crate::trace::{self, labels, Cat};
 
 /// Below this many elements (or stored entries, for SPMV) the parallel
 /// kernels fall back to their serial forms: fork/join latency would exceed
@@ -165,6 +167,11 @@ struct Shared {
     state: Mutex<State>,
     work: Condvar,
     done: Condvar,
+    /// Per-task wall-time histogram (`hypipe_pool_task_seconds`), shared by
+    /// the caller lane and every worker. Observations are gated on
+    /// [`obs::enabled`] at each task, so a disabled registry costs one
+    /// relaxed load per task and no clock reads.
+    task_ns: obs::Histo,
 }
 
 /// Fork/join worker pool. `threads` counts the calling thread: a pool of
@@ -192,6 +199,7 @@ impl ThreadPool {
             }),
             work: Condvar::new(),
             done: Condvar::new(),
+            task_ns: obs::histo("hypipe_pool_task_seconds", &[("threads", &threads.to_string())]),
         });
         let handles = (1..threads)
             .map(|i| {
@@ -238,7 +246,7 @@ impl ThreadPool {
             .unwrap_or_else(std::sync::PoisonError::into_inner);
         // Dispatch + caller drain + join, as one span on the calling
         // thread's lane (workers record their own `pool:drain` spans).
-        let _run = trace::span_arg("pool:run", Cat::Pool, tasks as u64);
+        let _run = trace::span_arg(labels::POOL_RUN, Cat::Pool, tasks as u64);
         let next = AtomicUsize::new(0);
         let poisoned = AtomicBool::new(false);
         unsafe fn shim<F: Fn(usize)>(data: *const (), i: usize) {
@@ -271,7 +279,11 @@ impl ThreadPool {
             if i >= tasks {
                 break;
             }
+            let t0 = obs::enabled().then(Instant::now);
             f(i);
+            if let Some(t0) = t0 {
+                self.shared.task_ns.observe_ns(t0.elapsed().as_nanos() as u64);
+            }
         }));
         // Join: wait for every enlisted worker to retire the epoch
         // (non-enlisted workers wake, find no slot, and go straight back
@@ -366,7 +378,7 @@ fn worker(shared: Arc<Shared>) {
         // below, so the job's pointers are valid for the whole drain loop.
         // Panics are caught and reported via the poison flag so the
         // dispatcher can re-raise them after its join.
-        let drain_span = trace::span_arg("pool:drain", Cat::Pool, job.tasks as u64);
+        let drain_span = trace::span_arg(labels::POOL_DRAIN, Cat::Pool, job.tasks as u64);
         let drained = catch_unwind(AssertUnwindSafe(|| unsafe {
             let next = &*job.next;
             loop {
@@ -374,7 +386,11 @@ fn worker(shared: Arc<Shared>) {
                 if i >= job.tasks {
                     break;
                 }
+                let t0 = obs::enabled().then(Instant::now);
                 (job.call)(job.data, i);
+                if let Some(t0) = t0 {
+                    shared.task_ns.observe_ns(t0.elapsed().as_nanos() as u64);
+                }
             }
         }));
         drop(drain_span);

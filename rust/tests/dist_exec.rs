@@ -321,6 +321,14 @@ fn per_rank_metrics_account_for_the_whole_system() {
     let plan = DistPlan::build(&a, 4);
     let exchanges = 2 + rep.result.iterations as u64; // init u, init m, one per iter
     assert_eq!(sent, plan.halo_total() as u64 * exchanges);
+    // Wire books: one link per remote rank, sorted, self omitted, and the
+    // bytes cover at least the halo payload this rank shipped.
+    for m in &rep.per_rank {
+        assert_eq!(m.links.len(), 3, "rank {}: one link per remote rank", m.rank);
+        assert!(m.links.windows(2).all(|w| w[0].peer < w[1].peer));
+        assert!(m.links.iter().all(|l| l.peer != m.rank));
+        assert!(m.wire_tx_bytes() >= 8 * m.halo_doubles_sent, "rank {}", m.rank);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -454,6 +462,31 @@ fn dist_pipecg_is_bitwise_identical_across_transports() {
         // The wire path was really exercised, and its stalls are attributed.
         for m in &tcp.per_rank {
             assert!(m.socket_wait_s >= 0.0);
+        }
+        // Wire accounting counts payload frames only, so the books are
+        // transport-independent: chan and tcp agree link for link.
+        for (c, t) in chan.per_rank.iter().zip(&tcp.per_rank) {
+            assert_eq!(c.links, t.links, "ranks={ranks} rank={}: links differ", c.rank);
+            assert!(c.wire_tx_bytes() > 0 && c.wire_rx_bytes() > 0, "ranks={ranks}");
+        }
+        // Conservation: every byte someone sent, someone received (depth-1
+        // PIPECG waits every reduction, so nothing is in flight at the
+        // final snapshot), and each link mirrors its reverse direction.
+        let tx: u64 = tcp.per_rank.iter().map(|m| m.wire_tx_bytes()).sum();
+        let rx: u64 = tcp.per_rank.iter().map(|m| m.wire_rx_bytes()).sum();
+        assert_eq!(tx, rx, "ranks={ranks}: wire bytes not conserved");
+        for m in &tcp.per_rank {
+            for l in &m.links {
+                let peer = tcp.per_rank.iter().find(|p| p.rank == l.peer).unwrap();
+                let back = peer.links.iter().find(|pl| pl.peer == m.rank).unwrap();
+                assert_eq!(
+                    (l.tx_bytes, l.tx_msgs),
+                    (back.rx_bytes, back.rx_msgs),
+                    "ranks={ranks}: link {}->{} asymmetric",
+                    m.rank,
+                    l.peer
+                );
+            }
         }
     }
 }

@@ -1,0 +1,323 @@
+//! End-to-end trace analytics and metrics-registry contracts:
+//!
+//! * a golden 3-rank distributed run's trace, analyzed offline, agrees
+//!   with the live `DistReport` (overlap within 1%) and with itself
+//!   (critical-path self times + untraced gap ≈ makespan within 5%),
+//! * histogram merges are bitwise deterministic for any thread split,
+//! * enabling the metrics registry does not perturb solver numerics,
+//! * the `analyze`, `bench-compare` and `--metrics-out` CLI surfaces work
+//!   against the real binary (exit codes included).
+//!
+//! The registry and tracer are process-global, so every test serializes
+//! on one mutex.
+
+use std::process::Command;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use hypipe::dist::{self, DistOpts};
+use hypipe::obs::{self, Hist};
+use hypipe::precond::Jacobi;
+use hypipe::solver::SolveOpts;
+use hypipe::sparse::gen;
+use hypipe::trace;
+use hypipe::util::json;
+
+fn lock() -> MutexGuard<'static, ()> {
+    static M: Mutex<()> = Mutex::new(());
+    M.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn golden_opts(ranks: usize) -> DistOpts {
+    DistOpts {
+        base: SolveOpts {
+            threads: 1,
+            ..Default::default()
+        },
+        reduce_latency: Duration::from_micros(200),
+        ..DistOpts::with_ranks(ranks)
+    }
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "hypipe-obs-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn golden_three_rank_trace_agrees_with_the_live_report() {
+    let _g = lock();
+    trace::reset();
+    trace::enable();
+    let a = gen::poisson2d_5pt(16, 16);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let rep = dist::pipecg::solve(&a, &b, &pc, &golden_opts(3));
+    trace::disable();
+    assert!(rep.result.converged);
+
+    let doc = json::parse(&trace::chrome_trace().to_string()).unwrap();
+    let analysis = hypipe::obs::analyze::analyze(&[doc]).unwrap();
+
+    // Per-phase stats exist and are internally ordered.
+    let iter = analysis.phases.iter().find(|p| p.name == "iter").unwrap();
+    assert_eq!(iter.count, 3 * rep.result.iterations, "iter spans across 3 ranks");
+    assert!(iter.p50_s <= iter.p95_s && iter.p95_s <= iter.p99_s && iter.p99_s <= iter.max_s);
+    assert!(iter.total_s > 0.0);
+
+    // Exactly the three fabric ranks, each with a non-empty critical path
+    // whose self times plus the untraced gap reproduce the makespan.
+    let fabric: Vec<_> = analysis.ranks.iter().filter(|r| r.rank >= 0).collect();
+    assert_eq!(fabric.len(), 3);
+    for r in &fabric {
+        assert_eq!(r.iters, rep.result.iterations, "rank {}", r.rank);
+        assert!(!r.critical_path.is_empty(), "rank {}", r.rank);
+        assert!(r.makespan_s > 0.0 && r.reduce_inflight_s > 0.0, "rank {}", r.rank);
+        let selfs: f64 = r.critical_path.iter().map(|p| p.self_s).sum();
+        let gap = (selfs + r.untraced_s - r.makespan_s).abs();
+        assert!(
+            gap <= 0.05 * r.makespan_s,
+            "rank {}: self {selfs} + untraced {} vs makespan {}",
+            r.rank,
+            r.untraced_s,
+            r.makespan_s
+        );
+        // Per-rank overlap agrees with the metrics the fabric charged.
+        let m = rep.per_rank.iter().find(|m| m.rank == r.rank as usize).unwrap();
+        let live = if m.reduce_inflight_s <= 0.0 {
+            1.0
+        } else {
+            (1.0 - m.reduce_wait_s / m.reduce_inflight_s).clamp(0.0, 1.0)
+        };
+        // Chrome-trace timestamps are us-truncated, so allow a little more
+        // slack per rank than on the overall aggregate below.
+        assert!(
+            (r.overlap_efficiency - live).abs() <= 0.02,
+            "rank {}: analyzer {} vs report {live}",
+            r.rank,
+            r.overlap_efficiency
+        );
+    }
+    // And the overall aggregation matches DistReport::overlap_efficiency.
+    assert!(
+        (analysis.overall_overlap_efficiency - rep.overlap_efficiency()).abs() <= 0.01,
+        "analyzer {} vs report {}",
+        analysis.overall_overlap_efficiency,
+        rep.overlap_efficiency()
+    );
+}
+
+#[test]
+fn histogram_merge_is_deterministic_for_any_thread_split() {
+    let _g = lock();
+    // A fixed multiset of observations (LCG; no clock, no randomness).
+    let mut seed = 0x2545F4914F6CDD1Du64;
+    let obs_ns: Vec<u64> = (0..10_000)
+        .map(|_| {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            seed >> 40
+        })
+        .collect();
+    let mut reference = Hist::new();
+    for &ns in &obs_ns {
+        reference.observe_ns(ns);
+    }
+    for threads in [1usize, 2, 4, 7] {
+        // Real threads, each observing its round-robin share into its own
+        // histogram; merged in thread order.
+        let parts: Vec<Hist> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let obs_ns = &obs_ns;
+                    s.spawn(move || {
+                        let mut h = Hist::new();
+                        for &ns in obs_ns.iter().skip(t).step_by(threads) {
+                            h.observe_ns(ns);
+                        }
+                        h
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut merged = Hist::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged, reference, "threads={threads}");
+        // Any merge order gives the same bits (commutative + associative).
+        let mut reversed = Hist::new();
+        for p in parts.iter().rev() {
+            reversed.merge(p);
+        }
+        assert_eq!(reversed, reference, "threads={threads} reversed");
+    }
+    // The shared atomic cell agrees too, regardless of contention.
+    let shared = obs::histo("hypipe_test_merge_det_seconds", &[]);
+    obs::enable();
+    for threads in [1usize, 2, 4, 7] {
+        obs::reset();
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let shared = shared.clone();
+                let obs_ns = &obs_ns;
+                s.spawn(move || {
+                    for &ns in obs_ns.iter().skip(t).step_by(threads) {
+                        shared.observe_ns(ns);
+                    }
+                });
+            }
+        });
+        assert_eq!(shared.get(), reference, "threads={threads} atomic cell");
+    }
+    obs::disable();
+}
+
+#[test]
+fn metrics_enabled_solve_is_bitwise_invariant() {
+    let _g = lock();
+    let a = gen::poisson2d_5pt(16, 16);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    obs::disable();
+    let off = dist::pipecg::solve(&a, &b, &pc, &golden_opts(2));
+    obs::reset();
+    obs::enable();
+    let on = dist::pipecg::solve(&a, &b, &pc, &golden_opts(2));
+    let text = obs::snapshot().prometheus_text();
+    obs::disable();
+
+    assert!(off.result.converged && on.result.converged);
+    assert_eq!(off.result.iterations, on.result.iterations);
+    for (x0, x1) in off.result.x.iter().zip(&on.result.x) {
+        assert_eq!(x0.to_bits(), x1.to_bits());
+    }
+    for (h0, h1) in off.result.history.iter().zip(&on.result.history) {
+        assert_eq!(h0.to_bits(), h1.to_bits());
+    }
+    // The enabled run really recorded the hot-path metrics...
+    for series in [
+        "hypipe_wire_tx_bytes",
+        "hypipe_wire_rx_bytes",
+        "hypipe_halo_pack_bytes",
+        "hypipe_halo_unpack_bytes",
+        "hypipe_allreduce_payload_bytes",
+        "hypipe_allreduce_inflight",
+    ] {
+        assert!(text.contains(series), "{series} missing from:\n{text}");
+    }
+    // ...and every posted reduction was retired: the in-flight gauges for
+    // both ranks are back to zero.
+    for rank in ["0", "1"] {
+        let g = obs::gauge("hypipe_allreduce_inflight", &[("rank", rank)]);
+        assert_eq!(g.get(), 0, "rank {rank} left reductions in flight");
+    }
+    // The registry counters mirror the report's wire books. The report
+    // snapshots its links before any post-solve traffic, so the live
+    // counters may only ever read higher, never lower.
+    let tx: u64 = on.per_rank.iter().map(|m| m.wire_tx_bytes()).sum();
+    let c01 = obs::counter("hypipe_wire_tx_bytes", &[("rank", "0"), ("peer", "1")]);
+    let c10 = obs::counter("hypipe_wire_tx_bytes", &[("rank", "1"), ("peer", "0")]);
+    assert!(tx > 0 && c01.get() + c10.get() >= tx);
+}
+
+#[test]
+fn analyze_and_metrics_cli_work_end_to_end() {
+    let _g = lock();
+    let dir = tmpdir("cli");
+    // A real 2-rank trace document, written the way --trace-out writes it.
+    trace::reset();
+    trace::enable();
+    let a = gen::poisson2d_5pt(12, 12);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    let rep = dist::pipecg::solve(&a, &b, &pc, &golden_opts(2));
+    trace::disable();
+    assert!(rep.result.converged);
+    let trace_path = dir.join("trace.json");
+    std::fs::write(&trace_path, trace::chrome_trace().to_pretty()).unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_hypipe"))
+        .args(["analyze", trace_path.to_str().unwrap(), "--json"])
+        .output()
+        .expect("spawn hypipe analyze");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let ranks = doc.get("ranks").as_arr().unwrap();
+    assert!(ranks.len() >= 2, "analyze found {} rank(s)", ranks.len());
+    assert!(!doc.get("phases").as_arr().unwrap().is_empty());
+
+    // Solve with --metrics-out: the snapshot lands on disk as Prometheus
+    // text with the wire counters in it.
+    let prom = dir.join("metrics.prom");
+    let out = Command::new(env!("CARGO_BIN_EXE_hypipe"))
+        .args([
+            "solve",
+            "--matrix",
+            "poisson2d:8x8",
+            "--method",
+            "dist-pipecg",
+            "--ranks",
+            "2",
+            "--threads",
+            "1",
+            "--metrics-out",
+            prom.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn hypipe solve");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&prom).unwrap();
+    assert!(text.contains("# TYPE hypipe_wire_tx_bytes counter"), "{text}");
+    assert!(text.contains("hypipe_halo_pack_bytes"), "{text}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bench_compare_cli_gates_on_regressions() {
+    let _g = lock();
+    let dir = tmpdir("bench");
+    let write = |name: &str, per_iter: f64| -> String {
+        let p = dir.join(name);
+        std::fs::write(
+            &p,
+            format!(
+                "{{\"bench\": \"smoke\", \"n\": 4096, \"pipecg_per_iter_s\": {per_iter}, \
+                 \"pipecg_speedup\": 1.5}}"
+            ),
+        )
+        .unwrap();
+        p.to_str().unwrap().to_string()
+    };
+    let base = write("base.json", 1.0e-4);
+    let same = write("same.json", 1.05e-4);
+    let slow = write("slow.json", 9.0e-4);
+
+    let run = |cand: &str| -> std::process::Output {
+        Command::new(env!("CARGO_BIN_EXE_hypipe"))
+            .args(["bench-compare", &base, cand, "--json"])
+            .output()
+            .expect("spawn hypipe bench-compare")
+    };
+    // Within the noise threshold: exit 0, passed: true.
+    let ok = run(&same);
+    assert!(ok.status.success(), "{}", String::from_utf8_lossy(&ok.stderr));
+    let doc = json::parse(&String::from_utf8_lossy(&ok.stdout)).unwrap();
+    assert_eq!(doc.get("passed").as_bool(), Some(true));
+    // 9x slower: nonzero exit and the regression named in the output.
+    let bad = run(&slow);
+    assert!(!bad.status.success(), "a 9x slowdown must fail the gate");
+    let doc = json::parse(&String::from_utf8_lossy(&bad.stdout)).unwrap();
+    assert_eq!(doc.get("passed").as_bool(), Some(false));
+    let regs = doc.get("regressions").as_arr().unwrap();
+    assert_eq!(regs.len(), 1);
+    assert_eq!(regs[0].get("path").as_str(), Some("pipecg_per_iter_s"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,6 +1,8 @@
 //! Observability integration: the wall-clock span tracer's contracts.
 //!
-//! * disabled tracing allocates nothing (counting global allocator),
+//! * disabled tracing and disabled metrics handles allocate nothing, and
+//!   the enabled metric record path is allocation-free too (counting
+//!   global allocator),
 //! * spans on one lane nest or are disjoint — never partially overlap
 //!   (property-checked over random span trees),
 //! * enabling the tracer does not perturb solver numerics bitwise,
@@ -18,6 +20,7 @@ use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 use hypipe::dist::{self, DistOpts};
+use hypipe::obs;
 use hypipe::precond::Jacobi;
 use hypipe::solver::{self, SolveOpts};
 use hypipe::sparse::gen;
@@ -59,6 +62,12 @@ fn lock() -> MutexGuard<'static, ()> {
 fn disabled_tracing_allocates_nothing() {
     let _g = lock();
     trace::disable();
+    obs::disable();
+    // Registration allocates, so the metrics handles are created before
+    // the counting window opens; their record paths must then be free.
+    let c = obs::counter("alloc_probe_total", &[("k", "v")]);
+    let g = obs::gauge("alloc_probe_depth", &[]);
+    let h = obs::histo("alloc_probe_seconds", &[]);
     // Other harness threads may allocate concurrently (test startup /
     // output capture), so allow a few attempts at a clean window; the
     // property only needs one allocation-free pass to hold.
@@ -70,17 +79,49 @@ fn disabled_tracing_allocates_nothing() {
             trace::mark("alloc-probe-mark", Cat::Net, i);
             let t = Instant::now();
             trace::record(LaneKind::Main, "alloc-probe-rec", Cat::Net, t, t, i);
+            c.add(i);
+            g.inc();
+            g.dec();
+            h.observe_ns(i);
         }
         if ALLOC_CALLS.load(Ordering::SeqCst) == before {
             clean = true;
             break;
         }
     }
-    assert!(clean, "disabled tracing entry points hit the allocator");
+    assert!(clean, "disabled tracing/metrics entry points hit the allocator");
     // And nothing was recorded either.
     for lane in trace::lanes_snapshot() {
         assert!(lane.spans.iter().all(|s| s.label != "alloc-probe"));
     }
+    assert_eq!(c.get(), 0, "disabled counter moved");
+    assert_eq!(g.get(), 0, "disabled gauge moved");
+    assert_eq!(h.get().count, 0, "disabled histogram moved");
+}
+
+#[test]
+fn enabled_metric_handles_allocate_nothing() {
+    let _g = lock();
+    // The hot record path (enabled) is also allocation-free: only
+    // registration touches the allocator.
+    let c = obs::counter("alloc_probe_on_total", &[]);
+    let h = obs::histo("alloc_probe_on_seconds", &[]);
+    obs::enable();
+    let mut clean = false;
+    for _ in 0..8 {
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for i in 0..1_000u64 {
+            c.add(i);
+            h.observe_ns(i);
+        }
+        if ALLOC_CALLS.load(Ordering::SeqCst) == before {
+            clean = true;
+            break;
+        }
+    }
+    obs::disable();
+    assert!(clean, "enabled metric record paths hit the allocator");
+    assert!(c.get() > 0 && h.get().count > 0);
 }
 
 /// Random span tree: every node opens a guard around its children.
