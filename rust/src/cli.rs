@@ -18,6 +18,7 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::dist::exec::NodeCfg;
+use crate::dist::part::IndexLayout;
 use crate::dist::transport::{TcpCfg, TransportKind};
 use crate::dist::DistOpts;
 use crate::runtime::{Method, Runner};
@@ -265,7 +266,8 @@ fn solve_from_args(args: &Args) -> Result<SolveOpts> {
 /// Distributed-solve options: the solver options plus `--ranks` (0 =
 /// auto, `HYPIPE_RANKS` honored), `--reduce-latency-us` (injected
 /// allreduce completion latency in microseconds), `--transport chan|tcp`,
-/// and the TCP timeout knobs.
+/// `--layout full|compact` (per-rank ghost-buffer indexing), and the TCP
+/// timeout knobs.
 fn dist_from_args(args: &Args) -> Result<DistOpts> {
     let latency_us: f64 = args.flag_parse("reduce-latency-us", 0.0)?;
     // Upper bound keeps Duration::from_secs_f64 from panicking on
@@ -286,6 +288,10 @@ fn dist_from_args(args: &Args) -> Result<DistOpts> {
         None => TransportKind::Chan,
         Some(v) => v.parse()?,
     };
+    let layout: IndexLayout = match args.flag("layout") {
+        None => IndexLayout::default(),
+        Some(v) => v.parse()?,
+    };
     let connect_ms: u64 = args.flag_parse("connect-timeout-ms", 10_000u64)?;
     let recv_ms: u64 = args.flag_parse("recv-timeout-ms", 60_000u64)?;
     if connect_ms == 0 || recv_ms == 0 {
@@ -302,6 +308,7 @@ fn dist_from_args(args: &Args) -> Result<DistOpts> {
             connect_timeout: Duration::from_millis(connect_ms),
             recv_timeout: Duration::from_millis(recv_ms),
         },
+        layout,
     })
 }
 

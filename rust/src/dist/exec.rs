@@ -29,6 +29,7 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::process::{Command, Stdio};
 use std::time::{Duration, Instant};
 
+use crate::decomp::RowPartition;
 use crate::metrics::{DistReport, RankMetrics, WireLink};
 use crate::precond::Jacobi;
 use crate::runtime::Method;
@@ -38,7 +39,7 @@ use crate::util::json::{self, arr, obj, s, Json};
 use crate::{Error, Result};
 
 use super::fabric::{FabricCfg, FabricFailure, RankCtx};
-use super::part::DistPlan;
+use super::part::RankBlock;
 use super::transport::{TcpTransport, TransportKind};
 use super::{assemble, dist_label, solve_rank_for, DistOpts, RankOut};
 
@@ -143,7 +144,11 @@ fn run_node_inner(
     };
     let b = a.mul_ones();
     let pc = Jacobi::from_matrix(&a);
-    let plan = DistPlan::build(&a, node.ranks);
+    // Rank-local plan build: this worker derives only its own panel and
+    // recv lists (O(nloc + halo) memory — no driver-global plan with all
+    // ranks' panels), then completes its send lists with one halo-map
+    // exchange over the freshly meshed transport.
+    let part = RowPartition::by_nnz(&a.row_ptr, node.ranks);
     let cfg = FabricCfg {
         reduce_latency: opts.reduce_latency,
         transport: TransportKind::Tcp,
@@ -151,13 +156,15 @@ fn run_node_inner(
     };
     let mut ctx = RankCtx::from_transport(Box::new(tp), cfg);
     trace::label_thread(node.rank as u32 + 1, &format!("rank {}", node.rank));
-    let out = solve_rank_for(m, &mut ctx, &plan.blocks[node.rank], &b, &pc, &opts.base);
+    let mut blk = RankBlock::build_local(&a, &part, node.rank, opts.layout);
+    blk.complete_sends(&mut ctx)?;
+    let out = solve_rank_for(m, &mut ctx, &blk, &b, &pc, &opts.base);
 
     if node.rank != 0 {
         // Ship our slice and accounting to rank 0, then sync the epilogue
         // so no worker tears its sockets down mid-gather.
-        ctx.send(0, TAG_GATHER_X, out.x.clone());
-        ctx.send(0, TAG_GATHER_M, encode_out(&out));
+        ctx.send(0, TAG_GATHER_X, &out.x);
+        ctx.send(0, TAG_GATHER_M, &encode_out(&out));
         ctx.barrier();
         return Ok(None);
     }
@@ -165,7 +172,7 @@ fn run_node_inner(
     for r in 1..node.ranks {
         let x = ctx.recv(r, TAG_GATHER_X);
         let meta = ctx.recv(r, TAG_GATHER_M);
-        outs.push(decode_out(r, &plan, x, &meta)?);
+        outs.push(decode_out(r, &part, &a.row_ptr, x, &meta)?);
     }
     ctx.barrier();
     let report = assemble(
@@ -204,7 +211,7 @@ fn stop_from_code(c: f64) -> Result<StopReason> {
 /// Outcome + metrics of one rank as a flat f64 vector. Counters ride as
 /// exact small integers (f64 is exact through 2⁵³); history/telemetry are
 /// bit-identical on every rank, so only rank 0's copies are kept. Layout:
-/// 11 head fields, then `[11] = link count`, then 5 fields per
+/// 12 head fields, then `[12] = link count`, then 5 fields per
 /// [`WireLink`] (`peer, tx_bytes, tx_msgs, rx_bytes, rx_msgs`).
 fn encode_out(o: &RankOut) -> Vec<f64> {
     let mut v = vec![
@@ -219,6 +226,7 @@ fn encode_out(o: &RankOut) -> Vec<f64> {
         o.metrics.reduces as f64,
         o.metrics.halo_doubles_sent as f64,
         o.metrics.socket_wait_s,
+        o.metrics.ghost_len as f64,
         o.metrics.links.len() as f64,
     ];
     for l in &o.metrics.links {
@@ -233,22 +241,28 @@ fn encode_out(o: &RankOut) -> Vec<f64> {
     v
 }
 
-fn decode_out(rank: usize, plan: &DistPlan, x: Vec<f64>, v: &[f64]) -> Result<RankOut> {
-    if v.len() < 12 {
+fn decode_out(
+    rank: usize,
+    part: &RowPartition,
+    row_ptr: &[usize],
+    x: Vec<f64>,
+    v: &[f64],
+) -> Result<RankOut> {
+    if v.len() < 13 {
         return Err(Error::Transport(format!(
-            "gather: rank {rank} metrics frame has {} fields, expected at least 12",
+            "gather: rank {rank} metrics frame has {} fields, expected at least 13",
             v.len()
         )));
     }
-    let nlinks = v[11] as usize;
-    if v.len() != 12 + 5 * nlinks {
+    let nlinks = v[12] as usize;
+    if v.len() != 13 + 5 * nlinks {
         return Err(Error::Transport(format!(
             "gather: rank {rank} metrics frame has {} fields, expected {} for {nlinks} links",
             v.len(),
-            12 + 5 * nlinks
+            13 + 5 * nlinks
         )));
     }
-    let links = v[12..]
+    let links = v[13..]
         .chunks_exact(5)
         .map(|c| WireLink {
             peer: c[0] as usize,
@@ -258,12 +272,12 @@ fn decode_out(rank: usize, plan: &DistPlan, x: Vec<f64>, v: &[f64]) -> Result<Ra
             rx_msgs: c[4] as u64,
         })
         .collect();
-    let blk = &plan.blocks[rank];
-    if x.len() != blk.nloc() {
+    let (r0, r1) = part.range(rank);
+    let nloc = r1 - r0;
+    if x.len() != nloc {
         return Err(Error::Transport(format!(
-            "gather: rank {rank} sent {} solution rows, owns {}",
-            x.len(),
-            blk.nloc()
+            "gather: rank {rank} sent {} solution rows, owns {nloc}",
+            x.len()
         )));
     }
     Ok(RankOut {
@@ -275,14 +289,15 @@ fn decode_out(rank: usize, plan: &DistPlan, x: Vec<f64>, v: &[f64]) -> Result<Ra
         history: Vec::new(),
         metrics: RankMetrics {
             rank,
-            rows: blk.nloc(),
-            nnz: blk.panel.nnz(),
+            rows: nloc,
+            nnz: row_ptr[r1] - row_ptr[r0],
             compute_s: v[4],
             halo_s: v[5],
             reduce_wait_s: v[6],
             reduce_inflight_s: v[7],
             reduces: v[8] as u64,
             halo_doubles_sent: v[9] as u64,
+            ghost_len: v[11] as usize,
             socket_wait_s: v[10],
             links,
         },
@@ -502,6 +517,7 @@ mod tests {
                 reduce_inflight_s: 1.0,
                 reduces: 18,
                 halo_doubles_sent: 34,
+                ghost_len: 7,
                 socket_wait_s: 0.0625,
                 links: vec![
                     WireLink {
@@ -527,13 +543,14 @@ mod tests {
     #[test]
     fn gather_encoding_round_trips() {
         let a = gen::poisson2d_5pt(4, 4);
-        let plan = DistPlan::build(&a, 8);
+        let part = RowPartition::by_nnz(&a.row_ptr, 8);
         let o = out_for_test();
         let v = encode_out(&o);
-        assert_eq!(v.len(), 12 + 5 * 2, "11 head fields + count + 5 per link");
-        let blk = &plan.blocks[1];
-        let x = vec![0.5; blk.nloc()];
-        let d = decode_out(1, &plan, x.clone(), &v).unwrap();
+        assert_eq!(v.len(), 13 + 5 * 2, "12 head fields + count + 5 per link");
+        let (r0, r1) = part.range(1);
+        let nloc = r1 - r0;
+        let x = vec![0.5; nloc];
+        let d = decode_out(1, &part, &a.row_ptr, x.clone(), &v).unwrap();
         assert_eq!(d.x, x);
         assert_eq!(d.iterations, o.iterations);
         assert_eq!(d.final_norm.to_bits(), o.final_norm.to_bits());
@@ -541,16 +558,17 @@ mod tests {
         assert_eq!(d.stop, o.stop);
         assert_eq!(d.metrics.reduces, 18);
         assert_eq!(d.metrics.halo_doubles_sent, 34);
+        assert_eq!(d.metrics.ghost_len, 7, "ghost footprint survives the gather");
         assert_eq!(d.metrics.socket_wait_s, 0.0625);
-        assert_eq!(d.metrics.rows, blk.nloc());
+        assert_eq!(d.metrics.rows, nloc);
         assert_eq!(d.metrics.links, o.metrics.links, "wire links survive the gather");
         assert_eq!(d.metrics.wire_tx_bytes(), 272);
         assert_eq!(d.metrics.wire_rx_bytes(), 808);
         // Wrong shapes are errors, not panics.
-        assert!(decode_out(1, &plan, vec![0.0; 1], &v).is_err());
-        assert!(decode_out(1, &plan, vec![0.5; blk.nloc()], &v[..10]).is_err());
+        assert!(decode_out(1, &part, &a.row_ptr, vec![0.0; 1], &v).is_err());
+        assert!(decode_out(1, &part, &a.row_ptr, vec![0.5; nloc], &v[..10]).is_err());
         assert!(
-            decode_out(1, &plan, x, &v[..14]).is_err(),
+            decode_out(1, &part, &a.row_ptr, x, &v[..15]).is_err(),
             "truncated link list is an error"
         );
         assert!(stop_from_code(9.0).is_err());

@@ -80,7 +80,10 @@ pub const REDUCE_BIT: u64 = 1 << 63;
 /// `dist::exec::run_node` into an `Err` for the CLI.
 pub struct FabricFailure(pub crate::Error);
 
-fn fail(e: crate::Error) -> ! {
+/// Unwind out of a rank body with a transport failure. Used by
+/// [`RankCtx`]'s infallible methods and by solver bodies propagating a
+/// fallible halo exchange (`.unwrap_or_else(|e| fabric::bail(e))`).
+pub(crate) fn bail(e: crate::Error) -> ! {
     std::panic::panic_any(FabricFailure(e))
 }
 
@@ -152,6 +155,10 @@ pub(crate) struct CtxObs {
     /// `hypipe_allreduce_inflight`: reductions currently posted but not
     /// completed (the pipeline depth, live).
     pub inflight: obs::Gauge,
+    /// `hypipe_ghost_bytes`: bytes of this rank's SPMV ghost buffer
+    /// (`8 × ghost_len`), set once per solve — O(nloc + halo) under the
+    /// compact index layout, O(n) under the legacy full layout.
+    pub ghost: obs::Gauge,
 }
 
 impl CtxObs {
@@ -166,6 +173,7 @@ impl CtxObs {
             halo_unpack: obs::counter("hypipe_halo_unpack_bytes", labels),
             reduce_payload: obs::counter("hypipe_allreduce_payload_bytes", labels),
             inflight: obs::gauge("hypipe_allreduce_inflight", labels),
+            ghost: obs::gauge("hypipe_ghost_bytes", labels),
         })
     }
 }
@@ -236,13 +244,13 @@ impl RankCtx {
     pub fn barrier(&mut self) {
         let _span = trace::span("barrier", Cat::Net);
         if let Err(e) = self.tp.barrier() {
-            fail(e);
+            bail(e);
         }
     }
 
     /// Post `data` to rank `to` under `tag`. Non-blocking (channels are
     /// unbounded; sockets buffer); sending to self is a bug.
-    pub fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
+    pub fn send(&mut self, to: usize, tag: u64, data: &[f64]) {
         assert!(to != self.rank(), "rank {to}: send to self");
         assert!(to < self.ranks(), "send: rank {to} out of range");
         assert!(
@@ -251,7 +259,7 @@ impl RankCtx {
         );
         trace::mark("send", Cat::Net, tag);
         if let Err(e) = self.tp.send(to, tag, data) {
-            fail(e);
+            bail(e);
         }
     }
 
@@ -270,10 +278,43 @@ impl RankCtx {
         loop {
             let msg = match self.tp.recv() {
                 Ok(m) => m,
-                Err(e) => fail(e),
+                Err(e) => bail(e),
             };
             if msg.tag & REDUCE_BIT == 0 && msg.from == from && msg.tag == tag {
                 return msg.data;
+            }
+            self.absorb(msg);
+        }
+    }
+
+    /// Receive the next `tag` message from *any* still-`wanted` sender, in
+    /// arrival order — no fixed-rank-order blocking. `wanted[p]` marks the
+    /// peers a reply is still expected from; a `tag` message from an
+    /// already-drained peer is **not** returned but buffered like any
+    /// other stream (it belongs to the peer's *next* exchange, which may
+    /// race ahead — FIFO per sender keeps it correctly ordered). Drains
+    /// the transport's ready queue via `try_recv` before blocking.
+    pub fn recv_tag(&mut self, tag: u64, wanted: &[bool]) -> (usize, Vec<f64>) {
+        let _span = trace::span_arg("recv", Cat::Net, tag);
+        if let Some(pos) = self
+            .pend_p2p
+            .iter()
+            .position(|(f, t, _)| *t == tag && wanted[*f])
+        {
+            let (from, _, data) = self.pend_p2p.remove(pos);
+            return (from, data);
+        }
+        loop {
+            let msg = match self.tp.try_recv() {
+                Ok(Some(m)) => m,
+                Ok(None) => match self.tp.recv() {
+                    Ok(m) => m,
+                    Err(e) => bail(e),
+                },
+                Err(e) => bail(e),
+            };
+            if msg.tag & REDUCE_BIT == 0 && msg.tag == tag && wanted[msg.from] {
+                return (msg.from, msg.data);
             }
             self.absorb(msg);
         }
@@ -288,8 +329,8 @@ impl RankCtx {
         let posted = Instant::now();
         for p in 0..self.ranks() {
             if p != self.rank() {
-                if let Err(e) = self.tp.send(p, REDUCE_BIT | seq, vals.to_vec()) {
-                    fail(e);
+                if let Err(e) = self.tp.send(p, REDUCE_BIT | seq, vals) {
+                    bail(e);
                 }
             }
         }
@@ -321,7 +362,7 @@ impl RankCtx {
             match self.tp.try_recv() {
                 Ok(Some(msg)) => self.absorb(msg),
                 Ok(None) => break,
-                Err(e) => fail(e),
+                Err(e) => bail(e),
             }
         }
         if !self.have_all_parts(h.seq) {
@@ -343,7 +384,7 @@ impl RankCtx {
             while !self.have_all_parts(h.seq) {
                 let msg = match self.tp.recv() {
                     Ok(m) => m,
-                    Err(e) => fail(e),
+                    Err(e) => bail(e),
                 };
                 self.absorb(msg);
             }
@@ -512,7 +553,7 @@ where
                     trace::label_thread(rank as u32 + 1, &format!("rank {rank}"));
                     let tp = match mref(rank) {
                         Ok(t) => t,
-                        Err(e) => fail(e),
+                        Err(e) => bail(e),
                     };
                     let mut ctx = RankCtx::from_transport(tp, cfg);
                     fref(&mut ctx)
@@ -542,7 +583,7 @@ mod tests {
         let out = run(3, &FabricCfg::default(), |ctx| {
             let next = (ctx.rank() + 1) % ctx.ranks();
             let prev = (ctx.rank() + ctx.ranks() - 1) % ctx.ranks();
-            ctx.send(next, 7, vec![ctx.rank() as f64]);
+            ctx.send(next, 7, &[ctx.rank() as f64]);
             let got = ctx.recv(prev, 7);
             assert_eq!(got, vec![prev as f64]);
             ctx.rank()
@@ -556,9 +597,9 @@ mod tests {
             if ctx.rank() == 0 {
                 // Send tag 2 first, then tag 1 twice: receiver asks for
                 // tag 1 first and must get the sends in FIFO order.
-                ctx.send(1, 2, vec![20.0]);
-                ctx.send(1, 1, vec![11.0]);
-                ctx.send(1, 1, vec![12.0]);
+                ctx.send(1, 2, &[20.0]);
+                ctx.send(1, 1, &[11.0]);
+                ctx.send(1, 1, &[12.0]);
             } else {
                 assert_eq!(ctx.recv(0, 1), vec![11.0]);
                 assert_eq!(ctx.recv(0, 2), vec![20.0]);

@@ -40,7 +40,10 @@
 //! Reductions sum contributions in **rank order** (`fabric`), the
 //! decomposition is a pure function of the sparsity structure and the rank
 //! count (`part`), and the local SPMV accumulates each row exactly as the
-//! serial [`Csr::spmv`](crate::sparse::Csr::spmv) does. Consequences:
+//! serial [`Csr::spmv`](crate::sparse::Csr::spmv) does — the compact
+//! column renumbering ([`part::IndexLayout`]) rewrites indices but never
+//! reorders a row's stored entries, so this holds with O(nloc + halo)
+//! ghost buffers. Consequences:
 //!
 //! * a fixed rank count reproduces **bit-identical** solutions run after
 //!   run, for any injected latency;
@@ -63,10 +66,11 @@ pub mod transport;
 
 use std::time::{Duration, Instant};
 
+use crate::decomp::RowPartition;
 use crate::solver::{SolveOpts, StopReason};
 
 use self::fabric::{FabricCfg, RankCtx};
-use self::part::{DistPlan, RankBlock};
+use self::part::{HaloScratch, IndexLayout, RankBlock};
 use self::transport::{TcpCfg, TransportKind};
 
 /// Configuration of a distributed solve: the usual [`SolveOpts`] plus the
@@ -86,6 +90,10 @@ pub struct DistOpts {
     pub transport: TransportKind,
     /// Socket timeouts/retry policy for the TCP transport.
     pub tcp: TcpCfg,
+    /// Column indexing of the per-rank panels and ghost buffers:
+    /// compact O(nloc + halo) renumbering (default) or the legacy
+    /// full-length layout (`--layout full`, the differential oracle).
+    pub layout: IndexLayout,
 }
 
 impl DistOpts {
@@ -175,9 +183,10 @@ pub(crate) fn dist_true_residual(
     b: &[f64],
     x: &[f64],
     xbuf: &mut [f64],
+    hs: &mut HaloScratch,
 ) -> f64 {
-    xbuf[blk.r0..blk.r1].copy_from_slice(x);
-    blk.exchange(ctx, xbuf);
+    blk.set_owned(xbuf, x);
+    blk.exchange(ctx, xbuf, hs).unwrap_or_else(|e| fabric::bail(e));
     let mut ax = vec![0.0; blk.nloc()];
     blk.spmv(xbuf, &mut ax);
     let mut acc = 0.0;
@@ -188,9 +197,9 @@ pub(crate) fn dist_true_residual(
     ctx.allreduce(&[acc])[0].sqrt()
 }
 
-/// Shared driver: decompose, spin up the fabric, run `rank_fn` on every
-/// rank, and assemble the report. Both distributed solvers are this with a
-/// different rank body.
+/// Shared driver: partition, spin up the fabric, build each rank's block
+/// rank-locally, run `rank_fn` on every rank, and assemble the report.
+/// Both distributed solvers are this with a different rank body.
 pub(crate) fn drive(
     method: &str,
     a: &crate::sparse::Csr,
@@ -200,15 +209,21 @@ pub(crate) fn drive(
 ) -> crate::metrics::DistReport {
     assert_eq!(b.len(), a.n);
     let ranks = resolve_ranks(opts.ranks, a.n);
-    let plan = DistPlan::build(a, ranks);
+    let part = RowPartition::by_nnz(&a.row_ptr, ranks);
     let cfg = FabricCfg {
         reduce_latency: opts.reduce_latency,
         transport: opts.transport,
         tcp: opts.tcp.clone(),
     };
     let wall = Instant::now();
-    let outs = fabric::run(plan.ranks, &cfg, |ctx| {
-        rank_fn(ctx, &plan.blocks[ctx.rank()])
+    // Rank-local plan build — the same path the multi-process workers
+    // take: each rank derives its own panel + recv lists from its rows
+    // and completes its send lists with one halo-map exchange, so no
+    // thread ever holds another rank's panel (O(nloc + halo) per rank).
+    let outs = fabric::run(ranks, &cfg, |ctx| {
+        let mut blk = RankBlock::build_local(a, &part, ctx.rank(), opts.layout);
+        blk.complete_sends(ctx).unwrap_or_else(|e| fabric::bail(e));
+        rank_fn(ctx, &blk)
     });
     assemble(
         method,

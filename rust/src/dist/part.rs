@@ -5,30 +5,53 @@
 //! fabric ranks: rank `r` owns the contiguous row block `[r0, r1)` chosen
 //! so every rank holds roughly `nnz / ranks` stored entries, and gets
 //!
-//! * a **local CSR block** — its row panel of the matrix (its own copy of
-//!   the rows' entries, global column space), and
+//! * a **local CSR block** — its row panel of the matrix, and
 //! * a **halo map** — for every remote rank, the sorted list of vector
 //!   entries this rank needs from it (`recv`) and must ship to it
 //!   (`send`), derived once from the sparsity structure.
 //!
 //! [`RankBlock::exchange`] then performs one packed halo exchange: owned
 //! entries needed remotely are gathered into per-destination messages,
-//! sent point-to-point, and scattered into the ghost buffer on arrival.
+//! sent point-to-point, and scattered into the ghost buffer as the
+//! replies arrive (in arrival order — no fixed-rank-order blocking).
 //!
 //! ## Ghost buffers and bit-compatibility
 //!
-//! Each rank keeps a full-length ghost buffer for SPMV inputs and the
-//! panel keeps *global* column indices, so the local SPMV accumulates each
-//! row's terms in exactly the order the single-process
-//! [`Csr::spmv`] does — making the distributed SPMV **bit-identical to
-//! serial for any rank count** (and the halo exchange still moves only the
-//! packed entries actually needed). Compact column renumbering (O(local +
-//! halo) buffers) is a planned follow-on; it trades this bit-compatibility
-//! for memory scalability (see ROADMAP).
+//! Under the default [`IndexLayout::Compact`] layout each rank renumbers
+//! its panel columns into a dense local space: owned columns map to
+//! `[0, nloc)` (global `g` → `g - r0`) and halo columns follow as one
+//! dense segment ordered by owning rank, then ascending global index —
+//! exactly the concatenation of the sorted `recv` lists. The ghost buffer
+//! shrinks from `vec![0.0; n]` to `nloc + halo_count()` slots
+//! ([`RankBlock::xbuf_len`]) and the exchange scatters each peer's packed
+//! message into its contiguous halo sub-segment with one `copy_from_slice`.
+//!
+//! Renumbering rewrites column *indices* but never reorders a row's stored
+//! entries, so the local SPMV accumulates each row's terms in exactly the
+//! order the single-process [`Csr::spmv`] does — the distributed SPMV
+//! stays **bit-identical to serial for any rank count**, now with
+//! O(nloc + halo) memory instead of O(n) per rank. [`IndexLayout::Full`]
+//! keeps the historical global-column panel + full-length ghost buffer
+//! (useful as a differential-testing oracle: the test suite pins
+//! compact == full bitwise); both layouts use identical wire traffic.
+//!
+//! ## Rank-local plan build
+//!
+//! A multi-process worker cannot afford (and does not have) the global
+//! plan: [`RankBlock::build_local`] derives one rank's panel and `recv`
+//! lists from its own rows alone, and [`RankBlock::complete_sends`] fills
+//! in the `send` lists via one setup-time halo-map exchange
+//! ([`TAG_HALOMAP`]) over the transport — each rank ships the indices it
+//! needs, and what a peer asks of us *is* our send list. The driver-side
+//! [`DistPlan::build`] keeps the transpose construction (handy for tests
+//! and tooling) but reuses a single needed-column bitmap across ranks, so
+//! its transient scratch is O(n) total, not O(ranks · n).
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::decomp::RowPartition;
+use crate::obs;
 use crate::sparse::Csr;
 use crate::trace::{self, labels, Cat};
 
@@ -38,6 +61,55 @@ use super::fabric::RankCtx;
 /// exchanges between the same pair correctly ordered).
 pub const TAG_HALO: u64 = 0x48414C4F; // "HALO"
 
+/// Message tag of the setup-time halo-map exchange
+/// ([`RankBlock::complete_sends`]): each rank ships the global indices it
+/// needs from each peer, once, before the first iteration.
+pub const TAG_HALOMAP: u64 = 0x484D_4150; // "HMAP"
+
+/// Column indexing of a rank's panel and ghost buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IndexLayout {
+    /// Global column indices + full-length `vec![0.0; n]` ghost buffer.
+    /// O(n) memory per rank; kept as the differential-testing oracle.
+    Full,
+    /// Dense local renumbering: owned columns `[0, nloc)`, then one halo
+    /// segment sorted by owning rank then global index. O(nloc + halo)
+    /// memory per rank; bit-identical results (the default).
+    #[default]
+    Compact,
+}
+
+impl IndexLayout {
+    pub fn name(self) -> &'static str {
+        match self {
+            IndexLayout::Full => "full",
+            IndexLayout::Compact => "compact",
+        }
+    }
+}
+
+impl std::str::FromStr for IndexLayout {
+    type Err = crate::Error;
+    fn from_str(s: &str) -> crate::Result<IndexLayout> {
+        match s {
+            "full" => Ok(IndexLayout::Full),
+            "compact" => Ok(IndexLayout::Compact),
+            other => Err(crate::Error::Config(format!(
+                "unknown index layout '{other}' (valid: full, compact)"
+            ))),
+        }
+    }
+}
+
+/// Reusable per-solve halo-exchange scratch ([`RankBlock::halo_scratch`]):
+/// persistent per-peer pack buffers (no per-iteration heap allocation) and
+/// the still-expected-peer mask of the arrival-order drain.
+#[derive(Debug, Clone)]
+pub struct HaloScratch {
+    send: Vec<Vec<f64>>,
+    wanted: Vec<bool>,
+}
+
 /// One rank's share of the decomposed system.
 #[derive(Debug, Clone)]
 pub struct RankBlock {
@@ -45,13 +117,20 @@ pub struct RankBlock {
     /// Owned row range `[r0, r1)` of the global matrix.
     pub r0: usize,
     pub r1: usize,
-    /// Local CSR block: rows `[r0, r1)`, global column space.
+    /// Column indexing of `panel` and the ghost buffer.
+    pub layout: IndexLayout,
+    /// Local CSR block: rows `[r0, r1)`. Column space per `layout`; its
+    /// `n` field always equals [`RankBlock::xbuf_len`].
     pub panel: Csr,
-    /// `send[p]`: sorted global indices (all within `[r0, r1)`) whose
-    /// values rank `p` needs from us.
+    /// `send[p]`: sorted **global** indices (all within `[r0, r1)`) whose
+    /// values rank `p` needs from us (global in both layouts).
     pub send: Vec<Vec<usize>>,
-    /// `recv[p]`: sorted global indices we need from rank `p`.
+    /// `recv[p]`: sorted **global** indices we need from rank `p`.
     pub recv: Vec<Vec<usize>>,
+    /// Prefix sums of the `recv` list lengths (`ranks + 1` entries): peer
+    /// `p`'s compact halo sub-segment is
+    /// `nloc + halo_start[p] .. nloc + halo_start[p + 1]`.
+    halo_start: Vec<usize>,
 }
 
 impl RankBlock {
@@ -67,14 +146,71 @@ impl RankBlock {
 
     /// Total entries this rank receives per exchange (its halo size).
     pub fn halo_count(&self) -> usize {
-        self.recv.iter().map(|r| r.len()).sum()
+        *self.halo_start.last().unwrap()
+    }
+
+    /// Ghost-buffer length: `nloc + halo_count()` compact, `n` full.
+    /// Always equals `self.panel.n`, the length `spmv` asserts.
+    pub fn xbuf_len(&self) -> usize {
+        self.panel.n
+    }
+
+    /// Slots of the ghost buffer holding this rank's owned segment.
+    pub fn owned_range(&self) -> std::ops::Range<usize> {
+        match self.layout {
+            IndexLayout::Full => self.r0..self.r1,
+            IndexLayout::Compact => 0..self.nloc(),
+        }
+    }
+
+    /// Ghost-buffer slot of the *owned* global index `g ∈ [r0, r1)`.
+    fn owned_slot(&self, g: usize) -> usize {
+        debug_assert!(g >= self.r0 && g < self.r1);
+        match self.layout {
+            IndexLayout::Full => g,
+            IndexLayout::Compact => g - self.r0,
+        }
+    }
+
+    /// Copy the owned local vector `vals` (length `nloc`) into `xbuf`'s
+    /// owned segment.
+    pub fn set_owned(&self, xbuf: &mut [f64], vals: &[f64]) {
+        xbuf[self.owned_range()].copy_from_slice(vals);
+    }
+
+    /// Allocate this rank's zeroed ghost buffer, recording its footprint
+    /// in the rank's metrics (`ghost_len`) and the `hypipe_ghost_bytes`
+    /// gauge. One per solve — iterations reuse it.
+    pub fn make_xbuf(&self, ctx: &mut RankCtx) -> Vec<f64> {
+        let len = self.xbuf_len();
+        ctx.stats.ghost_len = len;
+        if let Some(o) = &ctx.obs {
+            o.ghost.set(8 * len as i64);
+        }
+        vec![0.0; len]
+    }
+
+    /// Allocate the reusable exchange scratch (per-peer pack buffers at
+    /// their final capacity, plus the arrival-order peer mask).
+    pub fn halo_scratch(&self) -> HaloScratch {
+        HaloScratch {
+            send: self.send.iter().map(|s| Vec::with_capacity(s.len())).collect(),
+            wanted: vec![false; self.recv.len()],
+        }
     }
 
     /// One packed halo exchange of the distributed vector behind `xbuf`
-    /// (full-length ghost buffer whose own segment `[r0, r1)` is current).
-    /// On return every halo slot this rank's rows read is current too.
-    /// Time and volume are charged to the rank's comm stats.
-    pub fn exchange(&self, ctx: &mut RankCtx, xbuf: &mut [f64]) {
+    /// (ghost buffer whose owned segment is current). On return every halo
+    /// slot this rank's rows read is current too. Time and volume are
+    /// charged to the rank's comm stats. A peer message of the wrong
+    /// length (short or corrupt frame) is an
+    /// [`Error::Transport`](crate::Error::Transport), not a panic.
+    pub fn exchange(
+        &self,
+        ctx: &mut RankCtx,
+        xbuf: &mut [f64],
+        hs: &mut HaloScratch,
+    ) -> crate::Result<()> {
         let t0 = Instant::now();
         let whole = trace::span(labels::HALO_EXCHANGE, Cat::Halo);
         // Post all sends first (non-blocking), then drain receives: no
@@ -86,10 +222,13 @@ impl RankBlock {
                 if p == self.rank || self.send[p].is_empty() {
                     continue;
                 }
-                let data: Vec<f64> = self.send[p].iter().map(|&g| xbuf[g]).collect();
-                ctx.stats.halo_doubles_sent += data.len() as u64;
-                packed += 8 * data.len() as u64;
-                ctx.send(p, TAG_HALO, data);
+                hs.send[p].clear();
+                for &g in &self.send[p] {
+                    hs.send[p].push(xbuf[self.owned_slot(g)]);
+                }
+                ctx.stats.halo_doubles_sent += hs.send[p].len() as u64;
+                packed += 8 * hs.send[p].len() as u64;
+                ctx.send(p, TAG_HALO, &hs.send[p]);
             }
             if let Some(o) = &ctx.obs {
                 o.halo_pack.add(packed);
@@ -98,15 +237,38 @@ impl RankBlock {
         {
             let _unpack = trace::span_arg(labels::HALO_UNPACK, Cat::Halo, self.halo_count() as u64);
             let mut unpacked = 0u64;
+            hs.wanted.clear();
+            hs.wanted.resize(ctx.ranks(), false);
+            let mut pending = 0usize;
             for p in 0..ctx.ranks() {
-                if p == self.rank || self.recv[p].is_empty() {
-                    continue;
+                if p != self.rank && !self.recv[p].is_empty() {
+                    hs.wanted[p] = true;
+                    pending += 1;
                 }
-                let data = ctx.recv(p, TAG_HALO);
-                assert_eq!(data.len(), self.recv[p].len(), "halo length mismatch");
+            }
+            while pending > 0 {
+                let (from, data) = ctx.recv_tag(TAG_HALO, &hs.wanted);
+                hs.wanted[from] = false;
+                pending -= 1;
+                if data.len() != self.recv[from].len() {
+                    return Err(crate::Error::Transport(format!(
+                        "rank {}: halo exchange from rank {from}: expected {} doubles, got {}",
+                        self.rank,
+                        self.recv[from].len(),
+                        data.len()
+                    )));
+                }
                 unpacked += 8 * data.len() as u64;
-                for (&g, v) in self.recv[p].iter().zip(data) {
-                    xbuf[g] = v;
+                match self.layout {
+                    IndexLayout::Compact => {
+                        let d0 = self.nloc() + self.halo_start[from];
+                        xbuf[d0..d0 + data.len()].copy_from_slice(&data);
+                    }
+                    IndexLayout::Full => {
+                        for (&g, v) in self.recv[from].iter().zip(data) {
+                            xbuf[g] = v;
+                        }
+                    }
                 }
             }
             if let Some(o) = &ctx.obs {
@@ -115,6 +277,7 @@ impl RankBlock {
         }
         drop(whole);
         ctx.stats.halo_s += t0.elapsed().as_secs_f64();
+        Ok(())
     }
 
     /// Local SPMV: `y = (A x)[r0..r1]` from the ghost buffer (which must
@@ -122,32 +285,173 @@ impl RankBlock {
     pub fn spmv(&self, xbuf: &[f64], y: &mut [f64]) {
         self.panel.spmv_rows_into(0, self.nloc(), xbuf, y);
     }
+
+    /// Build **one** rank's block from its own rows alone — the
+    /// multi-process worker path, where no rank holds the global plan.
+    /// `send` lists start empty; run [`RankBlock::complete_sends`] over
+    /// the transport before the first exchange. Scratch is O(panel nnz)
+    /// (sort + dedup of the off-range columns), not an O(n) bitmap.
+    pub fn build_local(
+        a: &Csr,
+        part: &RowPartition,
+        rank: usize,
+        layout: IndexLayout,
+    ) -> RankBlock {
+        let ranks = part.blocks();
+        let (r0, r1) = part.range(rank);
+        let mut ghosts: Vec<usize> = a.cols[a.row_ptr[r0]..a.row_ptr[r1]]
+            .iter()
+            .map(|&c| c as usize)
+            .filter(|&c| c < r0 || c >= r1)
+            .collect();
+        ghosts.sort_unstable();
+        ghosts.dedup();
+        let mut recv = vec![Vec::new(); ranks];
+        for g in ghosts {
+            // owner_of is monotone in g, so each recv list comes out sorted.
+            recv[part.owner_of(g)].push(g);
+        }
+        debug_assert!(recv[rank].is_empty(), "own columns are not halo");
+        RankBlock::from_parts(a, part, rank, recv, vec![Vec::new(); ranks], layout)
+    }
+
+    /// Complete the `send` lists of a [`build_local`](RankBlock::build_local)
+    /// block with one halo-map exchange: every rank ships each peer the
+    /// global indices it needs from that peer; what a peer asks of us *is*
+    /// our send list. Indices ride the transport as exact f64s (column
+    /// counts are far below 2^53); each received list is validated —
+    /// strictly ascending, owned by this rank — so a corrupt or misrouted
+    /// frame surfaces as [`Error::Transport`](crate::Error::Transport) at
+    /// setup, not as silent wrong answers later.
+    pub fn complete_sends(&mut self, ctx: &mut RankCtx) -> crate::Result<()> {
+        let ranks = ctx.ranks();
+        if ranks == 1 {
+            return Ok(());
+        }
+        // Fixed message count: empty lists are sent too, so every rank
+        // knows when it has heard from everyone.
+        for p in 0..ranks {
+            if p == self.rank {
+                continue;
+            }
+            let data: Vec<f64> = self.recv[p].iter().map(|&g| g as f64).collect();
+            ctx.send(p, TAG_HALOMAP, &data);
+        }
+        let mut wanted = vec![true; ranks];
+        wanted[self.rank] = false;
+        for _ in 0..ranks - 1 {
+            let (from, data) = ctx.recv_tag(TAG_HALOMAP, &wanted);
+            wanted[from] = false;
+            let mut list: Vec<usize> = Vec::with_capacity(data.len());
+            for v in data {
+                let g = v as usize;
+                let ascending = list.last().is_none_or(|&prev| prev < g);
+                if v.fract() != 0.0 || v < 0.0 || g < self.r0 || g >= self.r1 || !ascending {
+                    return Err(crate::Error::Transport(format!(
+                        "rank {}: halo map from rank {from}: bad column {v} (want strictly \
+                         ascending indices owned by this rank, i.e. in [{}, {}))",
+                        self.rank, self.r0, self.r1
+                    )));
+                }
+                list.push(g);
+            }
+            self.send[from] = list;
+        }
+        Ok(())
+    }
+
+    /// Assemble a block from its halo maps, renumbering the panel when the
+    /// layout is compact. `recv` lists must be sorted ascending per peer.
+    fn from_parts(
+        a: &Csr,
+        part: &RowPartition,
+        rank: usize,
+        recv: Vec<Vec<usize>>,
+        send: Vec<Vec<usize>>,
+        layout: IndexLayout,
+    ) -> RankBlock {
+        let (r0, r1) = part.range(rank);
+        let nloc = r1 - r0;
+        let mut halo_start = Vec::with_capacity(recv.len() + 1);
+        let mut acc = 0usize;
+        for list in &recv {
+            halo_start.push(acc);
+            acc += list.len();
+        }
+        halo_start.push(acc);
+        let mut panel = a.row_panel(r0, r1);
+        if layout == IndexLayout::Compact {
+            // Dense renumbering: owned g → g - r0; halo g → its slot in
+            // the concatenated (by owner rank, then ascending g) segment.
+            // Entry *order* within each row is untouched, which is what
+            // keeps the local SPMV bit-identical to serial.
+            let mut halo_slot: HashMap<u32, u32> = HashMap::with_capacity(acc);
+            for (p, list) in recv.iter().enumerate() {
+                for (i, &g) in list.iter().enumerate() {
+                    halo_slot.insert(g as u32, (nloc + halo_start[p] + i) as u32);
+                }
+            }
+            for c in &mut panel.cols {
+                let g = *c as usize;
+                *c = if g >= r0 && g < r1 {
+                    (g - r0) as u32
+                } else {
+                    *halo_slot.get(c).expect("panel column neither owned nor halo")
+                };
+            }
+            panel.n = nloc + acc;
+        }
+        RankBlock {
+            rank,
+            r0,
+            r1,
+            layout,
+            panel,
+            send,
+            recv,
+            halo_start,
+        }
+    }
 }
 
 /// The full decomposition: one [`RankBlock`] per rank plus the partition
 /// that produced them. Built once per (matrix, rank count) on the driver,
-/// shared read-only by all rank threads.
+/// shared read-only by all rank threads (tests and tooling — the solve
+/// paths build rank-locally via [`RankBlock::build_local`]).
 #[derive(Debug, Clone)]
 pub struct DistPlan {
     pub n: usize,
     pub ranks: usize,
     pub part: RowPartition,
     pub blocks: Vec<RankBlock>,
+    /// Peak needed-column scratch the build used: one reusable `n`-slot
+    /// bitmap cleared between ranks — O(n) total, not O(ranks · n).
+    pub scratch_bytes: usize,
 }
 
 impl DistPlan {
+    /// [`DistPlan::build_layout`] under the default (compact) layout.
+    pub fn build(a: &Csr, ranks: usize) -> DistPlan {
+        DistPlan::build_layout(a, ranks, IndexLayout::default())
+    }
+
     /// nnz-balanced 1-D row-block decomposition of `a` over `ranks` ranks
     /// (clamped to at most one rank per row). Pure function of the
-    /// sparsity structure and the rank count — the determinism anchor for
-    /// everything downstream.
-    pub fn build(a: &Csr, ranks: usize) -> DistPlan {
+    /// sparsity structure, the rank count and the layout — the
+    /// determinism anchor for everything downstream.
+    pub fn build_layout(a: &Csr, ranks: usize, layout: IndexLayout) -> DistPlan {
         let ranks = ranks.clamp(1, a.n.max(1));
         let part = RowPartition::by_nnz(&a.row_ptr, ranks);
-        // Per-rank needed-column sets, grouped by owner, ascending.
+        // One reusable needed-column bitmap for the whole build, cleared
+        // in O(halo) between ranks — not a fresh vec![false; n] per rank.
+        let mut need = vec![false; a.n];
+        let scratch_bytes = std::mem::size_of_val(&need[..]);
+        if obs::enabled() {
+            obs::gauge("hypipe_plan_scratch_bytes", &[]).set(scratch_bytes as i64);
+        }
         let mut recv_of: Vec<Vec<Vec<usize>>> = Vec::with_capacity(ranks);
         for rank in 0..ranks {
             let (r0, r1) = part.range(rank);
-            let mut need = vec![false; a.n];
             for j in a.row_ptr[r0]..a.row_ptr[r1] {
                 let c = a.cols[j] as usize;
                 if c < r0 || c >= r1 {
@@ -159,8 +463,14 @@ impl DistPlan {
                 recv[part.owner_of(g)].push(g);
             }
             debug_assert!(recv[rank].is_empty(), "own columns are not halo");
+            for list in &recv {
+                for &g in list {
+                    need[g] = false;
+                }
+            }
             recv_of.push(recv);
         }
+        debug_assert!(need.iter().all(|&b| !b), "scratch left dirty");
         // Send lists are the transpose of the recv lists (built in full
         // before the recv lists are moved into the blocks).
         let send_of: Vec<Vec<Vec<usize>>> = (0..ranks)
@@ -170,23 +480,14 @@ impl DistPlan {
             .into_iter()
             .zip(send_of)
             .enumerate()
-            .map(|(rank, (recv, send))| {
-                let (r0, r1) = part.range(rank);
-                RankBlock {
-                    rank,
-                    r0,
-                    r1,
-                    panel: a.row_panel(r0, r1),
-                    send,
-                    recv,
-                }
-            })
+            .map(|(rank, (recv, send))| RankBlock::from_parts(a, &part, rank, recv, send, layout))
             .collect();
         DistPlan {
             n: a.n,
             ranks,
             part,
             blocks,
+            scratch_bytes,
         }
     }
 
@@ -209,34 +510,72 @@ mod tests {
             let n = rng.range(5, 200);
             let a = gen::banded_spd(n, rng.range_f64(2.0, 12.0), rng.next_u64());
             for ranks in [1, 2, 3, 4, 7] {
-                let plan = DistPlan::build(&a, ranks);
-                let ranks = plan.ranks;
-                let mut rows = 0;
-                for b in &plan.blocks {
-                    rows += b.nloc();
-                    for (p, list) in b.recv.iter().enumerate() {
-                        // sorted, remote-owned, and mirrored by p's send list
-                        assert!(list.windows(2).all(|w| w[0] < w[1]));
-                        for &g in list {
-                            assert!(g < b.r0 || g >= b.r1);
-                            assert_eq!(plan.part.owner_of(g), p);
+                for layout in [IndexLayout::Full, IndexLayout::Compact] {
+                    let plan = DistPlan::build_layout(&a, ranks, layout);
+                    let ranks = plan.ranks;
+                    let mut rows = 0;
+                    for b in &plan.blocks {
+                        rows += b.nloc();
+                        for (p, list) in b.recv.iter().enumerate() {
+                            // sorted, remote-owned, and mirrored by p's send list
+                            assert!(list.windows(2).all(|w| w[0] < w[1]));
+                            for &g in list {
+                                assert!(g < b.r0 || g >= b.r1);
+                                assert_eq!(plan.part.owner_of(g), p);
+                            }
+                            assert_eq!(list, &plan.blocks[p].send[b.rank]);
                         }
-                        assert_eq!(list, &plan.blocks[p].send[b.rank]);
+                        match layout {
+                            // every full-layout column is owned or halo
+                            IndexLayout::Full => {
+                                assert_eq!(b.xbuf_len(), a.n);
+                                let halo: std::collections::BTreeSet<usize> =
+                                    b.recv.iter().flatten().copied().collect();
+                                for &col in &b.panel.cols {
+                                    let c = col as usize;
+                                    assert!(
+                                        (c >= b.r0 && c < b.r1) || halo.contains(&c),
+                                        "column {c} neither owned nor halo"
+                                    );
+                                }
+                            }
+                            // compact columns live in the dense local space
+                            IndexLayout::Compact => {
+                                assert_eq!(b.xbuf_len(), b.nloc() + b.halo_count());
+                                assert!(b.panel.cols.iter().all(|&c| (c as usize) < b.xbuf_len()));
+                            }
+                        }
                     }
-                    // every halo column some row of the panel actually reads
-                    let halo: std::collections::BTreeSet<usize> =
-                        b.recv.iter().flatten().copied().collect();
-                    for &col in &b.panel.cols {
-                        let c = col as usize;
-                        assert!(
-                            (c >= b.r0 && c < b.r1) || halo.contains(&c),
-                            "column {c} neither owned nor halo"
-                        );
-                    }
+                    assert_eq!(rows, a.n, "ranks={ranks}");
                 }
-                assert_eq!(rows, a.n, "ranks={ranks}");
             }
         });
+    }
+
+    #[test]
+    fn compact_renumbering_preserves_entry_order_and_maps_densely() {
+        let a = gen::poisson2d_5pt(11, 7);
+        let full = DistPlan::build_layout(&a, 4, IndexLayout::Full);
+        let compact = DistPlan::build_layout(&a, 4, IndexLayout::Compact);
+        for (fb, cb) in full.blocks.iter().zip(&compact.blocks) {
+            // Same shape, same values, entry for entry — only the column
+            // indices were rewritten.
+            assert_eq!(fb.panel.row_ptr, cb.panel.row_ptr);
+            assert_eq!(fb.panel.vals, cb.panel.vals);
+            assert_eq!(cb.panel.n, cb.nloc() + cb.halo_count());
+            // The concatenated recv lists give the halo slot order: owner
+            // rank ascending, then global index ascending.
+            let halo: Vec<usize> = cb.recv.iter().flatten().copied().collect();
+            for (j, (&fg, &cc)) in fb.panel.cols.iter().zip(&cb.panel.cols).enumerate() {
+                let g = fg as usize;
+                let expect = if g >= cb.r0 && g < cb.r1 {
+                    g - cb.r0
+                } else {
+                    cb.nloc() + halo.iter().position(|&h| h == g).expect("halo col")
+                };
+                assert_eq!(cc as usize, expect, "entry {j} of rank {}", cb.rank);
+            }
+        }
     }
 
     #[test]
@@ -245,6 +584,7 @@ mod tests {
         let plan = DistPlan::build(&a, 1);
         assert_eq!(plan.halo_total(), 0);
         assert_eq!(plan.blocks[0].nloc(), a.n);
+        assert_eq!(plan.blocks[0].xbuf_len(), a.n);
     }
 
     #[test]
@@ -256,31 +596,99 @@ mod tests {
     }
 
     #[test]
+    fn plan_build_scratch_is_one_bitmap_not_per_rank() {
+        let a = gen::poisson2d_5pt(23, 17);
+        for ranks in [1, 4, 7] {
+            let plan = DistPlan::build(&a, ranks);
+            // One bool per column, reused across all ranks.
+            assert_eq!(plan.scratch_bytes, a.n, "ranks={ranks}");
+        }
+    }
+
+    #[test]
     fn exchange_fills_exactly_the_halo() {
         let a = gen::poisson2d_5pt(13, 9);
-        let plan = DistPlan::build(&a, 3);
-        let x: Vec<f64> = (0..a.n).map(|i| (i as f64).sin()).collect();
-        let got = fabric::run(plan.ranks, &FabricCfg::default(), |ctx| {
+        for layout in [IndexLayout::Full, IndexLayout::Compact] {
+            let plan = DistPlan::build_layout(&a, 3, layout);
+            let x: Vec<f64> = (0..a.n).map(|i| (i as f64).sin()).collect();
+            let got = fabric::run(plan.ranks, &FabricCfg::default(), |ctx| {
+                let blk = &plan.blocks[ctx.rank()];
+                let mut xbuf = vec![f64::NAN; blk.xbuf_len()];
+                blk.set_owned(&mut xbuf, &x[blk.r0..blk.r1]);
+                let mut hs = blk.halo_scratch();
+                blk.exchange(ctx, &mut xbuf, &mut hs).unwrap();
+                // Owned + halo slots are exact; everything else untouched.
+                let halo: Vec<usize> = blk.recv.iter().flatten().copied().collect();
+                for (i, &g) in halo.iter().enumerate() {
+                    let slot = match layout {
+                        IndexLayout::Full => g,
+                        IndexLayout::Compact => blk.nloc() + i,
+                    };
+                    assert_eq!(xbuf[slot].to_bits(), x[g].to_bits());
+                }
+                if layout == IndexLayout::Full {
+                    let halo: std::collections::BTreeSet<usize> = halo.into_iter().collect();
+                    for (g, v) in xbuf.iter().enumerate() {
+                        if (g < blk.r0 || g >= blk.r1) && !halo.contains(&g) {
+                            assert!(v.is_nan());
+                        }
+                    }
+                } else {
+                    assert_eq!(xbuf.len(), blk.nloc() + blk.halo_count());
+                }
+                ctx.stats.halo_doubles_sent
+            });
+            let sent: u64 = got.iter().sum();
+            assert_eq!(sent as usize, plan.halo_total());
+        }
+    }
+
+    #[test]
+    fn build_local_plus_complete_sends_matches_driver_plan() {
+        let a = gen::banded_spd(97, 6.0, 42);
+        for ranks in [1, 2, 3, 4, 7] {
+            let plan = DistPlan::build(&a, ranks);
+            let part = plan.part.clone();
+            let got = fabric::run(plan.ranks, &FabricCfg::default(), |ctx| {
+                let mut blk = RankBlock::build_local(&a, &part, ctx.rank(), IndexLayout::Compact);
+                blk.complete_sends(ctx).unwrap();
+                blk
+            });
+            for (local, global) in got.iter().zip(&plan.blocks) {
+                assert_eq!(local.recv, global.recv, "ranks={ranks}");
+                assert_eq!(local.send, global.send, "ranks={ranks}");
+                assert_eq!(local.panel.cols, global.panel.cols, "ranks={ranks}");
+                assert_eq!(local.panel.n, global.panel.n, "ranks={ranks}");
+            }
+        }
+    }
+
+    #[test]
+    fn short_halo_frame_is_a_transport_error_not_a_panic() {
+        let a = gen::poisson2d_5pt(8, 8);
+        let plan = DistPlan::build(&a, 2);
+        assert!(!plan.blocks[0].recv[1].is_empty(), "test needs a halo");
+        let errs = fabric::run(plan.ranks, &FabricCfg::default(), |ctx| {
             let blk = &plan.blocks[ctx.rank()];
-            let mut xbuf = vec![f64::NAN; a.n];
-            xbuf[blk.r0..blk.r1].copy_from_slice(&x[blk.r0..blk.r1]);
-            blk.exchange(ctx, &mut xbuf);
-            // Owned + halo slots are exact; everything else untouched.
-            for p in 0..ctx.ranks() {
-                for &g in &blk.recv[p] {
-                    assert_eq!(xbuf[g].to_bits(), x[g].to_bits());
-                }
+            let mut hs = blk.halo_scratch();
+            let mut xbuf = vec![0.0; blk.xbuf_len()];
+            if ctx.rank() == 1 {
+                // A short (corrupt) halo frame instead of the real pack.
+                let bogus = vec![1.0; blk.send[0].len() - 1];
+                ctx.send(0, TAG_HALO, &bogus);
+                // Drain rank 0's legitimate message so it isn't left dangling.
+                let _ = ctx.recv(0, TAG_HALO);
+                None
+            } else {
+                Some(blk.exchange(ctx, &mut xbuf, &mut hs))
             }
-            let halo: std::collections::BTreeSet<usize> =
-                blk.recv.iter().flatten().copied().collect();
-            for (g, v) in xbuf.iter().enumerate() {
-                if (g < blk.r0 || g >= blk.r1) && !halo.contains(&g) {
-                    assert!(v.is_nan());
-                }
-            }
-            ctx.stats.halo_doubles_sent
         });
-        let sent: u64 = got.iter().sum();
-        assert_eq!(sent as usize, plan.halo_total());
+        match &errs[0] {
+            Some(Err(crate::Error::Transport(msg))) => {
+                assert!(msg.contains("expected"), "{msg}");
+                assert!(msg.contains("rank 0"), "{msg}");
+            }
+            other => panic!("expected a transport error, got {other:?}"),
+        }
     }
 }

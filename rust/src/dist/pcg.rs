@@ -17,7 +17,7 @@ use crate::solver::{is_bad, SolveOpts, StopReason};
 use crate::sparse::Csr;
 use crate::trace::{self, Cat, Health, Probe};
 
-use super::fabric::RankCtx;
+use super::fabric::{self, RankCtx};
 use super::part::RankBlock;
 use super::{dist_true_residual, drive, finish_rank, DistOpts, RankOut, RankSolve};
 
@@ -43,7 +43,8 @@ pub(crate) fn solve_rank(
     let t_all = Instant::now();
     let nl = blk.nloc();
     let pcl = pc.restrict(blk.r0, blk.r1);
-    let mut xbuf = vec![0.0; b.len()];
+    let mut xbuf = blk.make_xbuf(ctx);
+    let mut hs = blk.halo_scratch();
 
     // line 1: r₀ = b ; u₀ = M⁻¹ r₀
     let mut x = vec![0.0; nl];
@@ -79,8 +80,9 @@ pub(crate) fn solve_rank(
         let beta = if it > 0 { gamma / gamma_prev } else { 0.0 };
         blas::xpay(&u, beta, &mut p);
         // line 10: s = A p (halo exchange + local SPMV)
-        xbuf[blk.r0..blk.r1].copy_from_slice(&p);
-        blk.exchange(ctx, &mut xbuf);
+        blk.set_owned(&mut xbuf, &p);
+        blk.exchange(ctx, &mut xbuf, &mut hs)
+            .unwrap_or_else(|e| fabric::bail(e));
         blk.spmv(&xbuf, &mut s);
         // line 11: δ = (s, p) — BLOCKING sync point 1.
         let delta = ctx.allreduce(&[blas::dot(&s, &p)])[0];
@@ -105,7 +107,7 @@ pub(crate) fn solve_rank(
         // Health probe: collective true-residual sample at the cadence
         // (identical on every rank), divergence decision symmetric.
         let sampled = if probe.wants_true(it + 1) {
-            Some(dist_true_residual(ctx, blk, b, &x, &mut xbuf))
+            Some(dist_true_residual(ctx, blk, b, &x, &mut xbuf, &mut hs))
         } else {
             None
         };

@@ -24,7 +24,7 @@ use crate::solver::{pipecg::scalars, SolveOpts, StopReason};
 use crate::sparse::Csr;
 use crate::trace::{self, Cat, Health, Probe};
 
-use super::fabric::RankCtx;
+use super::fabric::{self, RankCtx};
 use super::part::RankBlock;
 use super::{dist_true_residual, drive, finish_rank, DistOpts, RankOut, RankSolve};
 
@@ -52,15 +52,17 @@ pub(crate) fn solve_rank(
     let t_all = Instant::now();
     let nl = blk.nloc();
     let pcl = pc.restrict(blk.r0, blk.r1);
-    let mut xbuf = vec![0.0; b.len()];
+    let mut xbuf = blk.make_xbuf(ctx);
+    let mut hs = blk.halo_scratch();
 
     // Init (Alg. 2 lines 1–3, as in PipecgState::init).
     let mut x = vec![0.0; nl];
     let mut r = b[blk.r0..blk.r1].to_vec();
     let mut u = vec![0.0; nl];
     pcl.apply(&r, &mut u);
-    xbuf[blk.r0..blk.r1].copy_from_slice(&u);
-    blk.exchange(ctx, &mut xbuf);
+    blk.set_owned(&mut xbuf, &u);
+    blk.exchange(ctx, &mut xbuf, &mut hs)
+        .unwrap_or_else(|e| fabric::bail(e));
     let mut w = vec![0.0; nl];
     blk.spmv(&xbuf, &mut w);
     let (gp, dp, np) = blas::fused_dots3(&r, &w, &u);
@@ -68,8 +70,9 @@ pub(crate) fn solve_rank(
     let (mut gamma, mut delta, mut norm) = (red[0], red[1], red[2].sqrt());
     let mut m = vec![0.0; nl];
     pcl.apply(&w, &mut m);
-    xbuf[blk.r0..blk.r1].copy_from_slice(&m);
-    blk.exchange(ctx, &mut xbuf);
+    blk.set_owned(&mut xbuf, &m);
+    blk.exchange(ctx, &mut xbuf, &mut hs)
+        .unwrap_or_else(|e| fabric::bail(e));
     let mut nv = vec![0.0; nl];
     blk.spmv(&xbuf, &mut nv);
 
@@ -120,8 +123,9 @@ pub(crate) fn solve_rank(
         let h = ctx.iallreduce(&[gp, dp, np]);
         // …lines 21–22 overlap it: local PC, halo exchange, local SPMV.
         pcl.apply(&w, &mut m);
-        xbuf[blk.r0..blk.r1].copy_from_slice(&m);
-        blk.exchange(ctx, &mut xbuf);
+        blk.set_owned(&mut xbuf, &m);
+        blk.exchange(ctx, &mut xbuf, &mut hs)
+            .unwrap_or_else(|e| fabric::bail(e));
         blk.spmv(&xbuf, &mut nv);
         // Reduction completes (only the non-hidden remainder blocks here).
         let red = ctx.wait(h);
@@ -136,7 +140,7 @@ pub(crate) fn solve_rank(
         // Health probe: collective true-residual sample at the cadence
         // (identical on every rank), divergence decision symmetric.
         let sampled = if probe.wants_true(it + 1) {
-            Some(dist_true_residual(ctx, blk, b, &x, &mut xbuf))
+            Some(dist_true_residual(ctx, blk, b, &x, &mut xbuf, &mut hs))
         } else {
             None
         };

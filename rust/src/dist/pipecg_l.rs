@@ -28,7 +28,7 @@ use crate::solver::{is_bad, SolveOpts, StopReason};
 use crate::sparse::Csr;
 use crate::trace::{self, Cat, Health, Probe};
 
-use super::fabric::{Allreduce, RankCtx};
+use super::fabric::{self, Allreduce, RankCtx};
 use super::part::RankBlock;
 use super::{dist_true_residual, drive, finish_rank, DistOpts, RankOut, RankSolve};
 
@@ -65,7 +65,8 @@ pub(crate) fn solve_rank_deep(
     let nl = blk.nloc();
     let pcl = pc.restrict(blk.r0, blk.r1);
     let weight: Vec<f64> = pcl.inv_diag.iter().map(|d| 1.0 / d).collect();
-    let mut xbuf = vec![0.0; b.len()];
+    let mut xbuf = blk.make_xbuf(ctx);
+    let mut hs = blk.halo_scratch();
 
     // β = ‖M⁻¹b‖_M — the one blocking init reduction.
     let r = b[blk.r0..blk.r1].to_vec();
@@ -127,8 +128,9 @@ pub(crate) fn solve_rank_deep(
         let _iter = trace::span_arg("iter", Cat::Solver, j as u64);
         // (1) Local SpMV of the already-known z_j — the bulk of the work
         // the in-flight reductions hide behind.
-        xbuf[blk.r0..blk.r1].copy_from_slice(zring.get(j));
-        blk.exchange(ctx, &mut xbuf);
+        blk.set_owned(&mut xbuf, zring.get(j));
+        blk.exchange(ctx, &mut xbuf, &mut hs)
+            .unwrap_or_else(|e| fabric::bail(e));
         blk.spmv(&xbuf, &mut az);
         // (2) Complete the reduction posted l iterations ago → column c.
         if j >= l {
@@ -153,7 +155,7 @@ pub(crate) fn solve_rank_deep(
                     // Health probe: collective true-residual sample at the
                     // cadence (identical on every rank), decision symmetric.
                     let sampled = if probe.wants_true(c) {
-                        Some(dist_true_residual(ctx, blk, b, &x, &mut xbuf))
+                        Some(dist_true_residual(ctx, blk, b, &x, &mut xbuf, &mut hs))
                     } else {
                         None
                     };

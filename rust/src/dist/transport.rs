@@ -210,8 +210,10 @@ pub trait Transport: Send {
     /// Total rank count (the roster size).
     fn ranks(&self) -> usize;
     /// Post `data` to rank `to` under `tag`. Non-blocking or
-    /// buffered-blocking (socket backpressure); never to self.
-    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<()>;
+    /// buffered-blocking (socket backpressure); never to self. Borrowed
+    /// so callers can reuse persistent pack buffers (a transport that
+    /// needs an owned copy makes its own).
+    fn send(&mut self, to: usize, tag: u64, data: &[f64]) -> Result<()>;
     /// Block until the next message from any peer arrives.
     fn recv(&mut self) -> Result<WireMsg>;
     /// Non-blocking poll for the next message from any peer.
@@ -290,13 +292,13 @@ impl Transport for ChanTransport {
         self.ranks
     }
 
-    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<()> {
+    fn send(&mut self, to: usize, tag: u64, data: &[f64]) -> Result<()> {
         let doubles = data.len();
         self.tx[to]
             .send(WireMsg {
                 from: self.rank,
                 tag,
-                data,
+                data: data.to_vec(),
             })
             .map_err(|_| {
                 Error::Transport(format!(
@@ -954,8 +956,8 @@ impl Transport for TcpTransport {
         self.ranks
     }
 
-    fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) -> Result<()> {
-        let body = encode_data(self.rank, tag, &data);
+    fn send(&mut self, to: usize, tag: u64, data: &[f64]) -> Result<()> {
+        let body = encode_data(self.rank, tag, data);
         let rank = self.rank;
         let w = self.writers[to]
             .as_mut()
@@ -1119,12 +1121,12 @@ mod tests {
         };
         assert_eq!(t1.meta(), "banded:100", "roster meta reaches the joiner");
         assert_eq!(t0.meta(), "banded:100");
-        t0.send(1, 7, vec![1.5, -2.5]).unwrap();
+        t0.send(1, 7, &[1.5, -2.5]).unwrap();
         let m = t1.recv().unwrap();
         assert_eq!((m.from, m.tag), (0, 7));
         assert_eq!(m.data, vec![1.5, -2.5]);
         assert!(t1.try_recv().unwrap().is_none());
-        t1.send(0, 8, vec![9.0]).unwrap();
+        t1.send(0, 8, &[9.0]).unwrap();
         assert_eq!(t0.recv().unwrap().data, vec![9.0]);
         // Barrier from both sides (different threads, same epoch).
         let h = std::thread::spawn(move || {
@@ -1152,9 +1154,9 @@ mod tests {
         let mut t2 = eps.pop().unwrap();
         let mut t1 = eps.pop().unwrap();
         let mut t0 = eps.pop().unwrap();
-        t0.send(1, 1, vec![0.0; 4]).unwrap();
-        t0.send(2, 1, vec![0.0; 2]).unwrap();
-        t1.send(0, 1, vec![0.0; 8]).unwrap();
+        t0.send(1, 1, &[0.0; 4]).unwrap();
+        t0.send(2, 1, &[0.0; 2]).unwrap();
+        t1.send(0, 1, &[0.0; 8]).unwrap();
         assert_eq!(t1.recv().unwrap().data.len(), 4);
         assert_eq!(t2.recv().unwrap().data.len(), 2);
         assert_eq!(t0.recv().unwrap().data.len(), 8);

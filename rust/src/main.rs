@@ -73,6 +73,10 @@ COMMON FLAGS
   --transport T     chan | tcp — wire joining the fabric ranks (default
                     chan: in-process channels; tcp: framed loopback/LAN
                     sockets with a rank-0 rendezvous)
+  --layout L        compact | full — per-rank ghost-buffer indexing for
+                    the dist-* methods (default compact: O(nloc + halo)
+                    memory per rank; full: legacy O(n) global columns —
+                    both produce bit-identical solutions)
   --gpu-mem BYTES   simulated device memory capacity (default 5 GiB)
   --trace PATH      write a chrome-trace of the *virtual* timeline
   --trace-out PATH  write a chrome-trace of measured wall-clock spans

@@ -206,6 +206,11 @@ pub struct RankMetrics {
     pub reduces: u64,
     /// Halo f64 entries shipped by this rank over the whole solve.
     pub halo_doubles_sent: u64,
+    /// Ghost-buffer slots this rank allocated for SPMV inputs:
+    /// `nloc + halo` under the compact index layout, the full `n` under
+    /// the legacy full layout — the direct witness that per-rank memory
+    /// scales down with the rank count.
+    pub ghost_len: usize,
     /// Wall seconds the transport spent blocked on the wire (socket reads
     /// for TCP; zero for the in-process channel transport). A subset of
     /// the waits already counted in `halo_s`/`reduce_wait_s` — reported
@@ -260,6 +265,7 @@ impl RankMetrics {
             ("reduce_hidden_s", n(self.reduce_hidden_s())),
             ("reduces", n(self.reduces as f64)),
             ("halo_doubles_sent", n(self.halo_doubles_sent as f64)),
+            ("ghost_len", n(self.ghost_len as f64)),
             ("socket_wait_s", n(self.socket_wait_s)),
             ("wire_tx_bytes", n(self.wire_tx_bytes() as f64)),
             ("wire_tx_msgs", n(self.wire_tx_msgs() as f64)),

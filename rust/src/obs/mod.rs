@@ -132,6 +132,15 @@ impl Gauge {
         self.add(-1);
     }
 
+    /// Overwrite the level (e.g. a per-solve footprint gauge that must
+    /// not accumulate across solves in one process).
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }

@@ -14,7 +14,7 @@
 use std::time::Duration;
 
 use hypipe::dist::fabric::{self, FabricCfg};
-use hypipe::dist::part::DistPlan;
+use hypipe::dist::part::{DistPlan, IndexLayout};
 use hypipe::dist::transport::TransportKind;
 use hypipe::dist::{self, DistOpts};
 use hypipe::precond::Jacobi;
@@ -32,14 +32,17 @@ fn serial_opts() -> SolveOpts {
     }
 }
 
+const LAYOUTS: [IndexLayout; 2] = [IndexLayout::Full, IndexLayout::Compact];
+
 /// Distributed SPMV through the halo exchange, assembled in rank order.
-fn dist_spmv(a: &Csr, x: &[f64], ranks: usize) -> Vec<f64> {
-    let plan = DistPlan::build(a, ranks);
+fn dist_spmv(a: &Csr, x: &[f64], ranks: usize, layout: IndexLayout) -> Vec<f64> {
+    let plan = DistPlan::build_layout(a, ranks, layout);
     let parts = fabric::run(plan.ranks, &FabricCfg::default(), |ctx| {
         let blk = &plan.blocks[ctx.rank()];
-        let mut xbuf = vec![0.0; a.n];
-        xbuf[blk.r0..blk.r1].copy_from_slice(&x[blk.r0..blk.r1]);
-        blk.exchange(ctx, &mut xbuf);
+        let mut xbuf = blk.make_xbuf(ctx);
+        let mut hs = blk.halo_scratch();
+        blk.set_owned(&mut xbuf, &x[blk.r0..blk.r1]);
+        blk.exchange(ctx, &mut xbuf, &mut hs).unwrap();
         let mut y = vec![0.0; blk.nloc()];
         blk.spmv(&xbuf, &mut y);
         y
@@ -55,14 +58,17 @@ fn halo_exchange_spmv_is_bitwise_serial_spmv() {
         let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-10.0, 10.0)).collect();
         let y_ser = a.spmv(&x);
         for ranks in RANKS {
-            let y = dist_spmv(&a, &x, ranks);
-            assert_eq!(y.len(), y_ser.len());
-            for i in 0..n {
-                assert_eq!(
-                    y[i].to_bits(),
-                    y_ser[i].to_bits(),
-                    "row {i}, ranks {ranks}, n {n}"
-                );
+            for layout in LAYOUTS {
+                let y = dist_spmv(&a, &x, ranks, layout);
+                assert_eq!(y.len(), y_ser.len());
+                for i in 0..n {
+                    assert_eq!(
+                        y[i].to_bits(),
+                        y_ser[i].to_bits(),
+                        "row {i}, ranks {ranks}, n {n}, layout {}",
+                        layout.name()
+                    );
+                }
             }
         }
     });
@@ -76,7 +82,14 @@ fn halo_exchange_spmv_on_structured_grids() {
         let x: Vec<f64> = (0..a.n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
         let y_ser = a.spmv(&x);
         for ranks in RANKS {
-            assert_eq!(dist_spmv(a, &x, ranks), y_ser, "ranks={ranks}");
+            for layout in LAYOUTS {
+                assert_eq!(
+                    dist_spmv(a, &x, ranks, layout),
+                    y_ser,
+                    "ranks={ranks} layout={}",
+                    layout.name()
+                );
+            }
         }
     }
 }
@@ -331,6 +344,76 @@ fn per_rank_metrics_account_for_the_whole_system() {
     }
 }
 
+#[test]
+fn ghost_buffers_are_rank_local_not_global() {
+    // Regression test for the O(n)-per-rank memory blowup: the solvers used
+    // to carry a full-length `vec![0.0; n]` ghost buffer on every rank, under
+    // which `ghost_len == a.n` everywhere and this test fails. The compact
+    // layout (the default) must allocate exactly nloc + halo slots.
+    let a = gen::poisson2d_5pt(24, 24);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    for ranks in [2usize, 4, 7] {
+        let rep = dist::pipecg::solve(&a, &b, &pc, &DistOpts::with_ranks(ranks));
+        assert!(rep.result.converged, "ranks={ranks}");
+        let plan = DistPlan::build(&a, ranks);
+        for m in &rep.per_rank {
+            let blk = &plan.blocks[m.rank];
+            let tag = format!("ranks={ranks} rank={}", m.rank);
+            assert_eq!(m.ghost_len, blk.nloc() + blk.halo_count(), "{tag}");
+            assert!(m.ghost_len < a.n, "{tag}: ghost buffer is O(n = {})", a.n);
+        }
+    }
+}
+
+#[test]
+fn compact_and_full_layouts_are_bitwise_identical() {
+    // The compact renumbering rewrites column indices but never reorders a
+    // row's stored entries, so every method must produce identical bits
+    // under either layout, at every rank count, over every transport.
+    type Solver = fn(&Csr, &[f64], &Jacobi, &DistOpts) -> hypipe::metrics::DistReport;
+    let methods: [(&str, Solver, usize); 3] = [
+        ("dist-pcg", dist::pcg::solve, 1),
+        ("dist-pipecg", dist::pipecg::solve, 1),
+        ("dist-pipecg-l", dist::pipecg_l::solve, 2),
+    ];
+    let a = gen::poisson2d_5pt(16, 16);
+    let b = a.mul_ones();
+    let pc = Jacobi::from_matrix(&a);
+    for kind in transports() {
+        for ranks in RANKS {
+            for (name, solve, l) in methods {
+                let run = |layout| {
+                    solve(
+                        &a,
+                        &b,
+                        &pc,
+                        &DistOpts {
+                            base: deep_opts(l),
+                            ranks,
+                            transport: kind,
+                            layout,
+                            ..Default::default()
+                        },
+                    )
+                };
+                let full = run(IndexLayout::Full);
+                let compact = run(IndexLayout::Compact);
+                let tag = format!("{name} ranks={ranks} {kind:?}");
+                assert!(compact.result.converged, "{tag}");
+                assert_eq!(full.result.iterations, compact.result.iterations, "{tag}");
+                for (f, c) in full.result.x.iter().zip(&compact.result.x) {
+                    assert_eq!(f.to_bits(), c.to_bits(), "{tag}: solution differs");
+                }
+                assert_eq!(full.result.history.len(), compact.result.history.len());
+                for (f, c) in full.result.history.iter().zip(&compact.result.history) {
+                    assert_eq!(f.to_bits(), c.to_bits(), "{tag}: history differs");
+                }
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Transport-conformance suite: every TransportKind must honour the same
 // fabric contracts. Chan always runs; TCP runs when loopback networking is
@@ -367,8 +450,8 @@ fn conformance_tagged_p2p_delivers_out_of_order() {
     for kind in transports() {
         let outs = fabric::run(2, &fabric_cfg(kind), |ctx| {
             if ctx.rank() == 0 {
-                ctx.send(1, 7, vec![1.5, -2.25]);
-                ctx.send(1, 9, vec![std::f64::consts::PI]);
+                ctx.send(1, 7, &[1.5, -2.25]);
+                ctx.send(1, 9, &[std::f64::consts::PI]);
                 Vec::new()
             } else {
                 // Ask for the later tag first: the transport must stash the
